@@ -1,0 +1,63 @@
+"""Paper Fig. 4 + Table 4: TailBench (legacy) vs TailBench++ equivalence.
+
+For each of the 8 apps, run both harness modes over a QPS range with 13
+repetitions each (independent seeds per mode, like independent runs on a
+real testbed), then Welch's t-test on the mean/p95/p99 distributions.
+The null hypothesis (no behavioral difference) must be retained everywhere:
+|t| < 2 and p > 0.05 — the paper's validation methodology."""
+from __future__ import annotations
+
+import time
+
+from benchmarks.common import emit
+from repro.core.harness import run
+from repro.core.legacy import legacy_experiment, plusplus_equivalent
+from repro.core.stats import welch_ttest
+
+QPS_RANGE = {          # per-app load points (scaled to service time)
+    "masstree": (500, 2000), "silo": (400, 1500), "xapian": (100, 400),
+    "img-dnn": (100, 300), "specjbb": (150, 500), "shore": (40, 120),
+    "moses": (4, 10), "sphinx": (0.3, 0.8),
+}
+REPS = 13
+METRICS = ("mean", "p95", "p99")
+# slow apps need longer (virtual) windows to accumulate a sample
+DURATION = {"sphinx": 150.0, "moses": 40.0}
+
+
+def main() -> str:
+    t0 = time.time()
+    rows = []
+    all_retained = True
+    for app, qs in QPS_RANGE.items():
+        legacy_vals = {m: [] for m in METRICS}
+        pp_vals = {m: [] for m in METRICS}
+        for qps in qs:
+            for rep in range(REPS):
+                seed = 1000 * rep + hash(app) % 997
+                dur = DURATION.get(app, 12.0)
+                leg = legacy_experiment(3, qps / 3,
+                                        requests_per_client=int(qps * dur / 3),
+                                        app=app, duration=dur, seed=seed)
+                pp = plusplus_equivalent(legacy_experiment(
+                    3, qps / 3, requests_per_client=int(qps * dur / 3),
+                    app=app, duration=dur, seed=seed + 500_000))
+                s_l = run(leg).recorder.overall()
+                s_p = run(pp).recorder.overall()
+                for m in METRICS:
+                    legacy_vals[m].append(getattr(s_l, m))
+                    pp_vals[m].append(getattr(s_p, m))
+        for m in METRICS:
+            w = welch_ttest(legacy_vals[m], pp_vals[m])
+            retained = abs(w.t_stat) < 2 and w.p_value > 0.05
+            all_retained &= retained
+            rows.append({"app": app, "metric": m,
+                         "t_stat": round(w.t_stat, 3),
+                         "p_value": round(w.p_value, 3),
+                         "H0_retained": retained})
+    emit("fig4_table4_equivalence", rows, t0, f"H0_retained_all={all_retained}")
+    return f"H0_retained_all={all_retained}"
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,61 @@
+"""Paper Fig. 5: single- vs multi-server characterization, all 8 apps.
+
+3 clients -> 1 vs 2 servers via round-robin LVS; p95/p99 with 95% CIs over
+13 repetitions.  Expected: multi-server lowers tail latency for most apps;
+apps whose bottleneck is not the server queue benefit least."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import emit
+from repro.core.client import ClientConfig, ConstantQPS
+from repro.core.harness import Experiment, ServerSpec, run
+from repro.core.stats import confidence95
+
+# silo/specjbb run far from server saturation (the paper observes they do
+# not benefit from a second server — their bottleneck is not the queue).
+LOAD = {"masstree": 1500, "silo": 300, "xapian": 450, "img-dnn": 350,
+        "specjbb": 150, "shore": 100, "moses": 9, "sphinx": 0.75}
+DURATION = {"sphinx": 120.0, "moses": 40.0}
+# multi-threaded servers: one instance already absorbs the offered load
+WORKERS = {"silo": 8, "specjbb": 8}
+
+
+def main() -> str:
+    t0 = time.time()
+    rows = []
+    improved = 0
+    for app, qps in LOAD.items():
+        res = {}
+        for n_srv in (1, 2):
+            clients = [ClientConfig(i, ConstantQPS(qps / 3)) for i in range(3)]
+            w = WORKERS.get(app, 1)
+            exp = Experiment(clients=clients,
+                             servers=tuple(ServerSpec(i, workers=w)
+                                           for i in range(n_srv)),
+                             app=app, duration=DURATION.get(app, 12.0),
+                             policy="round_robin")
+            from dataclasses import replace as _rp
+            vals = {"p95": [], "p99": []}
+            for rep in range(13):
+                sim = run(_rp(exp, seed=exp.seed + 1000 * (rep + 1)))
+                s_all = sim.recorder.overall()
+                vals["p95"].append(s_all.p95)
+                vals["p99"].append(s_all.p99)
+            for pct in ("p95", "p99"):
+                mean, ci = confidence95(vals[pct])
+                res[(n_srv, pct)] = (mean, ci)
+                rows.append({"app": app, "servers": n_srv, "pct": pct,
+                             "latency_s": f"{mean:.6f}", "ci95": f"{ci:.6f}"})
+        # significant improvement = p99 gap larger than both CIs
+        gap = res[(1, "p99")][0] - res[(2, "p99")][0]
+        if gap > res[(1, "p99")][1] + res[(2, "p99")][1]:
+            improved += 1
+    emit("fig5_multiserver", rows, t0, f"apps_significantly_improved={improved}/8")
+    return f"apps_significantly_improved={improved}/8"
+
+
+if __name__ == "__main__":
+    main()

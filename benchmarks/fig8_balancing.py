@@ -1,0 +1,42 @@
+"""Paper Fig. 8: round-robin vs load-aware balancing, 2 servers, 3 clients
+(500/200/200 QPS).  Load-aware isolates the heavy client; round-robin can
+co-locate it with another client, hurting its p99."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import emit
+from repro.core.client import ClientConfig, ConstantQPS
+from repro.core.harness import Experiment, ServerSpec, run
+
+
+def main() -> str:
+    t0 = time.time()
+    rows = []
+    worst = {}
+    for policy in ("round_robin", "load_aware", "jsq", "p2c"):
+        per_client = {1: [], 2: [], 3: []}
+        for seed in range(13):
+            clients = [ClientConfig(1, ConstantQPS(500), seed=seed),
+                       ClientConfig(2, ConstantQPS(200), seed=seed + 99),
+                       ClientConfig(3, ConstantQPS(200), seed=seed + 198)]
+            exp = Experiment(clients=clients,
+                             servers=(ServerSpec(0), ServerSpec(1)),
+                             app="xapian", duration=15.0, policy=policy,
+                             seed=seed)
+            sim = run(exp)
+            for c in (1, 2, 3):
+                per_client[c].append(sim.recorder.client(c).p99)
+        for c in (1, 2, 3):
+            rows.append({"policy": policy, "client": c,
+                         "p99_ms": f"{np.mean(per_client[c])*1e3:.3f}"})
+        worst[policy] = max(np.mean(per_client[c]) for c in (1, 2, 3))
+    gain = worst["round_robin"] / worst["load_aware"]
+    emit("fig8_balancing", rows, t0, f"rr_vs_load_aware_worst_p99={gain:.2f}x")
+    return f"gain={gain:.2f}x"
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,35 @@
+"""Benchmark driver: one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV (one line per benchmark); full
+result tables land in artifacts/bench/*.csv.
+"""
+from __future__ import annotations
+
+import sys
+import traceback
+
+
+def main() -> None:
+    from benchmarks import (engine_serving, fig1_qps_latency, fig4_equivalence,
+                            fig5_multiserver, fig6_interleaved,
+                            fig7_dynamic_qps, fig8_balancing, hedging,
+                            roofline_table)
+    benches = [fig1_qps_latency, fig4_equivalence, fig5_multiserver,
+               fig6_interleaved, fig7_dynamic_qps, fig8_balancing,
+               hedging, roofline_table, engine_serving]
+    print("name,us_per_call,derived")
+    failures = 0
+    for b in benches:
+        try:
+            b.main()
+        except Exception:
+            failures += 1
+            name = b.__name__.split(".")[-1]
+            print(f"{name},-1,FAILED")
+            traceback.print_exc()
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,133 @@
+"""Fault-tolerant checkpointing: atomic, async, resumable.
+
+Layout:   <dir>/step_<N>/arrays.npz + manifest.json     (tmp dir + rename)
+Restore picks the highest complete step; partially written checkpoints
+(no manifest) are ignored — a crash mid-write can never corrupt restore.
+``AsyncCheckpointer`` snapshots to host memory synchronously (cheap) and
+writes on a background thread so the train loop keeps stepping.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+from typing import Any, Optional
+
+import jax
+import ml_dtypes
+import numpy as np
+
+_BF16 = np.dtype(ml_dtypes.bfloat16)
+
+
+def _flatten(tree) -> dict[str, np.ndarray]:
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out = {}
+    for path, leaf in flat:
+        key = "/".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in path)
+        out[key] = np.asarray(leaf)
+    return out
+
+
+def save(tree, directory: str, step: int, extra: Optional[dict] = None) -> str:
+    os.makedirs(directory, exist_ok=True)
+    final = os.path.join(directory, f"step_{step:08d}")
+    tmp = final + ".tmp"
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp)
+    arrays = _flatten(tree)
+    dtypes = {}
+    stored = {}
+    for k, v in arrays.items():
+        if v.dtype == _BF16:        # npz has no bf16: store the raw bits
+            dtypes[k] = "bfloat16"
+            v = v.view(np.uint16)
+        stored[k] = v
+    np.savez(os.path.join(tmp, "arrays.npz"), **stored)
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump({"step": step, "extra": extra or {},
+                   "keys": sorted(arrays), "dtypes": dtypes}, f)
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.replace(tmp, final)
+    return final
+
+
+def steps(directory: str) -> list[int]:
+    if not os.path.isdir(directory):
+        return []
+    out = []
+    for name in os.listdir(directory):
+        if name.startswith("step_") and not name.endswith(".tmp"):
+            if os.path.exists(os.path.join(directory, name, "manifest.json")):
+                out.append(int(name.split("_")[1]))
+    return sorted(out)
+
+
+def latest_step(directory: str) -> Optional[int]:
+    s = steps(directory)
+    return s[-1] if s else None
+
+
+def restore(tree_like, directory: str, step: Optional[int] = None):
+    """Restore into the structure of ``tree_like`` -> (tree, step, extra)."""
+    if step is None:
+        step = latest_step(directory)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoint in {directory}")
+    path = os.path.join(directory, f"step_{step:08d}")
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    data = np.load(os.path.join(path, "arrays.npz"))
+    dtypes = manifest.get("dtypes", {})
+    flat = jax.tree_util.tree_flatten_with_path(tree_like)[0]
+    treedef = jax.tree_util.tree_structure(tree_like)
+    leaves = []
+    for p, leaf in flat:
+        key = "/".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in p)
+        arr = data[key]
+        if dtypes.get(key) == "bfloat16":
+            arr = arr.view(_BF16)
+        want = np.dtype(leaf.dtype)
+        leaves.append(jax.numpy.asarray(arr).astype(want))
+    return jax.tree_util.tree_unflatten(treedef, leaves), manifest["step"], manifest["extra"]
+
+
+class AsyncCheckpointer:
+    """Background writer; ``wait()`` before exit or next save."""
+
+    def __init__(self, directory: str, keep: int = 3):
+        self.directory = directory
+        self.keep = keep
+        self._thread: Optional[threading.Thread] = None
+        self.last_error: Optional[BaseException] = None
+
+    def save(self, tree, step: int, extra: Optional[dict] = None):
+        self.wait()
+        host = jax.tree_util.tree_map(np.asarray, jax.device_get(tree))
+
+        def _write():
+            try:
+                save(host, self.directory, step, extra)
+                self._gc()
+            except BaseException as e:  # surfaced on next wait()
+                self.last_error = e
+
+        self._thread = threading.Thread(target=_write, daemon=True)
+        self._thread.start()
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        if self.last_error is not None:
+            err, self.last_error = self.last_error, None
+            raise err
+
+    def _gc(self):
+        all_steps = steps(self.directory)
+        for s in all_steps[: -self.keep]:
+            shutil.rmtree(os.path.join(self.directory, f"step_{s:08d}"),
+                          ignore_errors=True)

@@ -1,0 +1,99 @@
+"""Load balancing policies (the paper's LVS director, generalized).
+
+The paper balances at *connection* granularity (LVS assigns each client to
+a server): ``assign(client, servers)``.  Round-robin and the load-aware
+policy of Fig. 8 are connection-level.  Beyond the paper we add
+request-level policies (``route``): join-shortest-queue and
+power-of-two-choices, plus hedging in the simulator.
+"""
+from __future__ import annotations
+
+import itertools
+from typing import Optional
+
+import numpy as np
+
+
+class Balancer:
+    """Default: honor the connection assignment for every request."""
+
+    def assign(self, client, servers) -> Optional[object]:
+        raise NotImplementedError
+
+    def route(self, req, servers, assigned):
+        return assigned if assigned is not None else (servers[0] if servers else None)
+
+
+class RoundRobin(Balancer):
+    """LVS default: clients assigned to servers in arrival order."""
+
+    def __init__(self):
+        self._n = itertools.count()
+
+    def assign(self, client, servers):
+        if not servers:
+            return None
+        return servers[next(self._n) % len(servers)]
+
+
+class LoadAware(Balancer):
+    """Paper Fig. 8: balance the *offered QPS* across servers — assign each
+    arriving client to the server with the least total subscribed rate."""
+
+    def __init__(self):
+        self.subscribed: dict[int, float] = {}
+
+    def assign(self, client, servers):
+        if not servers:
+            return None
+        qps = client.cfg.schedule.rate(client.cfg.start_time)
+        best = min(servers, key=lambda s: self.subscribed.get(s.server_id, 0.0))
+        self.subscribed[best.server_id] = self.subscribed.get(best.server_id, 0.0) + qps
+        return best
+
+
+class LeastConnections(Balancer):
+    def assign(self, client, servers):
+        if not servers:
+            return None
+        return min(servers, key=lambda s: len(s.connected))
+
+
+class JoinShortestQueue(Balancer):
+    """Request-level: ignore the connection, pick the least-loaded server."""
+
+    def assign(self, client, servers):
+        return servers[0] if servers else None
+
+    def route(self, req, servers, assigned):
+        if not servers:
+            return None
+        return min(servers, key=lambda s: s.load())
+
+
+class PowerOfTwo(Balancer):
+    """Request-level: sample two servers, take the less loaded (Mitzenmacher)."""
+
+    def __init__(self, seed: int = 0):
+        self.rng = np.random.default_rng(seed)
+
+    def assign(self, client, servers):
+        return servers[0] if servers else None
+
+    def route(self, req, servers, assigned):
+        if not servers:
+            return None
+        if len(servers) == 1:
+            return servers[0]
+        i, j = self.rng.choice(len(servers), size=2, replace=False)
+        a, b = servers[int(i)], servers[int(j)]
+        return a if a.load() <= b.load() else b
+
+
+POLICIES = {
+    "round_robin": RoundRobin,
+    "load_aware": LoadAware,
+    "least_connections": LeastConnections,
+    "jsq": JoinShortestQueue,
+    "p2c": PowerOfTwo,
+}

@@ -1,0 +1,135 @@
+"""Workload generators — the TailBench++ client module.
+
+Feature 3 (independent client behavior): every client owns its start time,
+request budget, and service-demand distribution.
+Feature 4 (variable client load): ``QPSSchedule`` changes the arrival rate
+during execution (piecewise-constant = the paper's Table 5; diurnal and
+trace schedules model the cited real-world patterns).
+
+Arrivals are open-loop Poisson (exponential inter-arrival at the current
+rate) — TailBench's generator — with Zipf-like service demands preserved
+(the paper validates that its changes keep this distribution intact).
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Optional, Sequence
+
+import numpy as np
+
+
+# ---------------------------------------------------------------------------
+# QPS schedules (Feature 4)
+# ---------------------------------------------------------------------------
+class QPSSchedule:
+    def rate(self, t: float) -> float:
+        raise NotImplementedError
+
+
+@dataclass
+class ConstantQPS(QPSSchedule):
+    qps: float
+
+    def rate(self, t: float) -> float:
+        return self.qps
+
+
+@dataclass
+class PiecewiseQPS(QPSSchedule):
+    """[(t_start, qps), ...] — e.g. the paper's Table 5:
+    [(0,100),(10,300),(20,500),(30,600),(40,800),(50,100)]."""
+    points: Sequence[tuple]
+
+    def rate(self, t: float) -> float:
+        r = 0.0
+        for t0, q in self.points:
+            if t >= t0:
+                r = q
+        return r
+
+
+@dataclass
+class DiurnalQPS(QPSSchedule):
+    """Sinusoidal day/night load (Atikoglu et al. diurnal pattern)."""
+    base: float
+    amplitude: float
+    period: float = 60.0
+    phase: float = 0.0
+
+    def rate(self, t: float) -> float:
+        return max(0.0, self.base + self.amplitude
+                   * math.sin(2 * math.pi * (t + self.phase) / self.period))
+
+
+@dataclass
+class TraceQPS(QPSSchedule):
+    """Replay a recorded per-second QPS trace."""
+    trace: Sequence[float]
+    dt: float = 1.0
+
+    def rate(self, t: float) -> float:
+        i = min(int(t / self.dt), len(self.trace) - 1)
+        return float(self.trace[max(i, 0)])
+
+
+# ---------------------------------------------------------------------------
+# Client configuration (Features 3 + 4)
+# ---------------------------------------------------------------------------
+@dataclass
+class ClientConfig:
+    client_id: int
+    schedule: QPSSchedule
+    start_time: float = 0.0
+    total_requests: Optional[int] = None   # None = run until end_time
+    end_time: Optional[float] = None
+    seed: int = 0
+    # service-demand distribution (overridden by the app profile if None)
+    profile: Optional[object] = None
+
+
+class ClientGenerator:
+    """Open-loop arrival process for one client."""
+
+    def __init__(self, cfg: ClientConfig, profile, rng_stream: int = 0):
+        self.cfg = cfg
+        self.profile = cfg.profile or profile
+        self.rng = np.random.default_rng((cfg.seed, cfg.client_id, rng_stream))
+        self.t = cfg.start_time
+        self.sent = 0
+
+    def exhausted(self, t: Optional[float] = None) -> bool:
+        if self.cfg.total_requests is not None and self.sent >= self.cfg.total_requests:
+            return True
+        if self.cfg.end_time is not None and (t or self.t) >= self.cfg.end_time:
+            return True
+        return False
+
+    MAX_STEP = 0.25  # re-sample the rate at least this often (seconds)
+
+    def next_arrival(self) -> Optional[tuple]:
+        """-> (time, service_demand) of the next request, or None if done.
+
+        Exponential memorylessness: if the drawn gap crosses a re-sampling
+        boundary we advance to the boundary and redraw at the new rate —
+        statistically exact for piecewise-constant schedules.
+        """
+        while True:
+            if self.exhausted(self.t):
+                return None
+            rate = self.cfg.schedule.rate(self.t)
+            if rate <= 0:
+                self.t += self.MAX_STEP
+                continue
+            gap = self.rng.exponential(1.0 / rate)
+            # never step across a grid boundary: memorylessness makes
+            # redrawing at the boundary exact for piecewise-constant rates
+            next_grid = (math.floor(self.t / self.MAX_STEP) + 1) * self.MAX_STEP
+            if self.t + gap >= next_grid:
+                self.t = next_grid
+                continue
+            self.t += gap
+            if self.exhausted(self.t):
+                return None
+            self.sent += 1
+            return self.t, self.profile.sample(self.rng)

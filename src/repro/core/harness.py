@@ -1,0 +1,176 @@
+"""Experiment orchestration — the TailBench++ harness entry point.
+
+``Experiment`` describes clients, servers, balancer, app profile and mode
+(tailbench++ vs legacy baseline); ``run()`` executes one deterministic
+simulation; ``run_repeated()`` gives the paper's 13-repetition confidence
+intervals.  ``run_engine_experiment()`` drives a *real* JAX inference
+engine in wall-clock time with the same client machinery (the end-to-end
+validation path).
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field, replace
+from typing import Callable, Optional, Sequence
+
+import numpy as np
+
+from repro.core.balancer import POLICIES, Balancer
+from repro.core.client import ClientConfig, ClientGenerator, ConstantQPS
+from repro.core.profiles import tailbench_profile
+from repro.core.simulator import SimConfig, SimServer, Simulator
+from repro.core.stats import LatencyRecorder, Summary, confidence95
+
+
+@dataclass
+class ServerSpec:
+    server_id: int
+    workers: int = 1
+    speed: float = 1.0
+    service_noise: float = 0.0     # log-sigma of per-execution server noise
+    join_at: float = 0.0
+    drain_at: Optional[float] = None
+
+
+@dataclass
+class Experiment:
+    clients: Sequence[ClientConfig]
+    servers: Sequence[ServerSpec] = (ServerSpec(0),)
+    app: str = "xapian"
+    policy: str = "round_robin"
+    duration: float = 60.0
+    interval: float = 1.0
+    seed: int = 0
+    legacy_mode: bool = False
+    legacy_requests_per_client: Optional[int] = None
+    legacy_expected_clients: Optional[int] = None   # default: len(clients)
+    hedge_delay: Optional[float] = None
+    profile: Optional[object] = None          # overrides `app`
+
+    def resolved_profile(self):
+        return self.profile or tailbench_profile(self.app)
+
+
+def build_simulator(exp: Experiment) -> Simulator:
+    servers = [SimServer(s.server_id, s.workers, s.speed, s.service_noise)
+               for s in exp.servers if s.join_at == 0.0]
+    balancer = POLICIES[exp.policy]() if isinstance(exp.policy, str) else exp.policy
+    n_expected = exp.legacy_expected_clients
+    if n_expected is None:
+        n_expected = len(exp.clients)
+    cfg = SimConfig(duration=exp.duration, interval=exp.interval, seed=exp.seed,
+                    legacy_mode=exp.legacy_mode,
+                    legacy_expected_clients=n_expected if exp.legacy_mode else 0,
+                    legacy_requests_per_client=exp.legacy_requests_per_client,
+                    hedge_delay=exp.hedge_delay)
+    sim = Simulator(cfg, servers, balancer, profile=exp.resolved_profile())
+    for c in exp.clients:
+        c2 = replace(c, seed=c.seed if c.seed else exp.seed)
+        sim.add_client(c2)
+    for s in exp.servers:
+        if s.join_at > 0.0:
+            sim.add_server(SimServer(s.server_id, s.workers, s.speed,
+                                     s.service_noise), s.join_at)
+        if s.drain_at is not None:
+            sim.drain_server(s.server_id, s.drain_at)
+    return sim
+
+
+def run(exp: Experiment) -> Simulator:
+    sim = build_simulator(exp)
+    sim.run()
+    return sim
+
+
+def run_repeated(exp: Experiment, reps: int = 13,
+                 metric: Callable[[LatencyRecorder], float] = lambda r: r.overall().p99):
+    """Paper methodology: 13 seeded repetitions -> (mean, 95% CI half-width)."""
+    vals = []
+    for rep in range(reps):
+        sim = run(replace(exp, seed=exp.seed + 1000 * (rep + 1)))
+        vals.append(metric(sim.recorder))
+    return confidence95(vals), vals
+
+
+# ---------------------------------------------------------------------------
+# Real-engine mode: same clients, wall-clock time, actual JAX inference.
+# ---------------------------------------------------------------------------
+def run_engine_experiment(engines: list, clients: Sequence[ClientConfig], *,
+                          policy: str = "round_robin", duration: float = 10.0,
+                          prompt_len: int = 16, max_new_tokens: int = 4,
+                          vocab: int = 256, seed: int = 0,
+                          time_scale: float = 1.0) -> LatencyRecorder:
+    """Drive real InferenceEngine(s) with the harness's open-loop clients.
+
+    Arrival times are pre-generated (virtual seconds x time_scale); the loop
+    admits due requests and steps engines round-robin.  Latency = wall time
+    from (scaled) arrival to completion.
+    """
+    from repro.core.profiles import FixedProfile
+    from repro.core.request import Request as Rec
+
+    rng = np.random.default_rng(seed)
+    # pre-generate every client's arrival timeline
+    arrivals = []      # (t, client_id, req_id)
+    rid = 0
+    for c in clients:
+        gen = ClientGenerator(c, FixedProfile("tok", 0.0))
+        while True:
+            nxt = gen.next_arrival()
+            if nxt is None or nxt[0] > duration:
+                break
+            arrivals.append((nxt[0] * time_scale, c.client_id, rid))
+            rid += 1
+    arrivals.sort()
+    balancer = POLICIES[policy]()
+
+    class _EngineShim:
+        def __init__(self, i, eng):
+            self.server_id, self.eng = i, eng
+            self.connected: set = set()
+            self.accepting = True
+
+        def load(self):
+            return self.eng.pending() + self.eng.n_active()
+
+        def connect(self, cid):
+            self.connected.add(cid)
+            return True
+
+    shims = [_EngineShim(i, e) for i, e in enumerate(engines)]
+    assignment: dict[int, _EngineShim] = {}
+    recorder = LatencyRecorder()
+    meta: dict[int, tuple] = {}
+    t0 = time.monotonic()
+    idx = 0
+    pending_total = len(arrivals)
+    done_total = 0
+    while done_total < pending_total:
+        now = time.monotonic() - t0
+        while idx < len(arrivals) and arrivals[idx][0] <= now:
+            t_arr, cid, req_id = arrivals[idx]
+            idx += 1
+            if cid not in assignment:
+                class _C:  # minimal client view for the balancer
+                    cfg = [c for c in clients if c.client_id == cid][0]
+                assignment[cid] = balancer.assign(_C(), shims) or shims[0]
+            shim = balancer.route(None, shims, assignment[cid])
+            prompt = rng.integers(0, vocab, size=prompt_len)
+            meta[req_id] = (cid, t_arr)
+            shim.eng.submit(prompt, max_new_tokens, req_id)
+        stepped = False
+        for shim in shims:
+            if not shim.eng.idle():
+                for comp in shim.eng.step():
+                    cid, t_arr = meta[comp.req_id]
+                    wall = time.monotonic() - t0
+                    rec = Rec(comp.req_id, cid, t_arr, 0.0)
+                    rec.enqueued = t_arr
+                    rec.started = wall - comp.latency
+                    rec.completed = wall
+                    recorder.record(rec)
+                    done_total += 1
+                stepped = True
+        if not stepped and idx < len(arrivals):
+            time.sleep(min(0.001, max(0.0, arrivals[idx][0] - (time.monotonic() - t0))))
+    return recorder

@@ -1,0 +1,98 @@
+"""Service-time profiles.
+
+Two kinds of "application" can sit behind a server:
+
+1. The paper's eight TailBench apps, reproduced as calibrated service-time
+   distributions.  TailBench spans "very short - large (10us - 10s)"
+   (Table 1); per-app medians follow the paper's Fig. 4 latency scales.
+   Request work is log-normal around the median (the Zipf-like heavy tail
+   the harness is required to preserve) with a deterministic seed stream.
+
+2. The 10 assigned architectures: service time per request derived from the
+   dry-run roofline model — max(compute, memory) term of one batched decode
+   step at the serving batch, divided across the batch, plus a prefill term
+   proportional to prompt length.  See repro/launch/roofline.py.
+
+Both expose ``sample(rng) -> seconds of server work``.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+
+import numpy as np
+
+
+@dataclass(frozen=True)
+class LogNormalProfile:
+    """Median service time + heavy right tail (sigma in log space)."""
+    name: str
+    median: float                  # seconds
+    sigma: float = 0.45
+    max_factor: float = 30.0       # truncate the tail (bounded work)
+
+    def sample(self, rng: np.random.Generator) -> float:
+        x = self.median * math.exp(self.sigma * rng.standard_normal())
+        return float(min(x, self.median * self.max_factor))
+
+    @property
+    def mean(self) -> float:
+        return self.median * math.exp(self.sigma ** 2 / 2)
+
+
+@dataclass(frozen=True)
+class FixedProfile:
+    name: str
+    value: float
+
+    def sample(self, rng) -> float:
+        return self.value
+
+    @property
+    def mean(self) -> float:
+        return self.value
+
+
+# ---------------------------------------------------------------------------
+# The eight TailBench applications (service-time scales from the paper:
+# Table 1 range 10us-10s; relative ordering from Fig. 4's per-app axes).
+# ---------------------------------------------------------------------------
+TAILBENCH_APPS: dict[str, LogNormalProfile] = {
+    # key-value store: tens of microseconds
+    "masstree": LogNormalProfile("masstree", 120e-6, 0.35),
+    # in-memory OLTP: sub-millisecond
+    "silo": LogNormalProfile("silo", 300e-6, 0.40),
+    # search over a 15GB index: low milliseconds
+    "xapian": LogNormalProfile("xapian", 1.2e-3, 0.50),
+    # handwriting recognition: milliseconds
+    "img-dnn": LogNormalProfile("img-dnn", 1.5e-3, 0.35),
+    # java business middleware: milliseconds
+    "specjbb": LogNormalProfile("specjbb", 1.0e-3, 0.45),
+    # disk-based OLTP (SSD): several ms, high variance
+    "shore": LogNormalProfile("shore", 4.0e-3, 0.70),
+    # statistical MT: tens-hundreds of ms
+    "moses": LogNormalProfile("moses", 60e-3, 0.55),
+    # speech recognition: seconds
+    "sphinx": LogNormalProfile("sphinx", 1.0, 0.50),
+}
+
+
+def tailbench_profile(app: str) -> LogNormalProfile:
+    return TAILBENCH_APPS[app]
+
+
+def arch_profile(arch: str, *, tokens_out: int = 64,
+                 step_time: float | None = None,
+                 batch: int = 8) -> LogNormalProfile:
+    """Serving profile for an assigned architecture.
+
+    step_time = per-decode-step seconds for the whole batch (roofline-derived
+    via launch.roofline; a fallback table is used if not supplied).  A
+    request's demand ~ tokens_out × step_time / batch with log-normal spread
+    over output lengths.
+    """
+    if step_time is None:
+        from repro.launch.roofline import decode_step_time_fallback
+        step_time = decode_step_time_fallback(arch)
+    median = tokens_out * step_time / batch
+    return LogNormalProfile(f"arch:{arch}", median, 0.6)

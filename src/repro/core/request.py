@@ -1,0 +1,31 @@
+"""Request/response records shared by the simulator and real-engine paths."""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Optional
+
+
+@dataclass
+class Request:
+    req_id: int
+    client_id: int
+    created: float                  # generation time at the client
+    service_demand: float           # seconds of server work (profile sample)
+    server_id: Optional[int] = None
+    enqueued: Optional[float] = None
+    started: Optional[float] = None
+    completed: Optional[float] = None
+    hedged: bool = False
+
+    @property
+    def queue_time(self) -> float:
+        return (self.started or 0.0) - (self.enqueued or self.created)
+
+    @property
+    def service_time(self) -> float:
+        return (self.completed or 0.0) - (self.started or 0.0)
+
+    @property
+    def sojourn(self) -> float:
+        """End-to-end latency (the paper's reported metric)."""
+        return (self.completed or 0.0) - self.created

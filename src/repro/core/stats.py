@@ -1,0 +1,167 @@
+"""Latency statistics: percentile recorder + Welch's t-test (no scipy).
+
+The recorder groups completed-request latencies per (client, interval) and
+produces the paper's metrics: mean / p95 / p99 per interval and per client,
+with 95% confidence intervals across repetitions (Figs. 5-7).
+Welch's t-test (Table 4) validates that harness changes don't perturb
+application behavior; the t CDF uses the regularized incomplete beta
+function (continued fraction, Numerical-Recipes style).
+"""
+from __future__ import annotations
+
+import math
+from collections import defaultdict
+from dataclasses import dataclass, field
+from typing import Iterable, Optional
+
+import numpy as np
+
+
+# ---------------------------------------------------------------------------
+# Welch's t-test
+# ---------------------------------------------------------------------------
+def _betacf(a: float, b: float, x: float) -> float:
+    MAXIT, EPS, FPMIN = 200, 3e-9, 1e-30
+    qab, qap, qam = a + b, a + 1.0, a - 1.0
+    c, d = 1.0, 1.0 - qab * x / qap
+    if abs(d) < FPMIN:
+        d = FPMIN
+    d = 1.0 / d
+    h = d
+    for m in range(1, MAXIT + 1):
+        m2 = 2 * m
+        aa = m * (b - m) * x / ((qam + m2) * (a + m2))
+        d = 1.0 + aa * d
+        if abs(d) < FPMIN:
+            d = FPMIN
+        c = 1.0 + aa / c
+        if abs(c) < FPMIN:
+            c = FPMIN
+        d = 1.0 / d
+        h *= d * c
+        aa = -(a + m) * (qab + m) * x / ((a + m2) * (qap + m2))
+        d = 1.0 + aa * d
+        if abs(d) < FPMIN:
+            d = FPMIN
+        c = 1.0 + aa / c
+        if abs(c) < FPMIN:
+            c = FPMIN
+        d = 1.0 / d
+        delta = d * c
+        h *= delta
+        if abs(delta - 1.0) < EPS:
+            break
+    return h
+
+
+def _betai(a: float, b: float, x: float) -> float:
+    if x <= 0.0:
+        return 0.0
+    if x >= 1.0:
+        return 1.0
+    ln_bt = (math.lgamma(a + b) - math.lgamma(a) - math.lgamma(b)
+             + a * math.log(x) + b * math.log(1.0 - x))
+    bt = math.exp(ln_bt)
+    if x < (a + 1.0) / (a + b + 2.0):
+        return bt * _betacf(a, b, x) / a
+    return 1.0 - bt * _betacf(b, a, 1.0 - x) / b
+
+
+def t_sf(t: float, df: float) -> float:
+    """Two-sided survival P(|T| >= t) for Student's t."""
+    x = df / (df + t * t)
+    return _betai(df / 2.0, 0.5, x)
+
+
+@dataclass
+class WelchResult:
+    t_stat: float
+    p_value: float
+    df: float
+
+    @property
+    def significant(self) -> bool:
+        return self.p_value < 0.05
+
+
+def welch_ttest(a: Iterable[float], b: Iterable[float]) -> WelchResult:
+    a, b = np.asarray(list(a), float), np.asarray(list(b), float)
+    na, nb = len(a), len(b)
+    va, vb = a.var(ddof=1) / na, b.var(ddof=1) / nb
+    denom = math.sqrt(max(va + vb, 1e-300))
+    t = (a.mean() - b.mean()) / denom
+    df = (va + vb) ** 2 / max(va ** 2 / (na - 1) + vb ** 2 / (nb - 1), 1e-300)
+    return WelchResult(t, t_sf(abs(t), df), df)
+
+
+# ---------------------------------------------------------------------------
+# Latency recorder
+# ---------------------------------------------------------------------------
+def pctl(xs, q: float) -> float:
+    if len(xs) == 0:
+        return float("nan")
+    return float(np.percentile(np.asarray(xs, float), q))
+
+
+@dataclass
+class Summary:
+    n: int
+    mean: float
+    p50: float
+    p95: float
+    p99: float
+
+    @classmethod
+    def of(cls, xs) -> "Summary":
+        xs = np.asarray(list(xs), float)
+        if len(xs) == 0:
+            return cls(0, *(float("nan"),) * 4)
+        return cls(len(xs), float(xs.mean()), *(float(np.percentile(xs, q))
+                                                for q in (50, 95, 99)))
+
+
+class LatencyRecorder:
+    """Streams completed requests into per-client / per-interval buckets."""
+
+    def __init__(self, interval: float = 1.0):
+        self.interval = interval
+        self.by_client: dict[int, list] = defaultdict(list)
+        self.by_cell: dict[tuple, list] = defaultdict(list)   # (client, ivl)
+        self.all: list[float] = []
+        self.queue_times: list[float] = []
+        self.service_times: list[float] = []
+
+    def record(self, req) -> None:
+        lat = req.sojourn
+        ivl = int(req.completed / self.interval)
+        self.by_client[req.client_id].append(lat)
+        self.by_cell[(req.client_id, ivl)].append(lat)
+        self.all.append(lat)
+        self.queue_times.append(req.queue_time)
+        self.service_times.append(req.service_time)
+
+    # ------- summaries ------------------------------------------------------
+    def overall(self) -> Summary:
+        return Summary.of(self.all)
+
+    def client(self, cid: int) -> Summary:
+        return Summary.of(self.by_client.get(cid, []))
+
+    def intervals(self, cid: Optional[int] = None) -> dict[int, Summary]:
+        out: dict[int, list] = defaultdict(list)
+        for (c, ivl), xs in self.by_cell.items():
+            if cid is None or c == cid:
+                out[ivl].extend(xs)
+        return {ivl: Summary.of(xs) for ivl, xs in sorted(out.items())}
+
+    def clients(self) -> list[int]:
+        return sorted(self.by_client)
+
+
+def confidence95(xs) -> tuple[float, float]:
+    """Mean and 95% CI half-width across repetitions (paper's error bars)."""
+    xs = np.asarray(list(xs), float)
+    if len(xs) < 2:
+        return float(xs.mean()) if len(xs) else float("nan"), 0.0
+    half = 1.96 * xs.std(ddof=1) / math.sqrt(len(xs))
+    return float(xs.mean()), float(half)

@@ -1,0 +1,154 @@
+"""Logical-axis sharding rules (MaxText-style) -> NamedShardings.
+
+Logical names are assigned greedily onto mesh axes with divisibility checks:
+a rule maps a logical axis to a tuple of mesh axes; axes already consumed by
+an earlier dim of the same tensor are skipped, and a prefix whose product
+divides the dim size is used (else the dim stays replicated).  This resolves
+e.g. GQA kv_heads=8 on a 16-way "model" axis (-> replicated / seq-sharded
+instead) and batch=1 long-context decode (-> KV-sequence takes data+model).
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Optional, Sequence
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# ---------------------------------------------------------------------------
+# Rules.  Params and activations use distinct vocabularies so that "embed"
+# (FSDP-sharded on params) never collides with activation batch sharding.
+# ---------------------------------------------------------------------------
+PARAM_RULES: dict[str, tuple] = {
+    "layer": (),
+    "vocab": ("model",),
+    "embed": ("data",),          # FSDP / ZeRO-3: gathered just-in-time
+    "heads": ("model",),
+    "kv_heads": ("model",),
+    "head_dim": (),
+    "mlp": ("model",),
+    "expert": ("model",),
+    "expert_embed": ("data",),   # expert-weight FSDP dim
+    "expert_mlp": ("model",),    # per-expert d_ff TP (mixtral-style)
+    "conv": (),
+    "mamba_inner": ("model",),
+    "mamba_heads": ("model",),
+    "mamba_state": (),
+}
+
+ACT_RULES: dict[str, tuple] = {
+    "batch": ("pod", "data"),
+    "seq": (),
+    "res_seq": (),                 # inter-block residual (SP shards this)
+    "embed": (),
+    "heads": ("model",),
+    "kv_heads": ("model",),
+    "head_dim": (),
+    "mlp": ("model",),
+    "vocab": ("model",),
+    "expert": ("model",),
+    "expert_mlp": ("model",),
+    "kv_seq": ("data", "model"),   # decode KV-sequence sharding (flash-decode)
+    "mamba_heads": ("model",),
+    "mamba_inner": ("model",),
+    "mamba_state": (),
+    "layer": (),
+}
+
+
+def strategy_rules(strategy: str) -> tuple[dict, dict]:
+    """-> (param_rules, act_rules) for a sharding strategy.
+
+    "tp": megatron tensor parallel — heads/mlp/experts on "model";
+          residual replicated across model.  Right for decode/prefill
+          (small per-chip batch, KV-sequence sharded).
+    "sp": fully-sharded sequence parallel — the residual stream's seq dim
+          on "model", params ZeRO-3 over (data, model), attention runs
+          q-local vs all-gathered KV.  Right for training (activations
+          dominate: 64k tokens/chip at train_4k).
+    """
+    if strategy == "tp":
+        return dict(PARAM_RULES), dict(ACT_RULES)
+    if strategy == "tp_infer":
+        # serving layout: weights REPLICATED across "data" (no per-step
+        # weight all-gathers), sharded only on "model"; batch rides "data".
+        # Expert banks keep their (data x model) sharding — GSPMD resolves
+        # the contraction with activation all-reduces instead of gathers.
+        param = dict(PARAM_RULES, embed=())
+        return param, dict(ACT_RULES)
+    assert strategy == "sp", strategy
+    param = dict(PARAM_RULES, embed=("data", "model"), heads=(), kv_heads=(),
+                 mlp=(), vocab=("model",), mamba_inner=())
+    act = dict(ACT_RULES, res_seq=("model",), heads=(), kv_heads=(), mlp=(),
+               mamba_inner=())
+    return param, act
+
+
+def spec_for(shape: Sequence[int], axes: Sequence[Optional[str]], rules: dict,
+             mesh: Mesh) -> P:
+    used: set[str] = set()
+    out = []
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    for dim, name in zip(shape, axes):
+        assigned: tuple = ()
+        if name is not None:
+            cand = tuple(a for a in rules.get(name, ()) if a in sizes and a not in used)
+            # take the longest prefix whose product divides the dim
+            while cand:
+                prod = int(np.prod([sizes[a] for a in cand]))
+                if prod > 1 and dim % prod == 0:
+                    assigned = cand
+                    break
+                cand = cand[:-1]
+        used.update(assigned)
+        out.append(assigned if assigned else None)
+    # PartitionSpec wants single names or tuples
+    return P(*[a[0] if (a and len(a) == 1) else a for a in out])
+
+
+def named_sharding(shape, axes, mesh: Mesh, rules=None) -> NamedSharding:
+    return NamedSharding(mesh, spec_for(shape, axes, rules or PARAM_RULES, mesh))
+
+
+def tree_shardings(axes, abstract, mesh: Mesh, rules=None):
+    """Zip Axes tree with ShapeDtypeStruct tree -> NamedSharding tree."""
+    from repro.models.param import Axes
+
+    rules = rules or PARAM_RULES
+    return jax.tree_util.tree_map(
+        lambda ax, a: named_sharding(a.shape, tuple(ax), mesh, rules),
+        axes, abstract,
+        is_leaf=lambda x: isinstance(x, Axes),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Activation constraints inside model code: shard(x, "batch", "seq", "embed").
+# No-op when no mesh context is active (single-device smoke tests).
+# ---------------------------------------------------------------------------
+_CTX = threading.local()
+
+
+@contextlib.contextmanager
+def mesh_context(mesh: Optional[Mesh], rules: Optional[dict] = None):
+    prev = getattr(_CTX, "mesh", None), getattr(_CTX, "rules", None)
+    _CTX.mesh, _CTX.rules = mesh, dict(ACT_RULES, **(rules or {}))
+    try:
+        yield
+    finally:
+        _CTX.mesh, _CTX.rules = prev
+
+
+def current_mesh() -> Optional[Mesh]:
+    return getattr(_CTX, "mesh", None)
+
+
+def shard(x, *axes):
+    mesh = getattr(_CTX, "mesh", None)
+    if mesh is None:
+        return x
+    rules = getattr(_CTX, "rules", ACT_RULES)
+    spec = spec_for(x.shape, axes, rules, mesh)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))

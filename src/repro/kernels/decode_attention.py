@@ -1,0 +1,103 @@
+"""Flash-decode kernel: one query token vs a long KV cache (Pallas, TPU).
+
+Grid (B, KV, nT) — KV-sequence blocks innermost; online-softmax state in
+VMEM scratch.  The GQA q-head group (G = H/KV rows) rides the MXU M
+dimension.  Per-sequence cache lengths, per-slot absolute key positions
+(ring buffers for SWA layers), and the query position arrive as scalar /
+position inputs so ragged batches mask correctly.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+F32 = jnp.float32
+NEG = -1e30
+
+
+def _kernel(meta_ref, q_ref, k_ref, v_ref, kp_ref, o_ref, m_ref, l_ref,
+            acc_ref, *, block_t: int, n_t: int, window: Optional[int],
+            scale: float):
+    b, ti = pl.program_id(0), pl.program_id(2)
+
+    @pl.when(ti == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0, :, :].astype(F32) * scale              # (G, hd)
+    k = k_ref[0, :, 0, :].astype(F32)                      # (BT, hd)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=F32)    # (G, BT)
+    kp = kp_ref[0, :]                                      # (BT,) abs positions
+    length = meta_ref[b, 0]
+    ok = (kp < length) & (kp >= 0)
+    if window is not None:
+        q_pos = meta_ref[b, 1]
+        ok &= kp > q_pos - window
+    s = jnp.where(ok[None, :], s, NEG)
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+    p = jnp.where(ok[None, :], jnp.exp(s - m_new[:, None]), 0.0)
+    corr = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=1)
+    v = v_ref[0, :, 0, :].astype(F32)
+    acc_ref[...] = acc_ref[...] * corr[:, None] + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=F32)
+    m_ref[...] = m_new
+
+    @pl.when(ti == n_t - 1)
+    def _finish():
+        l = jnp.maximum(l_ref[...], 1e-20)
+        o_ref[0, 0, :, :] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("window", "block_t", "interpret"))
+def decode_attention(q, k, v, *, lengths, key_positions=None, q_pos=None,
+                     window: Optional[int] = None, block_t: int = 512,
+                     interpret: bool = False):
+    """q: (B,H,hd); k,v: (B,T,KV,hd); lengths: (B,) -> (B,H,hd)."""
+    b, h, hd = q.shape
+    t, kv = k.shape[1], k.shape[2]
+    g = h // kv
+    block_t = min(block_t, t)
+    assert t % block_t == 0, (t, block_t)
+    n_t = t // block_t
+    if key_positions is None:
+        key_positions = jnp.broadcast_to(jnp.arange(t, dtype=jnp.int32), (b, t))
+    if q_pos is None:
+        q_pos = jnp.maximum(lengths - 1, 0)
+    meta = jnp.stack([lengths.astype(jnp.int32), q_pos.astype(jnp.int32)], axis=1)
+    qg = q.reshape(b, kv, g, hd)
+
+    kernel = functools.partial(_kernel, block_t=block_t, n_t=n_t,
+                               window=window, scale=hd ** -0.5)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(b, kv, n_t),
+        in_specs=[
+            pl.BlockSpec((1, 1, g, hd), lambda b_, k_, ti, meta: (b_, k_, 0, 0)),
+            pl.BlockSpec((1, block_t, 1, hd), lambda b_, k_, ti, meta: (b_, ti, k_, 0)),
+            pl.BlockSpec((1, block_t, 1, hd), lambda b_, k_, ti, meta: (b_, ti, k_, 0)),
+            pl.BlockSpec((1, block_t), lambda b_, k_, ti, meta: (b_, ti)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, g, hd), lambda b_, k_, ti, meta: (b_, k_, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((g,), F32),
+            pltpu.VMEM((g,), F32),
+            pltpu.VMEM((g, hd), F32),
+        ],
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, kv, g, hd), q.dtype),
+        interpret=interpret,
+    )(meta, qg, k, v, key_positions.astype(jnp.int32))
+    return out.reshape(b, h, hd)

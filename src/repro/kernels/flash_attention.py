@@ -1,0 +1,116 @@
+"""FlashAttention-2-style prefill kernel (Pallas, TPU).
+
+Grid (B, H, nQ, nKV) — KV innermost so the (m, l, acc) online-softmax state
+lives in VMEM scratch across KV steps.  GQA is handled in the K/V BlockSpec
+index map (kv_head = q_head // group).  Causal and sliding-window masks are
+computed from block-local iotas; fully-masked KV blocks are skipped with
+``pl.when`` (the TPU grid is sequential, so skipping saves real MXU time).
+
+Block sizes default to (128, 512): q-tile 128×hd + kv-tile 512×hd + scratch
+acc 128×hd fp32 — well under VMEM for hd ≤ 256 and MXU-aligned.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+F32 = jnp.float32
+NEG = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+            causal: bool, window: Optional[int], block_q: int, block_k: int,
+            n_kv: int, scale: float):
+    qi, ki = pl.program_id(2), pl.program_id(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q_start = qi * block_q
+    k_start = ki * block_k
+    # skip blocks that are entirely masked out
+    relevant = None
+    if causal:
+        relevant = k_start <= q_start + block_q - 1
+    if window is not None:
+        win_ok = k_start + block_k - 1 > q_start - window
+        relevant = win_ok if relevant is None else jnp.logical_and(relevant, win_ok)
+
+    def _step():
+        q = q_ref[0, :, 0, :].astype(F32) * scale          # (BQ, hd)
+        k = k_ref[0, :, 0, :].astype(F32)                  # (BK, hd)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=F32)  # (BQ, BK)
+        qp = q_start + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0)
+        kp = k_start + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
+        ok = jnp.ones_like(s, bool)
+        if causal:
+            ok &= kp <= qp
+        if window is not None:
+            ok &= kp > qp - window
+        s = jnp.where(ok, s, NEG)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+        p = jnp.where(ok, jnp.exp(s - m_new[:, None]), 0.0)
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=1)
+        v = v_ref[0, :, 0, :].astype(F32)
+        pv = jax.lax.dot_general(p, v, (((1,), (0,)), ((), ())),
+                                 preferred_element_type=F32)
+        acc_ref[...] = acc_ref[...] * corr[:, None] + pv
+        m_ref[...] = m_new
+
+    if relevant is None:
+        _step()
+    else:
+        pl.when(relevant)(_step)
+
+    @pl.when(ki == n_kv - 1)
+    def _finish():
+        l = jnp.maximum(l_ref[...], 1e-20)
+        o_ref[0, :, 0, :] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "block_q",
+                                             "block_k", "interpret"))
+def flash_attention(q, k, v, *, causal: bool = True,
+                    window: Optional[int] = None, block_q: int = 128,
+                    block_k: int = 512, interpret: bool = False):
+    """q: (B,S,H,hd); k,v: (B,T,KV,hd) -> (B,S,H,hd)."""
+    b, s, h, hd = q.shape
+    t, kv = k.shape[1], k.shape[2]
+    g = h // kv
+    block_q = min(block_q, s)
+    block_k = min(block_k, t)
+    assert s % block_q == 0 and t % block_k == 0, (s, t, block_q, block_k)
+    n_q, n_kv = s // block_q, t // block_k
+    grid = (b, h, n_q, n_kv)
+
+    kernel = functools.partial(_kernel, causal=causal, window=window,
+                               block_q=block_q, block_k=block_k, n_kv=n_kv,
+                               scale=hd ** -0.5)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_q, 1, hd), lambda b_, h_, qi, ki: (b_, qi, h_, 0)),
+            pl.BlockSpec((1, block_k, 1, hd), lambda b_, h_, qi, ki: (b_, ki, h_ // g, 0)),
+            pl.BlockSpec((1, block_k, 1, hd), lambda b_, h_, qi, ki: (b_, ki, h_ // g, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, 1, hd), lambda b_, h_, qi, ki: (b_, qi, h_, 0)),
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q,), F32),       # m
+            pltpu.VMEM((block_q,), F32),       # l
+            pltpu.VMEM((block_q, hd), F32),    # acc
+        ],
+        interpret=interpret,
+    )(q, k, v)

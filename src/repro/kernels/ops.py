@@ -1,0 +1,70 @@
+"""Public kernel ops with impl dispatch.
+
+impl = "auto"   -> Pallas on TPU, jnp reference elsewhere (CPU container)
+       "pallas" -> pl.pallas_call (interpret mode off-TPU: kernel-body tests)
+       "ref"    -> pure-jnp reference (also the dry-run lowering path)
+
+``REPRO_FORCE_IMPL`` env var overrides "auto" globally.
+"""
+from __future__ import annotations
+
+import os
+from typing import Optional
+
+import jax
+
+from repro.kernels import ref as _ref
+
+
+def _resolve(impl: str) -> str:
+    if impl == "auto":
+        impl = os.environ.get("REPRO_FORCE_IMPL", "auto")
+    if impl == "auto":
+        impl = "pallas" if jax.default_backend() == "tpu" else "ref"
+    return impl
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def flash_attention(q, k, v, *, causal: bool = True, window: Optional[int] = None,
+                    impl: str = "auto", chunk: int = 512):
+    """q: (B,S,H,hd); k,v: (B,T,KV,hd) -> (B,S,H,hd)."""
+    impl = _resolve(impl)
+    if impl == "ref":
+        return _ref.chunked_attention(q, k, v, causal=causal, window=window, chunk=chunk)
+    from repro.kernels import flash_attention as fa
+    return fa.flash_attention(q, k, v, causal=causal, window=window,
+                              interpret=_interpret())
+
+
+def decode_attention(q, k, v, *, lengths, key_positions=None, q_pos=None,
+                     window: Optional[int] = None, impl: str = "auto"):
+    """q: (B,H,hd); k,v: (B,T,KV,hd); lengths: (B,) -> (B,H,hd)."""
+    impl = _resolve(impl)
+    if impl == "ref":
+        return _ref.decode_attention(q, k, v, lengths=lengths,
+                                     key_positions=key_positions, q_pos=q_pos,
+                                     window=window)
+    from repro.kernels import decode_attention as da
+    return da.decode_attention(q, k, v, lengths=lengths,
+                               key_positions=key_positions, q_pos=q_pos,
+                               window=window, interpret=_interpret())
+
+
+def ssd_scan(x, dt, A, B, C, *, chunk: int = 256, h0=None, impl: str = "auto"):
+    """Mamba-2 SSD. x: (b,s,h,p); dt: (b,s,h); A: (h,); B,C: (b,s,1,n)."""
+    impl = _resolve(impl)
+    s = x.shape[1]
+    pad = (-s) % chunk
+    if pad:  # dt=0 padding is state-neutral (decay 1, zero update)
+        import jax.numpy as jnp
+        padt = lambda a: jnp.pad(a, [(0, pad if i == 1 else 0) for i in range(a.ndim)])
+        x, dt, B, C = padt(x), padt(dt), padt(B), padt(C)
+    if impl == "ref":
+        y, h = _ref.ssd_chunked(x, dt, A, B, C, chunk=chunk, h0=h0)
+    else:
+        from repro.kernels import ssd_scan as sk
+        y, h = sk.ssd_scan(x, dt, A, B, C, chunk=chunk, h0=h0, interpret=_interpret())
+    return (y[:, :s] if pad else y), h

@@ -1,0 +1,215 @@
+"""Pure-jnp oracles for every Pallas kernel.
+
+These are the ground truth for kernel allclose tests AND the path the
+multi-pod dry-run lowers (so cost_analysis reflects true FLOPs/bytes).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+F32 = jnp.float32
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# Attention
+# ---------------------------------------------------------------------------
+def _mask_bias(q_pos, k_pos, *, causal: bool, window: Optional[int],
+               k_valid=None) -> jax.Array:
+    diff = q_pos[..., :, None] - k_pos[..., None, :]
+    ok = jnp.ones(diff.shape, bool)
+    if causal:
+        ok &= diff >= 0
+    if window is not None:
+        ok &= diff < window
+    if k_valid is not None:
+        ok &= k_valid[..., None, :]
+    return jnp.where(ok, 0.0, NEG_INF).astype(F32)
+
+
+def naive_attention(q, k, v, *, causal: bool, window: Optional[int] = None,
+                    q_offset=0) -> jax.Array:
+    """Materializing oracle. q: (B,S,H,hd); k,v: (B,T,KV,hd)."""
+    b, s, h, hd = q.shape
+    t, kv = k.shape[1], k.shape[2]
+    g = h // kv
+    qq = q.reshape(b, s, kv, g, hd)
+    logits = jnp.einsum("bskgd,btkd->bkgst", qq.astype(F32), k.astype(F32))
+    logits = logits * (hd ** -0.5)
+    q_pos = jnp.arange(s) + q_offset
+    logits = logits + _mask_bias(q_pos, jnp.arange(t), causal=causal, window=window)
+    probs = jax.nn.softmax(logits, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bkgst,btkd->bskgd", probs, v)
+    return out.reshape(b, s, h, hd)
+
+
+def chunked_attention(q, k, v, *, causal: bool, window: Optional[int] = None,
+                      chunk: int = 512) -> jax.Array:
+    """Query-chunked attention (scan + remat): the memory-safe reference."""
+    from repro.util import cost_mode, opt_flags
+    b, s, h, hd = q.shape
+    # perf opt: under sequence parallelism q is already seq-sharded; the
+    # q-chunk scan would re-gather it every chunk.  Materialize instead
+    # (logits stay seq-sharded; ~1 GB/chip transient, remat'd in bwd).
+    if cost_mode() or s <= chunk or "sp_naive_attn" in opt_flags():
+        return naive_attention(q, k, v, causal=causal, window=window)
+    assert s % chunk == 0, (s, chunk)
+    n = s // chunk
+    qs = q.reshape(b, n, chunk, h, hd).transpose(1, 0, 2, 3, 4)
+
+    @jax.checkpoint
+    def body(carry, args):
+        i, qc = args
+        return carry, naive_attention(qc, k, v, causal=causal, window=window,
+                                      q_offset=i * chunk)
+
+    _, outs = jax.lax.scan(body, 0, (jnp.arange(n), qs))
+    return outs.transpose(1, 0, 2, 3, 4).reshape(b, s, h, hd)
+
+
+def decode_attention(q, k, v, *, lengths, window: Optional[int] = None,
+                     key_positions=None, q_pos=None) -> jax.Array:
+    """Single-token decode. q: (B,H,hd); k,v: (B,T,KV,hd); lengths: (B,)."""
+    b, h, hd = q.shape
+    t, kvh = k.shape[1], k.shape[2]
+    g = h // kvh
+    qq = q.reshape(b, kvh, g, hd)
+    logits = jnp.einsum("bkgd,btkd->bkgt", qq.astype(F32), k.astype(F32)) * (hd ** -0.5)
+    if key_positions is None:
+        key_positions = jnp.broadcast_to(jnp.arange(t), (b, t))
+    valid = (key_positions < lengths[:, None]) & (key_positions >= 0)
+    if window is not None:
+        if q_pos is None:
+            q_pos = jnp.maximum(lengths - 1, 0)
+        valid &= key_positions > (q_pos[:, None] - window)
+    logits = jnp.where(valid[:, None, None, :], logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bkgt,btkd->bkgd", probs, v)
+    return out.reshape(b, h, hd)
+
+
+# ---------------------------------------------------------------------------
+# Mamba-2 SSD
+# ---------------------------------------------------------------------------
+def ssd_naive(x, dt, A, B, C, h0=None):
+    """Per-timestep recurrence oracle.
+
+    x: (b,s,h,p); dt: (b,s,h); A: (h,); B,C: (b,s,g,n) with g==1.
+    Returns y: (b,s,h,p) fp32 and final state (b,h,p,n) fp32.
+    """
+    b, s, h, p = x.shape
+    n = B.shape[-1]
+    xf, dtf, Bf, Cf = x.astype(F32), dt.astype(F32), B.astype(F32), C.astype(F32)
+    state = jnp.zeros((b, h, p, n), F32) if h0 is None else h0
+
+    def step(state, args):
+        xt, dtt, Bt, Ct = args                        # (b,h,p),(b,h),(b,n),(b,n)
+        decay = jnp.exp(A * dtt)                      # (b,h)
+        state = state * decay[..., None, None]
+        state = state + jnp.einsum("bh,bhp,bn->bhpn", dtt, xt, Bt)
+        y = jnp.einsum("bhpn,bn->bhp", state, Ct)
+        return state, y
+
+    xs = (xf.transpose(1, 0, 2, 3), dtf.transpose(1, 0, 2),
+          Bf[:, :, 0].transpose(1, 0, 2), Cf[:, :, 0].transpose(1, 0, 2))
+    state, ys = jax.lax.scan(step, state, xs)
+    return ys.transpose(1, 0, 2, 3), state
+
+
+def ssd_chunked(x, dt, A, B, C, *, chunk: int, h0=None):
+    """Chunked SSD (state-space duality): the kernel's exact math.
+
+    Scans over chunks (carrying the (b,h,p,n) state) so only ONE chunk's
+    (b,L,L,h) decay tensor is live at a time — sharded over batch and heads
+    this keeps the working set in tens of MB/chip even for jamba's h=128.
+    The chunk body is rematerialized in the backward pass.
+    """
+    from repro.distributed.sharding import shard
+    from repro.util import cost_mode
+
+    b, s, h, p = x.shape
+    n = B.shape[-1]
+    assert s % chunk == 0, (s, chunk)
+    nc, L = s // chunk, chunk
+    if cost_mode():
+        # cost lowering is never executed: the vectorized form compiles to a
+        # handful of einsums (fast) and reports exact trip-counted FLOPs.
+        return _ssd_vectorized(x, dt, A, B, C, chunk=chunk, h0=h0)
+    # (nc, b, L, ...) leading chunk axis for the scan.  Inputs keep their
+    # storage dtype (bf16): the scan xs are saved for backward, so an
+    # upfront f32 cast would double the dominant temp buffer.
+    xf = x.reshape(b, nc, L, h, p).transpose(1, 0, 2, 3, 4)
+    dtf = dt.astype(F32).reshape(b, nc, L, h).transpose(1, 0, 2, 3)
+    Bf = B[:, :, 0].reshape(b, nc, L, n).transpose(1, 0, 2, 3)
+    Cf = C[:, :, 0].reshape(b, nc, L, n).transpose(1, 0, 2, 3)
+    causal = jnp.tril(jnp.ones((L, L), bool))
+
+    @jax.checkpoint
+    def body(hprev, args):
+        xc, dtc, Bc, Cc = args              # (b,L,h,p),(b,L,h),(b,L,n),(b,L,n)
+        xc, Bc, Cc = xc.astype(F32), Bc.astype(F32), Cc.astype(F32)
+        a = A * dtc
+        cum = jnp.cumsum(a, axis=1)                              # (b,L,h)
+        # intra: M[t,s] = (C_t.B_s) exp(cum_t - cum_s) dt_s,  t >= s
+        seg = cum[:, :, None, :] - cum[:, None, :, :]            # (b,t,s,h)
+        # mask BEFORE exp: masked entries can overflow to inf, and
+        # where(mask, inf, 0) still produces NaN gradients.
+        decay = jnp.exp(jnp.where(causal[None, :, :, None], seg, -1e30))
+        decay = shard(decay, "batch", None, None, "mamba_heads")
+        cb = jnp.einsum("btn,bsn->bts", Cc, Bc)
+        M = cb[..., None] * decay * dtc[:, None, :, :]           # (b,t,s,h)
+        y = jnp.einsum("btsh,bshp->bthp", M, xc)
+        # inter: y[t] += exp(cum_t) * C_t . h_prev
+        y = y + jnp.einsum("blh,bln,bhpn->blhp", jnp.exp(cum), Cc, hprev)
+        # state: h = exp(cum_L) h_prev + sum_s exp(cum_L - cum_s) dt_s B_s x_s
+        w = jnp.exp(cum[:, -1:, :] - cum) * dtc                  # (b,L,h)
+        upd = jnp.einsum("blh,bln,blhp->bhpn", w, Bc, xc)
+        hnew = hprev * jnp.exp(cum[:, -1, :])[:, :, None, None] + upd
+        from repro.util import opt_flags
+        if "ssd_shard_state" in opt_flags():
+            # perf opt: the (b,h,p,n) inter-chunk state is the scan carry the
+            # backward saves per chunk (jamba: 2.1 GB/chip x 16 boundaries x
+            # 7 layers unsharded) -> shard it over "model" via heads.
+            hnew = shard(hnew, "batch", "mamba_heads", None, None)
+        return hnew, y
+
+    init = jnp.zeros((b, h, p, n), F32) if h0 is None else h0.astype(F32)
+    hN, ys = jax.lax.scan(body, init, (xf, dtf, Bf, Cf))
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(b, s, h, p)
+    return y, hN
+
+
+def _ssd_vectorized(x, dt, A, B, C, *, chunk: int, h0=None):
+    """All chunks at once (memory-heavy, compile-light): cost-mode path."""
+    b, s, h, p = x.shape
+    n = B.shape[-1]
+    nc, L = s // chunk, chunk
+    xf = x.astype(F32).reshape(b, nc, L, h, p)
+    dtf = dt.astype(F32).reshape(b, nc, L, h)
+    Bf = B.astype(F32)[:, :, 0].reshape(b, nc, L, n)
+    Cf = C.astype(F32)[:, :, 0].reshape(b, nc, L, n)
+    a = A * dtf
+    cum = jnp.cumsum(a, axis=2)
+    seg = cum[:, :, :, None, :] - cum[:, :, None, :, :]
+    causal = jnp.tril(jnp.ones((L, L), bool))
+    decay = jnp.exp(jnp.where(causal[None, None, :, :, None], seg, -1e30))
+    cb = jnp.einsum("bctn,bcsn->bcts", Cf, Bf)
+    M = cb[..., None] * decay * dtf[:, :, None, :, :]
+    y_intra = jnp.einsum("bctsh,bcshp->bcthp", M, xf)
+    dec_to_end = jnp.exp(cum[:, :, -1:, :] - cum)
+    Sc = jnp.einsum("bclh,bcln,bclhp->bchpn", dec_to_end * dtf, Bf, xf)
+    chunk_decay = jnp.exp(cum[:, :, -1, :])
+
+    def step(hprev, args):
+        dcy, sc = args
+        return hprev * dcy[..., None, None] + sc, hprev
+
+    init = jnp.zeros((b, h, p, n), F32) if h0 is None else h0.astype(F32)
+    hN, hprevs = jax.lax.scan(step, init, (chunk_decay.transpose(1, 0, 2),
+                                           Sc.transpose(1, 0, 2, 3, 4)))
+    hprevs = hprevs.transpose(1, 0, 2, 3, 4)
+    y_inter = jnp.einsum("bclh,bcln,bchpn->bclhp", jnp.exp(cum), Cf, hprevs)
+    return (y_intra + y_inter).reshape(b, s, h, p), hN

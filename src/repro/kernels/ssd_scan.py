@@ -1,0 +1,101 @@
+"""Mamba-2 SSD chunked-scan kernel (Pallas, TPU).
+
+TPU adaptation of the SSD algorithm: instead of a GPU warp-level selective
+scan, each chunk is a dense (L×L) decay-masked attention-like product that
+runs on the MXU; the (P×N) recurrent state is carried across the innermost
+(sequential) grid axis in VMEM scratch.  Grid (B, H, nChunks).
+
+VMEM per step (L=256, P=128, N=128, fp32): x 128KB + B/C 2×128KB + M 256KB +
+state 64KB ≈ 0.8 MB — comfortably resident.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+F32 = jnp.float32
+
+
+def _kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, h0_ref, y_ref, hN_ref,
+            state_ref, *, chunk: int, n_chunks: int):
+    ci = pl.program_id(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        state_ref[...] = h0_ref[0, 0, :, :].astype(F32)
+
+    x = x_ref[0, :, 0, :].astype(F32)                     # (L, P)
+    dt = dt_ref[0, :, 0].astype(F32)                      # (L,)
+    A = a_ref[0, 0]                                       # scalar (this head)
+    Bm = b_ref[0, :, :].astype(F32)                       # (L, N)
+    Cm = c_ref[0, :, :].astype(F32)                       # (L, N)
+
+    a = A * dt                                            # (L,) log-decay
+    cum = jnp.cumsum(a)                                   # (L,)
+    # intra-chunk quadratic term: M[t,s] = (C_t.B_s) exp(cum_t - cum_s) dt_s, t>=s
+    seg = cum[:, None] - cum[None, :]
+    t_idx = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+    s_idx = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    decay = jnp.exp(jnp.where(t_idx >= s_idx, seg, -1e30))  # mask pre-exp
+    cb = jax.lax.dot_general(Cm, Bm, (((1,), (1,)), ((), ())),
+                             preferred_element_type=F32)  # (L, L)
+    M = cb * decay * dt[None, :]
+    y = jax.lax.dot_general(M, x, (((1,), (0,)), ((), ())),
+                            preferred_element_type=F32)   # (L, P)
+    # inter-chunk: y += exp(cum_t) * C_t . h_prev^T      (h_prev: (P, N))
+    h_prev = state_ref[...]
+    y += jnp.exp(cum)[:, None] * jax.lax.dot_general(
+        Cm, h_prev, (((1,), (1,)), ((), ())), preferred_element_type=F32)
+    y_ref[0, :, 0, :] = y.astype(y_ref.dtype)
+    # state update: h = exp(cum_L) h_prev + sum_s exp(cum_L-cum_s) dt_s x_s ⊗ B_s
+    w = jnp.exp(cum[-1] - cum) * dt                       # (L,)
+    upd = jax.lax.dot_general(x, Bm * w[:, None], (((0,), (0,)), ((), ())),
+                              preferred_element_type=F32)  # (P, N)
+    state_ref[...] = jnp.exp(cum[-1]) * h_prev + upd
+
+    @pl.when(ci == n_chunks - 1)
+    def _finish():
+        hN_ref[0, 0, :, :] = state_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_scan(x, dt, A, B, C, *, chunk: int = 256, h0=None,
+             interpret: bool = False):
+    """x: (b,s,h,p); dt: (b,s,h); A: (h,); B,C: (b,s,1,n) -> (y fp32, hN fp32)."""
+    b, s, h, p = x.shape
+    n = B.shape[-1]
+    assert s % chunk == 0, (s, chunk)
+    nc = s // chunk
+    if h0 is None:
+        h0 = jnp.zeros((b, h, p, n), F32)
+    Bs, Cs = B[:, :, 0, :], C[:, :, 0, :]                 # (b,s,n)
+    a2 = A.reshape(h, 1).astype(F32)
+
+    kernel = functools.partial(_kernel, chunk=chunk, n_chunks=nc)
+    y, hN = pl.pallas_call(
+        kernel,
+        grid=(b, h, nc),
+        in_specs=[
+            pl.BlockSpec((1, chunk, 1, p), lambda b_, h_, c_: (b_, c_, h_, 0)),
+            pl.BlockSpec((1, chunk, 1), lambda b_, h_, c_: (b_, c_, h_)),
+            pl.BlockSpec((1, 1), lambda b_, h_, c_: (h_, 0)),
+            pl.BlockSpec((1, chunk, n), lambda b_, h_, c_: (b_, c_, 0)),
+            pl.BlockSpec((1, chunk, n), lambda b_, h_, c_: (b_, c_, 0)),
+            pl.BlockSpec((1, 1, p, n), lambda b_, h_, c_: (b_, h_, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, chunk, 1, p), lambda b_, h_, c_: (b_, c_, h_, 0)),
+            pl.BlockSpec((1, 1, p, n), lambda b_, h_, c_: (b_, h_, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, s, h, p), F32),
+            jax.ShapeDtypeStruct((b, h, p, n), F32),
+        ],
+        scratch_shapes=[pltpu.VMEM((p, n), F32)],
+        interpret=interpret,
+    )(x, dt, a2, Bs, Cs, h0)
+    return y, hN

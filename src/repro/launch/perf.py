@@ -1,0 +1,53 @@
+"""§Perf hillclimb runner: lower one cell with optimization toggles and
+print the roofline delta vs the recorded baseline.
+
+  python -m repro.launch.perf --arch command-r-35b --shape train_4k \
+      --strategy sp --opts sp_naive_attn,remat_dots --tag opt1
+"""
+import os  # noqa: E402
+os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=512 "
+                           + os.environ.get("XLA_FLAGS", ""))
+
+import argparse  # noqa: E402
+import json      # noqa: E402
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--strategy", default="")
+    ap.add_argument("--opts", default="")
+    ap.add_argument("--tag", required=True)
+    ap.add_argument("--multipod", action="store_true")
+    ap.add_argument("--no-cost", action="store_true",
+                    help="production lowering only (memory iterations)")
+    args = ap.parse_args()
+
+    from repro.launch.dryrun import ARTIFACT_DIR, run_cell
+    from repro.launch.roofline import analyze
+
+    r = run_cell(args.arch, args.shape, args.multipod, strategy=args.strategy,
+                 opts=args.opts, tag=args.tag, with_cost=not args.no_cost)
+    if "flops" not in r:
+        print(f"[{args.tag}] compile={r['compile_s']}s "
+              f"temp={r['memory']['temp_size_in_bytes']/2**30:.1f}GiB "
+              f"args={r['memory']['argument_size_in_bytes']/2**30:.1f}GiB")
+        return
+    a = analyze(r)
+    base_path = os.path.join(
+        ARTIFACT_DIR, f"{args.arch}_{args.shape}_"
+        f"{'multipod' if args.multipod else 'pod'}.json")
+    print(f"[{args.tag}] compute={a.compute_s:.3e}s memory={a.memory_s:.3e}s "
+          f"collective={a.collective_s:.3e}s dominant={a.dominant} "
+          f"bound={a.bound_s:.3e}s roofline={a.roofline_fraction:.3f} "
+          f"temp={r['memory']['temp_size_in_bytes']/2**30:.1f}GiB")
+    if os.path.exists(base_path):
+        b = analyze(json.load(open(base_path)))
+        print(f"[baseline] bound={b.bound_s:.3e}s roofline="
+              f"{b.roofline_fraction:.3f} -> "
+              f"speedup {b.bound_s/a.bound_s:.2f}x")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,74 @@
+"""Render §Dry-run and §Roofline tables into EXPERIMENTS.md from artifacts.
+
+  PYTHONPATH=src python -m repro.launch.render
+"""
+from __future__ import annotations
+
+import json
+import os
+
+from repro.launch.dryrun import ARTIFACT_DIR
+from repro.launch.roofline import analyze
+
+EXP = os.path.join(os.path.dirname(__file__), "..", "..", "..", "EXPERIMENTS.md")
+
+
+def _load(tag: str):
+    out = []
+    for f in sorted(os.listdir(ARTIFACT_DIR)):
+        if f.endswith(f"_{tag}.json"):
+            with open(os.path.join(ARTIFACT_DIR, f)) as fh:
+                out.append(json.load(fh))
+    return out
+
+
+def dryrun_table() -> str:
+    rows = ["| arch | shape | mesh | strategy | compile (s) | args GiB/chip | temp GiB/chip | fits 16G |",
+            "|---|---|---|---|---|---|---|---|"]
+    for r in _load("pod") + _load("multipod"):
+        mem = r["memory"]
+        args_g = mem.get("argument_size_in_bytes", 0) / 2**30
+        temp_g = mem.get("temp_size_in_bytes", 0) / 2**30
+        fits = "yes" if args_g + temp_g < 16 else "**no**"
+        mesh = "x".join(str(x) for x in r["mesh"])
+        rows.append(f"| {r['arch']} | {r['shape']} | {mesh} | {r.get('strategy','')} "
+                    f"| {r['compile_s']} | {args_g:.2f} | {temp_g:.2f} | {fits} |")
+    return "\n".join(rows)
+
+
+def roofline_table() -> str:
+    rows = ["| arch | shape | compute (s) | memory (s) | collective (s) | dominant | useful | roofline |",
+            "|---|---|---|---|---|---|---|---|"]
+    for r in _load("pod"):
+        if "flops" not in r:
+            continue
+        a = analyze(r)
+        rows.append(f"| {a.arch} | {a.shape} | {a.compute_s:.3e} | {a.memory_s:.3e} "
+                    f"| {a.collective_s:.3e} | {a.dominant} | {a.useful_ratio:.2f} "
+                    f"| **{a.roofline_fraction:.3f}** |")
+    return "\n".join(rows)
+
+
+def main():
+    with open(EXP) as f:
+        text = f.read()
+    text = _replace(text, "DRYRUN_TABLE", dryrun_table())
+    text = _replace(text, "ROOFLINE_TABLE", roofline_table())
+    with open(EXP, "w") as f:
+        f.write(text)
+    print("rendered", EXP)
+
+
+def _replace(text: str, marker: str, table: str) -> str:
+    start = f"<!-- {marker} -->"
+    end = f"<!-- /{marker} -->"
+    block = f"{start}\n{table}\n{end}"
+    if end in text:
+        import re
+        return re.sub(rf"<!-- {marker} -->.*?<!-- /{marker} -->", block,
+                      text, flags=re.S)
+    return text.replace(start, block)
+
+
+if __name__ == "__main__":
+    main()

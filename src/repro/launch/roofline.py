@@ -1,0 +1,186 @@
+"""Roofline analysis over dry-run artifacts.
+
+Three terms, in seconds, per (arch x shape) on the single-pod 16x16 mesh
+(cost_analysis numbers are per-partition, i.e. per chip):
+
+  compute    = HLO_FLOPs_per_chip / 197e12        (v5e bf16 peak)
+  memory     = HLO_bytes_per_chip / 819e9         (HBM bandwidth)
+  collective = wire_bytes_per_chip / 50e9         (ICI per-link)
+
+wire bytes apply ring-collective factors to the parsed result-shape bytes:
+all-gather/reduce-scatter move (n-1)/n x full tensor; all-reduce moves
+2x(n-1)/n; all-to-all ~ full/n per link; collective-permute = full.
+
+MODEL_FLOPS = 6*N*D (train), 2*N*D (prefill), 2*N_active*B (decode) — the
+"useful" fraction HLO_FLOPs is judged against.
+"""
+from __future__ import annotations
+
+import json
+import os
+from dataclasses import dataclass
+
+from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
+
+ARTIFACT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                            "artifacts", "dryrun")
+
+_WIRE_FACTOR = {          # per-chip bytes-on-wire per full-tensor byte
+    "all-gather": 1.0,        # (n-1)/n ≈ 1
+    "reduce-scatter": 1.0,
+    "all-reduce": 2.0,        # RS + AG
+    "all-to-all": 1.0,
+    "collective-permute": 1.0,
+}
+
+
+@dataclass
+class Roofline:
+    arch: str
+    shape: str
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    model_flops: float
+    hlo_flops: float
+    arg_bytes: float = 0.0      # per-chip params+state: one mandatory read
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def bound_s(self) -> float:
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def useful_ratio(self) -> float:
+        """MODEL_FLOPS / HLO_FLOPs — remat/masking/dispatch overhead."""
+        return self.model_flops / self.hlo_flops if self.hlo_flops > 0 else 0.0
+
+    @property
+    def ideal_s(self) -> float:
+        """Roofline floor: useful FLOPs at peak, or one full HBM read of
+        params+state (whichever binds) — decode is legitimately memory-bound,
+        so its roofline is the weight/KV-streaming time, not the MXU."""
+        return max(self.model_flops / PEAK_FLOPS_BF16, self.arg_bytes / HBM_BW)
+
+    @property
+    def roofline_fraction(self) -> float:
+        """ideal_s / achieved bound — the score the perf pass hillclimbs."""
+        return self.ideal_s / self.bound_s if self.bound_s > 0 else 0.0
+
+
+def _attn_flops_per_token(cfg, ctx: int, causal: bool) -> float:
+    """Useful attention/SSD mixer FLOPs per token (QK^T + PV = 4*H*hd*ctx)."""
+    total = 0.0
+    pattern = cfg.resolved_pattern
+    n_rep = cfg.num_layers // len(pattern)
+    for kind in pattern:
+        if kind == "mamba":
+            m = cfg.mamba
+            di = m.d_inner(cfg.d_model)
+            # intra-chunk quadratic + state read/write
+            total += (2 * m.chunk * di + 4 * di * m.d_state) * n_rep
+            continue
+        eff = ctx / 2 if causal else ctx
+        if kind == "attn_swa" and cfg.sliding_window:
+            eff = min(eff, cfg.sliding_window)
+        total += 4 * cfg.num_heads * cfg.resolved_head_dim * eff * n_rep
+    if cfg.enc_dec:  # encoder self-attention (bidirectional)
+        total += 4 * cfg.num_heads * cfg.resolved_head_dim * ctx * cfg.num_encoder_layers
+    return total
+
+
+def model_flops_for(result: dict) -> float:
+    """Per-chip useful FLOPs: 2N per token (6N train) + attention/SSD term."""
+    from repro.configs.base import ALL_SHAPES, get_config
+    cell = {c.name: c for c in ALL_SHAPES}[result["shape"]]
+    cfg = get_config(result["arch"])
+    chips = result["chips"]
+    n_active = result.get("params_active") or result["params"]
+    if cell.kind == "train":
+        tokens = cell.global_batch * cell.seq_len
+        attn = _attn_flops_per_token(cfg, cell.seq_len, causal=True) * tokens
+        return (6.0 * n_active * tokens + 3.0 * attn) / chips
+    if cell.kind == "prefill":
+        tokens = cell.global_batch * cell.seq_len
+        attn = _attn_flops_per_token(cfg, cell.seq_len, causal=True) * tokens
+        return (2.0 * n_active * tokens + attn) / chips
+    # decode: 1 new token per sequence against a ctx-long cache
+    attn = _attn_flops_per_token(cfg, cell.seq_len, causal=False) * cell.global_batch
+    return (2.0 * n_active * cell.global_batch + attn) / chips
+
+
+def analyze(result: dict) -> Roofline:
+    flops = result["flops"]
+    hbytes = result["bytes_accessed"]
+    wire = 0.0
+    for op, b in result["collectives"]["bytes_by_op"].items():
+        wire += b * _WIRE_FACTOR.get(op, 1.0)
+    return Roofline(
+        arch=result["arch"], shape=result["shape"],
+        compute_s=flops / PEAK_FLOPS_BF16,
+        memory_s=hbytes / HBM_BW,
+        collective_s=wire / ICI_BW,
+        model_flops=model_flops_for(result),
+        hlo_flops=flops,
+        arg_bytes=float(result.get("memory", {}).get("argument_size_in_bytes", 0)),
+    )
+
+
+def load_results(multi_pod: bool = False) -> list[dict]:
+    tag = "multipod" if multi_pod else "pod"
+    out = []
+    if not os.path.isdir(ARTIFACT_DIR):
+        return out
+    for f in sorted(os.listdir(ARTIFACT_DIR)):
+        if f.endswith(f"_{tag}.json"):
+            with open(os.path.join(ARTIFACT_DIR, f)) as fh:
+                r = json.load(fh)
+            if "flops" in r:
+                out.append(r)
+    return out
+
+
+def table(multi_pod: bool = False) -> str:
+    rows = ["arch,shape,compute_s,memory_s,collective_s,dominant,"
+            "model_flops,hlo_flops,useful_ratio,roofline_fraction"]
+    for r in load_results(multi_pod):
+        a = analyze(r)
+        rows.append(
+            f"{a.arch},{a.shape},{a.compute_s:.4e},{a.memory_s:.4e},"
+            f"{a.collective_s:.4e},{a.dominant},{a.model_flops:.3e},"
+            f"{a.hlo_flops:.3e},{a.useful_ratio:.3f},{a.roofline_fraction:.3f}")
+    return "\n".join(rows)
+
+
+# ---------------------------------------------------------------------------
+# Serving-profile fallback (used by core.profiles.arch_profile when no
+# dry-run artifact exists): per-decode-step seconds for a batch of 8,
+# memory-bound estimate: 2 bytes/param active / HBM_BW per chip on 8 chips.
+# ---------------------------------------------------------------------------
+def decode_step_time_fallback(arch: str) -> float:
+    from repro.configs.base import get_config
+    from repro.models import registry as R
+    cfg = get_config(arch)
+    n_active = R.count_params(cfg, active=True)
+    bytes_per_step = 2.0 * n_active
+    return bytes_per_step / (8 * HBM_BW)     # 8-chip serving slice
+
+
+def decode_step_time(arch: str, shape: str = "decode_32k") -> float:
+    """Roofline-derived decode step time from artifacts, else fallback."""
+    path = os.path.join(ARTIFACT_DIR, f"{arch}_{shape}_pod.json")
+    if os.path.exists(path):
+        with open(path) as f:
+            r = json.load(f)
+        if "flops" in r:
+            return analyze(r).bound_s
+    return decode_step_time_fallback(arch)
+
+
+if __name__ == "__main__":
+    print(table(multi_pod=False))

@@ -1,0 +1,152 @@
+"""Attention: GQA self/cross attention for train, prefill and decode.
+
+Reference path is a query-chunked (flash-style) jnp implementation — memory
+safe at 32k prefill and exact (it is also the oracle the Pallas kernels are
+validated against; tiny shapes additionally check the naive materializing
+form).  ``impl="pallas"`` dispatches to the TPU kernels in repro.kernels.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.distributed.sharding import shard
+from repro.models.layers import rms_norm, rope
+from repro.models.param import Spec
+
+F32 = jnp.float32
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# Param specs
+# ---------------------------------------------------------------------------
+def attention_specs(cfg: ArchConfig, cross: bool = False) -> dict:
+    d, h, kv, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    out = {
+        "q": Spec((d, h, hd), ("embed", "heads", "head_dim")),
+        "k": Spec((d, kv, hd), ("embed", "kv_heads", "head_dim")),
+        "v": Spec((d, kv, hd), ("embed", "kv_heads", "head_dim")),
+        "o": Spec((h, hd, d), ("heads", "head_dim", "embed")),
+    }
+    if cfg.use_bias:
+        out["qb"] = Spec((h, hd), ("heads", "head_dim"), jnp.float32, "zeros")
+        out["kb"] = Spec((kv, hd), ("kv_heads", "head_dim"), jnp.float32, "zeros")
+        out["vb"] = Spec((kv, hd), ("kv_heads", "head_dim"), jnp.float32, "zeros")
+        out["ob"] = Spec((d,), ("embed",), jnp.float32, "zeros")
+    if cfg.qk_norm and not cross:
+        out["q_norm"] = Spec((hd,), ("head_dim",), jnp.float32, "ones")
+        out["k_norm"] = Spec((hd,), ("head_dim",), jnp.float32, "ones")
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Full block-level application (projections + rope + cache plumbing)
+# ---------------------------------------------------------------------------
+def _proj_qkv(cfg, p, x, xa=None):
+    src = x if xa is None else xa
+    q = jnp.einsum("...d,dhk->...hk", x, p["q"])
+    k = jnp.einsum("...d,dhk->...hk", src, p["k"])
+    v = jnp.einsum("...d,dhk->...hk", src, p["v"])
+    if "qb" in p:
+        q, k, v = q + p["qb"].astype(q.dtype), k + p["kb"].astype(k.dtype), v + p["vb"].astype(v.dtype)
+    if "q_norm" in p:
+        q = rms_norm(q, p["q_norm"])
+        k = rms_norm(k, p["k_norm"])
+    return q, k, v
+
+
+def _out_proj(p, o):
+    y = jnp.einsum("...hk,hkd->...d", o, p["o"])
+    if "ob" in p:
+        y = y + p["ob"].astype(y.dtype)
+    return y
+
+
+def self_attention(cfg: ArchConfig, p: dict, x: jax.Array, *,
+                   positions: jax.Array, causal: bool = True,
+                   window: Optional[int] = None, impl: str = "auto") -> jax.Array:
+    """Full-sequence self attention (train / prefill / encoder)."""
+    q, k, v = _proj_qkv(cfg, p, x)
+    q = rope(q, positions, cfg.rope_theta, cfg.rope_fraction)
+    k = rope(k, positions, cfg.rope_theta, cfg.rope_fraction)
+    q = shard(q, "batch", "res_seq", "heads", "head_dim")
+    k = shard(k, "batch", "res_seq", "kv_heads", "head_dim")
+    from repro.kernels import ops
+    o = ops.flash_attention(q, k, v, causal=causal, window=window, impl=impl)
+    o = shard(o, "batch", "res_seq", "heads", "head_dim")
+    return _out_proj(p, o)
+
+
+def make_kv_cache_specs(cfg: ArchConfig, batch: int, max_len: int,
+                        window: Optional[int] = None) -> dict:
+    """Cache specs for one attention position.  SWA layers get a ring buffer."""
+    kv, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+    size = min(max_len, window) if window else max_len
+    return {
+        "k": Spec((batch, size, kv, hd), ("batch", "kv_seq", "kv_heads", "head_dim"), jnp.bfloat16, "zeros"),
+        "v": Spec((batch, size, kv, hd), ("batch", "kv_seq", "kv_heads", "head_dim"), jnp.bfloat16, "zeros"),
+        # absolute position held by each slot (-1 = empty); ring for SWA
+        "pos": Spec((batch, size), ("batch", "kv_seq"), jnp.int32, "constant", -1),
+    }
+
+
+def decode_self_attention(cfg: ArchConfig, p: dict, x: jax.Array, cache: dict, *,
+                          positions: jax.Array, lengths: jax.Array,
+                          window: Optional[int] = None, impl: str = "auto"):
+    """One-token decode with cache update.  x: (B, D); positions: (B,)."""
+    b = x.shape[0]
+    q, k, v = _proj_qkv(cfg, p, x[:, None, :])          # (B,1,H,hd)
+    q = rope(q, positions[:, None], cfg.rope_theta, cfg.rope_fraction)[:, 0]
+    k = rope(k, positions[:, None], cfg.rope_theta, cfg.rope_fraction)[:, 0]
+    v = v[:, 0]
+    size = cache["k"].shape[1]
+    slot = positions % size                              # ring for SWA, id for full
+    bidx = jnp.arange(b)
+    new_k = cache["k"].at[bidx, slot].set(k.astype(cache["k"].dtype))
+    new_v = cache["v"].at[bidx, slot].set(v.astype(cache["v"].dtype))
+    new_pos = cache["pos"].at[bidx, slot].set(positions)
+    new_k = shard(new_k, "batch", "kv_seq", "kv_heads", "head_dim")
+    new_v = shard(new_v, "batch", "kv_seq", "kv_heads", "head_dim")
+    from repro.kernels import ops
+    o = ops.decode_attention(q, new_k, new_v, lengths=lengths,
+                             key_positions=new_pos, q_pos=positions,
+                             window=window, impl=impl)
+    new_cache = {"k": new_k, "v": new_v, "pos": new_pos}
+    return _out_proj(p, o), new_cache
+
+
+def cross_kv(p: dict, enc_out: jax.Array):
+    """Project encoder output to cross-attention K/V. enc_out: (B,T,D)."""
+    k = jnp.einsum("btd,dhk->bthk", enc_out, p["k"])
+    v = jnp.einsum("btd,dhk->bthk", enc_out, p["v"])
+    if "kb" in p:
+        k, v = k + p["kb"].astype(k.dtype), v + p["vb"].astype(v.dtype)
+    return k, v
+
+
+def cross_attention_seq(cfg: ArchConfig, p: dict, x: jax.Array,
+                        enc_out: jax.Array, impl: str = "auto"):
+    """Decoder cross-attention (full dec sequence) over encoder output."""
+    q = jnp.einsum("...d,dhk->...hk", x, p["q"])
+    if "qb" in p:
+        q = q + p["qb"].astype(q.dtype)
+    k, v = cross_kv(p, enc_out)
+    from repro.kernels import ops
+    o = ops.flash_attention(q, k, v, causal=False, impl=impl)
+    return _out_proj(p, o)
+
+
+def cross_attention_decode(cfg: ArchConfig, p: dict, x: jax.Array, ek, ev,
+                           enc_lengths: jax.Array, impl: str = "auto"):
+    """Single-token cross-attention over cached encoder K/V. x: (B,D)."""
+    q = jnp.einsum("bd,dhk->bhk", x, p["q"])
+    if "qb" in p:
+        q = q + p["qb"].astype(q.dtype)
+    from repro.kernels import ops
+    o = ops.decode_attention(q, ek, ev, lengths=enc_lengths, impl=impl)
+    return _out_proj(p, o)

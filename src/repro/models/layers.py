@@ -1,0 +1,128 @@
+"""Shared layer primitives: norms, MLPs, RoPE, embeddings.
+
+Pure functions over param dicts.  Matmuls run in the params' dtype (bf16)
+with fp32 accumulation where it matters (attention logits, softmax, norms).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.distributed.sharding import shard
+from repro.models.param import Spec
+
+F32 = jnp.float32
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+def norm_specs(cfg: ArchConfig, d: Optional[int] = None) -> dict:
+    d = d or cfg.d_model
+    out = {"scale": Spec((d,), ("embed",), jnp.float32, "ones")}
+    if cfg.norm == "layernorm":
+        out["bias"] = Spec((d,), ("embed",), jnp.float32, "zeros")
+    return out
+
+
+def apply_norm(cfg: ArchConfig, p: dict, x: jax.Array) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(F32)
+    if cfg.norm == "layernorm":
+        x = x - jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + 1e-6) * p["scale"]
+    if cfg.norm == "layernorm":
+        x = x + p["bias"]
+    return x.astype(dt)
+
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(F32)
+    x = x * jax.lax.rsqrt(jnp.mean(jnp.square(x), axis=-1, keepdims=True) + eps)
+    return (x * scale).astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# MLP (gated SwiGLU/GeGLU or plain)
+# ---------------------------------------------------------------------------
+def mlp_specs(cfg: ArchConfig, d_ff: Optional[int] = None) -> dict:
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    out = {"wo": Spec((f, d), ("mlp", "embed"))}
+    if cfg.glu:
+        out["wi_0"] = Spec((d, f), ("embed", "mlp"))
+        out["wi_1"] = Spec((d, f), ("embed", "mlp"))
+    else:
+        out["wi_0"] = Spec((d, f), ("embed", "mlp"))
+    if cfg.use_bias:
+        out["bi"] = Spec((f,), ("mlp",), jnp.float32, "zeros")
+        out["bo"] = Spec((d,), ("embed",), jnp.float32, "zeros")
+    return out
+
+
+def _act(cfg: ArchConfig, x):
+    return jax.nn.silu(x) if cfg.act == "silu" else jax.nn.gelu(x)
+
+
+def apply_mlp(cfg: ArchConfig, p: dict, x: jax.Array) -> jax.Array:
+    h = jnp.einsum("...d,df->...f", x, p["wi_0"])
+    if "bi" in p:
+        h = h + p["bi"].astype(h.dtype)
+    h = _act(cfg, h)
+    if cfg.glu:
+        h = h * jnp.einsum("...d,df->...f", x, p["wi_1"])
+    h = shard(h, *(("batch", "res_seq", "mlp") if h.ndim == 3 else ("batch", "mlp")))
+    o = jnp.einsum("...f,fd->...d", h, p["wo"])
+    if "bo" in p:
+        o = o + p["bo"].astype(o.dtype)
+    return o
+
+
+# ---------------------------------------------------------------------------
+# RoPE (partial-rotary aware)
+# ---------------------------------------------------------------------------
+def rope(x: jax.Array, positions: jax.Array, theta: float, fraction: float = 1.0) -> jax.Array:
+    """x: (..., S, H, D); positions: broadcastable to (..., S)."""
+    d = x.shape[-1]
+    rot = int(d * fraction)
+    rot -= rot % 2
+    if rot == 0:
+        return x
+    xr, xp = x[..., :rot], x[..., rot:]
+    half = rot // 2
+    freq = theta ** (-jnp.arange(0, half, dtype=F32) / half)
+    ang = positions[..., None].astype(F32) * freq            # (..., S, half)
+    cos, sin = jnp.cos(ang)[..., None, :], jnp.sin(ang)[..., None, :]
+    x1, x2 = xr[..., :half].astype(F32), xr[..., half:].astype(F32)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return jnp.concatenate([out.astype(x.dtype), xp], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# Embedding / unembedding
+# ---------------------------------------------------------------------------
+def embed_specs(cfg: ArchConfig) -> dict:
+    out = {"tokens": Spec((cfg.vocab_size, cfg.d_model), ("vocab", "embed"), scale=1.0)}
+    return out
+
+
+def embed_tokens(cfg: ArchConfig, p: dict, tokens: jax.Array) -> jax.Array:
+    x = jnp.take(p["tokens"], tokens, axis=0)
+    if cfg.name.startswith("gemma"):
+        x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
+    axes = ("batch", "seq", "embed") if x.ndim == 3 else ("batch", "embed")
+    return shard(x, *axes)
+
+
+def unembed(cfg: ArchConfig, params: dict, x: jax.Array) -> jax.Array:
+    kern = params["embed"]["tokens"] if cfg.tie_embeddings else params["unembed"]["kernel"]
+    logits = jnp.einsum("...d,vd->...v", x, kern)
+    if cfg.attn_logit_softcap:  # gemma-style final softcap reuse
+        c = cfg.attn_logit_softcap
+        logits = jnp.tanh(logits / c) * c
+    axes = ("batch", "seq", "vocab") if logits.ndim == 3 else ("batch", "vocab")
+    return shard(logits, *axes)

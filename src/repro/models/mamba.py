@@ -1,0 +1,134 @@
+"""Mamba-2 (SSD) mixer block.
+
+Projections are split per component (z/x/B/C/dt) rather than one fused
+in_proj so each shards cleanly (heads/d_inner on "model").  The SSD core is
+``repro.kernels.ops.ssd_scan`` (chunked: intra-chunk quadratic on the MXU,
+inter-chunk state scan) with a pure-jnp reference and a naive per-timestep
+oracle.  Decode is the O(1) recurrent update.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.distributed.sharding import shard
+from repro.models.param import Spec
+
+F32 = jnp.float32
+G = 1  # B/C groups (single group = multi-value-attention analogue)
+
+
+def _dims(cfg: ArchConfig):
+    m = cfg.mamba
+    d_inner = m.d_inner(cfg.d_model)
+    n_heads = m.n_heads(cfg.d_model)
+    return m, d_inner, n_heads, m.head_dim, m.d_state
+
+
+def mamba_specs(cfg: ArchConfig) -> dict:
+    m, di, h, p_, n = _dims(cfg)
+    d = cfg.d_model
+    return {
+        "wz": Spec((d, di), ("embed", "mamba_inner")),
+        "wx": Spec((d, di), ("embed", "mamba_inner")),
+        "wB": Spec((d, G, n), ("embed", None, "mamba_state")),
+        "wC": Spec((d, G, n), ("embed", None, "mamba_state")),
+        "wdt": Spec((d, h), ("embed", "mamba_heads")),
+        "conv_x": Spec((m.d_conv, di), (None, "mamba_inner"), jnp.bfloat16, "normal", 0.2),
+        "conv_B": Spec((m.d_conv, G * n), (None, None), jnp.bfloat16, "normal", 0.2),
+        "conv_C": Spec((m.d_conv, G * n), (None, None), jnp.bfloat16, "normal", 0.2),
+        "conv_bx": Spec((di,), ("mamba_inner",), jnp.float32, "zeros"),
+        "conv_bB": Spec((G * n,), (None,), jnp.float32, "zeros"),
+        "conv_bC": Spec((G * n,), (None,), jnp.float32, "zeros"),
+        "A_log": Spec((h,), ("mamba_heads",), jnp.float32, "constant", 1.386),
+        "dt_bias": Spec((h,), ("mamba_heads",), jnp.float32, "constant", -4.6),
+        "D": Spec((h,), ("mamba_heads",), jnp.float32, "ones"),
+        "gate_norm": Spec((di,), ("mamba_inner",), jnp.float32, "ones"),
+        "wo": Spec((di, d), ("mamba_inner", "embed")),
+    }
+
+
+def mamba_cache_specs(cfg: ArchConfig, batch: int) -> dict:
+    m, di, h, p_, n = _dims(cfg)
+    return {
+        "h": Spec((batch, h, p_, n), ("batch", "mamba_heads", None, None), jnp.float32, "zeros"),
+        "conv_x": Spec((batch, m.d_conv - 1, di), ("batch", None, "mamba_inner"), jnp.bfloat16, "zeros"),
+        "conv_B": Spec((batch, m.d_conv - 1, G * n), ("batch", None, None), jnp.bfloat16, "zeros"),
+        "conv_C": Spec((batch, m.d_conv - 1, G * n), ("batch", None, None), jnp.bfloat16, "zeros"),
+    }
+
+
+def _causal_conv(x, w, b):
+    """Depthwise causal conv.  x: (B,S,C); w: (K,C)."""
+    k = w.shape[0]
+    pad = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    out = sum(pad[:, i : i + x.shape[1], :] * w[i] for i in range(k))
+    return jax.nn.silu(out + b.astype(out.dtype))
+
+
+def _conv_step(cache, xt, w, b):
+    """Single-token conv: cache (B,K-1,C), xt (B,C) -> (out, new_cache)."""
+    window = jnp.concatenate([cache, xt[:, None, :]], axis=1)   # (B,K,C)
+    out = jnp.einsum("bkc,kc->bc", window.astype(F32), w.astype(F32))
+    return jax.nn.silu(out + b).astype(xt.dtype), window[:, 1:, :]
+
+
+def _project(cfg, p, u):
+    z = jnp.einsum("...d,di->...i", u, p["wz"])
+    x = jnp.einsum("...d,di->...i", u, p["wx"])
+    Bm = jnp.einsum("...d,dgn->...gn", u, p["wB"])
+    Cm = jnp.einsum("...d,dgn->...gn", u, p["wC"])
+    dt = jnp.einsum("...d,dh->...h", u.astype(F32), p["wdt"].astype(F32))
+    return z, x, Bm, Cm, dt
+
+
+def apply_mamba(cfg: ArchConfig, p: dict, u: jax.Array, impl: str = "auto",
+                h0: Optional[jax.Array] = None):
+    """Full-sequence SSD.  u: (B,S,D) -> (B,S,D)."""
+    m, di, h, pd, n = _dims(cfg)
+    b, s, _ = u.shape
+    z, x, Bm, Cm, dt = _project(cfg, p, u)
+    x = _causal_conv(x, p["conv_x"], p["conv_bx"])
+    Bm = _causal_conv(Bm.reshape(b, s, G * n), p["conv_B"], p["conv_bB"]).reshape(b, s, G, n)
+    Cm = _causal_conv(Cm.reshape(b, s, G * n), p["conv_C"], p["conv_bC"]).reshape(b, s, G, n)
+    dt = jax.nn.softplus(dt + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+    xh = x.reshape(b, s, h, pd)
+    xh = shard(xh, "batch", "res_seq", "mamba_heads", None)
+    from repro.kernels import ops
+    y, _ = ops.ssd_scan(xh, dt, A, Bm, Cm, chunk=m.chunk, impl=impl)
+    y = y + xh.astype(F32) * p["D"][:, None]
+    y = y.reshape(b, s, di).astype(u.dtype)
+    y = y * jax.nn.silu(z)
+    from repro.models.layers import rms_norm
+    y = rms_norm(y, p["gate_norm"])
+    return jnp.einsum("...i,id->...d", y, p["wo"])
+
+
+def decode_mamba(cfg: ArchConfig, p: dict, u: jax.Array, cache: dict):
+    """One-token recurrent step.  u: (B,D)."""
+    m, di, h, pd, n = _dims(cfg)
+    b = u.shape[0]
+    z, x, Bm, Cm, dt = _project(cfg, p, u)
+    x, cx = _conv_step(cache["conv_x"], x, p["conv_x"], p["conv_bx"])
+    Bf, cB = _conv_step(cache["conv_B"], Bm.reshape(b, G * n), p["conv_B"], p["conv_bB"])
+    Cf, cC = _conv_step(cache["conv_C"], Cm.reshape(b, G * n), p["conv_C"], p["conv_bC"])
+    Bf, Cf = Bf.reshape(b, G, n), Cf.reshape(b, G, n)
+    dt = jax.nn.softplus(dt + p["dt_bias"])                    # (B,H)
+    A = -jnp.exp(p["A_log"])
+    decay = jnp.exp(A * dt)                                    # (B,H)
+    xh = x.reshape(b, h, pd).astype(F32)
+    # h_new = decay*h + dt * B ⊗ x    (G=1 group broadcast over heads)
+    hb = cache["h"] * decay[..., None, None]
+    upd = jnp.einsum("bh,bhp,bn->bhpn", dt, xh, Bf[:, 0, :].astype(F32))
+    hn = hb + upd
+    y = jnp.einsum("bhpn,bn->bhp", hn, Cf[:, 0, :].astype(F32))
+    y = y + xh * p["D"][:, None]
+    y = y.reshape(b, di).astype(u.dtype) * jax.nn.silu(z)
+    from repro.models.layers import rms_norm
+    y = rms_norm(y, p["gate_norm"])
+    out = jnp.einsum("bi,id->bd", y, p["wo"])
+    return out, {"h": hn, "conv_x": cx, "conv_B": cB, "conv_C": cC}

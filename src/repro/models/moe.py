@@ -1,0 +1,148 @@
+"""Mixture-of-Experts FFN.
+
+Two interchangeable implementations (config/env selectable, allclose-tested
+against each other under generous capacity):
+
+  * ``dispatch`` — Mesh-TF style capacity-bounded one-hot dispatch einsums.
+    Shards cleanly under GSPMD (experts on "model" when divisible, else
+    per-expert d_ff TP) and yields true HLO FLOPs for the roofline.
+  * ``dense``    — every expert on every token, masked combine.  Exact;
+    used as the oracle and for tiny smoke configs.
+
+deepseek-style shared experts are a fused dense MLP alongside the routed path.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, MoEConfig
+from repro.distributed.sharding import shard
+from repro.models.layers import _act
+from repro.models.param import Spec
+
+F32 = jnp.float32
+
+
+def moe_specs(cfg: ArchConfig) -> dict:
+    from repro.util import opt_flags
+    moe = cfg.moe
+    d = cfg.d_model
+    fe = moe.expert_d_ff or cfg.d_ff
+    e = moe.num_experts
+    # serving opt "w8_experts": weight-only int8 expert banks (dequant at
+    # use) — halves storage vs bf16 and cuts FSDP gather bytes 4x vs the
+    # f32 gathers XLA otherwise emits.
+    wdt = jnp.int8 if "w8_experts" in opt_flags() else jnp.bfloat16
+    # greedy rules resolve the strategy: expert dim takes "model" when it
+    # divides (deepseek 64e, jamba 16e = EP); else per-expert d_ff TP
+    # (mixtral 8e); expert_embed always FSDPs on "data".
+    out = {
+        "router": Spec((d, e), ("embed", "expert"), jnp.float32),
+        "wi_0": Spec((e, d, fe), ("expert", "expert_embed", "expert_mlp"), wdt),
+        "wi_1": Spec((e, d, fe), ("expert", "expert_embed", "expert_mlp"), wdt),
+        "wo": Spec((e, fe, d), ("expert", "expert_mlp", "expert_embed"), wdt),
+    }
+    if wdt == jnp.int8:
+        out["wi_0_scale"] = Spec((e,), ("expert",), jnp.float32, "ones")
+        out["wi_1_scale"] = Spec((e,), ("expert",), jnp.float32, "ones")
+        out["wo_scale"] = Spec((e,), ("expert",), jnp.float32, "ones")
+    if moe.num_shared_experts:
+        fs = fe * moe.num_shared_experts
+        out["shared"] = {
+            "wi_0": Spec((d, fs), ("embed", "mlp")),
+            "wi_1": Spec((d, fs), ("embed", "mlp")),
+            "wo": Spec((fs, d), ("mlp", "embed")),
+        }
+    return out
+
+
+def _router(cfg: ArchConfig, p: dict, x: jax.Array):
+    """x: (..., d) -> top-k indices (..., k) and fp32 weights (..., k)."""
+    moe = cfg.moe
+    logits = jnp.einsum("...d,de->...e", x.astype(F32), p["router"])
+    probs = jax.nn.softmax(logits, axis=-1)
+    w, idx = jax.lax.top_k(probs, moe.top_k)
+    w = w / jnp.clip(jnp.sum(w, axis=-1, keepdims=True), 1e-9)
+    return idx, w, probs
+
+
+def _dq(p, name):
+    """Dequantize int8 expert weights at use (no-op for bf16).
+
+    The replication constraint sits on the *int8* tensor so the SPMD
+    partitioner must move the quantized bits (4x fewer than the f32
+    gathers it otherwise emits) and dequantize after the collective.
+    """
+    w = p[name]
+    if w.dtype == jnp.int8:
+        # gather the FSDP'd embed dim in int8; keep the d_ff TP shard
+        axes = (None, "expert_mlp", None) if name == "wo" else (None, None, "expert_mlp")
+        w = shard(w, *axes)
+        scale = p[name + "_scale"] * (1.0 / 127.0)
+        return (w.astype(jnp.bfloat16)
+                * scale.astype(jnp.bfloat16)[:, None, None])
+    return w
+
+
+def _expert_ffn(cfg, p, xe):
+    """xe: (..., e, c, d) dispatched tokens -> expert MLP output."""
+    h0 = jnp.einsum("...ecd,edf->...ecf", xe, _dq(p, "wi_0"))
+    h1 = jnp.einsum("...ecd,edf->...ecf", xe, _dq(p, "wi_1"))
+    h = _act(cfg, h0) * h1
+    h = shard(h, "batch", "expert", None, "expert_mlp")
+    return jnp.einsum("...ecf,efd->...ecd", h, _dq(p, "wo"))
+
+
+def apply_moe(cfg: ArchConfig, p: dict, x: jax.Array, impl: str = "dispatch") -> jax.Array:
+    """x: (B, S, d) or (B, d). Returns same shape."""
+    moe = cfg.moe
+    squeezed = x.ndim == 2
+    if squeezed:
+        x = x[:, None, :]
+    b, s, d = x.shape
+    idx, w, probs = _router(cfg, p, x)                  # (b,s,k)
+
+    if impl == "dense":
+        onehot = jax.nn.one_hot(idx, moe.num_experts, dtype=F32)   # (b,s,k,e)
+        comb = jnp.einsum("bske,bsk->bse", onehot, w)              # (b,s,e)
+        h0 = jnp.einsum("bsd,edf->bsef", x, _dq(p, "wi_0"))
+        h1 = jnp.einsum("bsd,edf->bsef", x, _dq(p, "wi_1"))
+        h = _act(cfg, h0) * h1
+        y = jnp.einsum("bsef,efd->bsed", h, _dq(p, "wo"))
+        out = jnp.einsum("bsed,bse->bsd", y.astype(F32), comb).astype(x.dtype)
+    else:
+        e = moe.num_experts
+        cap = max(1, int(moe.top_k * s * moe.capacity_factor / e))
+        # position of each (token, expert) assignment within the expert queue
+        sel = jax.nn.one_hot(idx, e, dtype=jnp.int32)              # (b,s,k,e)
+        pos_in_e = jnp.cumsum(sel.reshape(b, s * moe.top_k, e), axis=1)
+        pos_in_e = pos_in_e.reshape(b, s, moe.top_k, e) - 1        # 0-based
+        keep = (pos_in_e < cap) & (sel > 0)
+        slot = jax.nn.one_hot(jnp.clip(pos_in_e, 0, cap - 1), cap, dtype=F32)
+        disp = jnp.einsum("bske,bskec->bsec", (sel * keep).astype(F32), slot)
+        comb = jnp.einsum("bsec,bsk,bske->bsec", disp, w, (sel * keep).astype(F32))
+        xe = jnp.einsum("bsec,bsd->becd", disp.astype(x.dtype), x)
+        xe = shard(xe, "batch", "expert", None, None)
+        y = _expert_ffn(cfg, p, xe)                                 # (b,e,c,d)
+        out = jnp.einsum("bsec,becd->bsd", comb.astype(x.dtype), y)
+
+    if moe.num_shared_experts:
+        sp = p["shared"]
+        h = _act(cfg, jnp.einsum("bsd,df->bsf", x, sp["wi_0"]))
+        h = h * jnp.einsum("bsd,df->bsf", x, sp["wi_1"])
+        out = out + jnp.einsum("bsf,fd->bsd", h, sp["wo"])
+
+    out = shard(out, "batch", "res_seq", "embed")
+    return out[:, 0, :] if squeezed else out
+
+
+def aux_load_balance_loss(cfg: ArchConfig, probs: jax.Array, idx: jax.Array) -> jax.Array:
+    """Switch-style auxiliary loss (exposed for training)."""
+    e = cfg.moe.num_experts
+    onehot = jax.nn.one_hot(idx[..., 0], e, dtype=F32)
+    frac_tokens = jnp.mean(onehot, axis=tuple(range(onehot.ndim - 1)))
+    frac_probs = jnp.mean(probs, axis=tuple(range(probs.ndim - 1)))
+    return e * jnp.sum(frac_tokens * frac_probs)

@@ -1,0 +1,99 @@
+"""Parameter spec trees.
+
+A model is described by a nested dict of ``Spec`` leaves — the single source
+of truth for shape, dtype, logical sharding axes, and initializer.  From the
+same tree we derive:
+
+  * ``init_tree``      — materialized params (smoke tests, examples)
+  * ``abstract_tree``  — ShapeDtypeStructs (dry-run lowering: zero allocation)
+  * ``axes_tree``      — logical-axis tuples (sharding rules -> NamedSharding)
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclass(frozen=True)
+class Spec:
+    shape: tuple
+    axes: tuple                      # logical axis name (or None) per dim
+    dtype: Any = jnp.bfloat16
+    init: str = "normal"             # normal | zeros | ones | constant
+    scale: Optional[float] = None    # stddev for normal / value for constant
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def is_spec(x) -> bool:
+    return isinstance(x, Spec)
+
+
+def _map(tree, fn):
+    return jax.tree_util.tree_map(fn, tree, is_leaf=is_spec)
+
+
+def abstract_tree(tree):
+    return _map(tree, lambda s: jax.ShapeDtypeStruct(s.shape, s.dtype))
+
+
+class Axes:
+    """Opaque (non-pytree) wrapper for a logical-axes tuple."""
+
+    __slots__ = ("names",)
+
+    def __init__(self, names):
+        self.names = tuple(names)
+
+    def __iter__(self):
+        return iter(self.names)
+
+    def __repr__(self):
+        return f"Axes{self.names}"
+
+
+def axes_tree(tree):
+    return _map(tree, lambda s: Axes(s.axes))
+
+
+def init_tree(tree, key):
+    leaves, treedef = jax.tree_util.tree_flatten(tree, is_leaf=is_spec)
+    keys = jax.random.split(key, max(len(leaves), 1))
+    out = []
+    for s, k in zip(leaves, keys):
+        if s.init == "zeros":
+            v = jnp.zeros(s.shape, s.dtype)
+        elif s.init == "ones":
+            v = jnp.ones(s.shape, s.dtype)
+        elif s.init == "constant":
+            v = jnp.full(s.shape, s.scale, s.dtype)
+        else:
+            fan_in = s.shape[0] if s.shape else 1
+            std = s.scale if s.scale is not None else 1.0 / np.sqrt(max(fan_in, 1))
+            v = (jax.random.normal(k, s.shape, jnp.float32) * std).astype(s.dtype)
+        out.append(v)
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def stack_specs(tree, n: int, axis_name: str = "layer"):
+    """Prepend a stacking dim of size n (scanned layer groups)."""
+    return _map(
+        tree,
+        lambda s: dataclasses.replace(s, shape=(n,) + s.shape, axes=(axis_name,) + s.axes),
+    )
+
+
+def count_params_tree(tree) -> int:
+    leaves = jax.tree_util.tree_leaves(tree, is_leaf=is_spec)
+    return int(sum(int(np.prod(s.shape)) for s in leaves))
+
+
+def tree_bytes(tree) -> int:
+    leaves = jax.tree_util.tree_leaves(tree, is_leaf=is_spec)
+    return int(sum(int(np.prod(s.shape)) * jnp.dtype(s.dtype).itemsize for s in leaves))

@@ -1,0 +1,173 @@
+"""Batched inference engine with continuous batching.
+
+Slot-based: ``max_batch`` sequences decode together; free slots are refilled
+by prefilling queued prompts (prompt lengths are bucket-padded to bound jit
+recompiles).  Step-driven so the TailBench++ harness can drive it in real
+time: each ``step()`` performs one prefill (if a request is waiting and a
+slot is free) or one batched decode step, and returns completion events.
+
+This is the "ModelBackend" service the paper's clients hit; per-request
+latency decomposes into queue wait (admission) + service (prefill+decode).
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ATTN_SWA, MAMBA, ArchConfig
+from repro.models import param as P
+from repro.models import registry as R
+
+
+@dataclass
+class Request:
+    req_id: int
+    prompt: np.ndarray             # (L,) int32
+    max_new_tokens: int
+    submitted_at: float = 0.0
+    prefilled_at: Optional[float] = None
+    tokens_out: list = field(default_factory=list)
+
+
+@dataclass
+class Completion:
+    req_id: int
+    tokens: list
+    ttft: float                    # time to first token (from submit)
+    latency: float                 # total sojourn
+
+
+def _bucket(n: int, buckets=(32, 64, 128, 256, 512, 1024, 2048, 4096)) -> int:
+    for b in buckets:
+        if n <= b:
+            return b
+    return ((n + 4095) // 4096) * 4096
+
+
+class InferenceEngine:
+    def __init__(self, cfg: ArchConfig, params, *, max_batch: int = 8,
+                 max_len: int = 512, impl: str = "auto",
+                 moe_impl: str = "dispatch", clock: Callable[[], float] = time.monotonic):
+        self.cfg = cfg
+        self.params = params
+        self.max_batch = max_batch
+        self.max_len = max_len
+        self.clock = clock
+        self._impl, self._moe_impl = impl, moe_impl
+        # batched decode cache (leading dims: groups, batch)
+        enc_len = 64 if cfg.enc_dec else None
+        self.cache = P.init_tree(
+            R.cache_specs(cfg, max_batch, max_len, enc_len=enc_len),
+            jax.random.PRNGKey(0))
+        self.positions = jnp.zeros((max_batch,), jnp.int32)
+        self.tokens = jnp.zeros((max_batch,), jnp.int32)
+        self.active: list[Optional[Request]] = [None] * max_batch
+        self.queue: list[Request] = []
+        self._decode = jax.jit(self._decode_impl, donate_argnums=(0,))
+        self._prefills: dict[int, Callable] = {}
+        # mamba state / SWA ring caches need exact-length prefill (no pads)
+        self._exact_prefill = any(k in (MAMBA, ATTN_SWA)
+                                  for k in cfg.resolved_pattern)
+        self.completed: list[Completion] = []
+        self.decode_steps = 0
+        self.prefill_count = 0
+
+    # ------------------------------------------------------------------ api
+    def submit(self, prompt: np.ndarray, max_new_tokens: int, req_id: int):
+        req = Request(req_id, np.asarray(prompt, np.int32), max_new_tokens,
+                      submitted_at=self.clock())
+        self.queue.append(req)
+
+    def pending(self) -> int:
+        return len(self.queue)
+
+    def n_active(self) -> int:
+        return sum(r is not None for r in self.active)
+
+    def idle(self) -> bool:
+        return not self.queue and self.n_active() == 0
+
+    def step(self) -> list[Completion]:
+        """One scheduler iteration. Prefill-priority continuous batching."""
+        done: list[Completion] = []
+        if self.queue and None in self.active:
+            self._admit(self.queue.pop(0), self.active.index(None))
+        elif self.n_active():
+            done = self._decode_once()
+        return done
+
+    def run_until_idle(self, max_steps: int = 100_000) -> list[Completion]:
+        out = []
+        for _ in range(max_steps):
+            if self.idle():
+                break
+            out.extend(self.step())
+        return out
+
+    # ------------------------------------------------------------- internals
+    def _prefill_fn(self, bucket: int):
+        if bucket not in self._prefills:
+            def fn(params, tokens, lengths):
+                return R.prefill(self.cfg, params, {"tokens": tokens},
+                                 self.max_len, impl=self._impl,
+                                 moe_impl=self._moe_impl, lengths=lengths)
+            self._prefills[bucket] = jax.jit(fn)
+        return self._prefills[bucket]
+
+    def _admit(self, req: Request, slot: int):
+        L = len(req.prompt)
+        bucket = L if self._exact_prefill else min(_bucket(L), self.max_len)
+        toks = np.zeros((1, bucket), np.int32)
+        toks[0, :L] = req.prompt           # right-pad; pads masked via positions
+        logits, cache1, pos1 = self._prefill_fn(bucket)(
+            self.params, jnp.asarray(toks), jnp.asarray([L], np.int32))
+        first = int(jnp.argmax(logits[0]))
+        req.tokens_out.append(first)
+        req.prefilled_at = self.clock()
+        self.cache = jax.tree_util.tree_map(
+            lambda c, p: c.at[:, slot].set(p[:, 0].astype(c.dtype)), self.cache, cache1)
+        self.positions = self.positions.at[slot].set(int(pos1[0]))
+        self.tokens = self.tokens.at[slot].set(first)
+        self.active[slot] = req
+        self.prefill_count += 1
+        self._maybe_finish(slot)
+
+    def _decode_impl(self, cache, params, tokens, positions):
+        logits, new_cache = R.decode_step(self.cfg, params, cache, tokens,
+                                          positions, impl=self._impl,
+                                          moe_impl=self._moe_impl)
+        return jnp.argmax(logits, -1).astype(jnp.int32), new_cache
+
+    def _decode_once(self) -> list[Completion]:
+        next_tokens, self.cache = self._decode(self.cache, self.params,
+                                               self.tokens, self.positions)
+        self.positions = self.positions + 1
+        self.tokens = next_tokens
+        self.decode_steps += 1
+        toks = np.asarray(next_tokens)
+        done = []
+        for slot, req in enumerate(self.active):
+            if req is None:
+                continue
+            req.tokens_out.append(int(toks[slot]))
+            c = self._maybe_finish(slot)
+            if c:
+                done.append(c)
+        return done
+
+    def _maybe_finish(self, slot: int) -> Optional[Completion]:
+        req = self.active[slot]
+        if req and len(req.tokens_out) >= req.max_new_tokens:
+            now = self.clock()
+            c = Completion(req.req_id, req.tokens_out,
+                           ttft=req.prefilled_at - req.submitted_at,
+                           latency=now - req.submitted_at)
+            self.completed.append(c)
+            self.active[slot] = None
+            return c
+        return None

@@ -1,0 +1,88 @@
+"""AdamW with memory-frugal moment dtypes (bf16 m / fp32 v by default).
+
+The first moment tolerates bf16 (magnitude tracking); the second moment
+needs fp32 (tiny values squared).  This is what lets jamba-398B training fit
+a single 256-chip v5e pod under FSDP (see EXPERIMENTS.md §Dry-run memory).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+F32 = jnp.float32
+
+
+@dataclass(frozen=True)
+class OptConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    m_dtype: str = "bfloat16"      # bf16 first moment (ZeRO-friendly)
+    v_dtype: str = "float32"
+
+
+def init_opt_state(params, cfg: OptConfig):
+    m = jax.tree_util.tree_map(lambda p: jnp.zeros(p.shape, cfg.m_dtype), params)
+    v = jax.tree_util.tree_map(lambda p: jnp.zeros(p.shape, cfg.v_dtype), params)
+    return {"m": m, "v": v, "step": jnp.zeros((), jnp.int32)}
+
+
+def abstract_opt_state(abstract_params, cfg: OptConfig):
+    m = jax.tree_util.tree_map(
+        lambda p: jax.ShapeDtypeStruct(p.shape, jnp.dtype(cfg.m_dtype)), abstract_params)
+    v = jax.tree_util.tree_map(
+        lambda p: jax.ShapeDtypeStruct(p.shape, jnp.dtype(cfg.v_dtype)), abstract_params)
+    return {"m": m, "v": v, "step": jax.ShapeDtypeStruct((), jnp.int32)}
+
+
+def lr_at(cfg: OptConfig, step):
+    step = step.astype(F32)
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    prog = jnp.clip((step - cfg.warmup_steps)
+                    / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+    cos = 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return cfg.lr * warm * (0.1 + 0.9 * cos)
+
+
+def global_norm(tree):
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(F32))) for l in leaves))
+
+
+def adamw_update(params, grads, opt_state, cfg: OptConfig):
+    """-> (new_params, new_opt_state, metrics)."""
+    step = opt_state["step"] + 1
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gnorm, 1e-9))
+    lr = lr_at(cfg, step)
+    b1, b2 = cfg.b1, cfg.b2
+    bc1 = 1 - b1 ** step.astype(F32)
+    bc2 = 1 - b2 ** step.astype(F32)
+
+    def upd(p, g, m, v):
+        g = g.astype(F32) * scale
+        m_new = b1 * m.astype(F32) + (1 - b1) * g
+        v_new = b2 * v.astype(F32) + (1 - b2) * jnp.square(g)
+        mhat = m_new / bc1
+        vhat = v_new / bc2
+        delta = mhat / (jnp.sqrt(vhat) + cfg.eps) + cfg.weight_decay * p.astype(F32)
+        p_new = p.astype(F32) - lr * delta
+        return p_new.astype(p.dtype), m_new.astype(m.dtype), v_new.astype(v.dtype)
+
+    out = jax.tree_util.tree_map(upd, params, grads, opt_state["m"], opt_state["v"])
+    new_params = jax.tree_util.tree_map(lambda t: t[0], out,
+                                        is_leaf=lambda x: isinstance(x, tuple))
+    new_m = jax.tree_util.tree_map(lambda t: t[1], out,
+                                   is_leaf=lambda x: isinstance(x, tuple))
+    new_v = jax.tree_util.tree_map(lambda t: t[2], out,
+                                   is_leaf=lambda x: isinstance(x, tuple))
+    metrics = {"grad_norm": gnorm, "lr": lr}
+    return new_params, {"m": new_m, "v": new_v, "step": step}, metrics

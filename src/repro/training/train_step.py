@@ -1,0 +1,108 @@
+"""Training step: chunked cross-entropy + grad accumulation + AdamW.
+
+The unembed+softmax is scanned over sequence chunks so the (B,S,V) logits
+tensor is never materialized (gemma3's 262k vocab would otherwise dominate
+activation memory).  Gradient accumulation scans microbatches with fp32
+grad accumulators.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.distributed.sharding import shard
+from repro.models import registry as R
+from repro.training.optimizer import OptConfig, adamw_update
+
+F32 = jnp.float32
+
+
+def chunked_ce_loss(cfg: ArchConfig, params: dict, hidden: jax.Array,
+                    targets: jax.Array, chunk: int = 512):
+    """hidden: (B,S,D); targets: (B,S) with -1 = masked. -> (loss, metrics)."""
+    from repro.util import cost_mode
+    b, s, d = hidden.shape
+    if cost_mode():
+        chunk = s
+    chunk = min(chunk, s)
+    assert s % chunk == 0, (s, chunk)
+    n = s // chunk
+    hs = hidden.reshape(b, n, chunk, d).transpose(1, 0, 2, 3)
+    ts = targets.reshape(b, n, chunk).transpose(1, 0, 2)
+
+    @jax.checkpoint
+    def body(carry, args):
+        h, t = args
+        from repro.models.layers import unembed
+        logits = unembed(cfg, params, h).astype(F32)          # (B,chunk,V)
+        mask = (t >= 0).astype(F32)
+        tc = jnp.maximum(t, 0)
+        lse = jax.scipy.special.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, tc[..., None], axis=-1)[..., 0]
+        ce = (lse - gold) * mask
+        correct = (jnp.argmax(logits, -1) == tc).astype(F32) * mask
+        loss_sum, mask_sum, acc_sum = carry
+        return (loss_sum + ce.sum(), mask_sum + mask.sum(),
+                acc_sum + correct.sum()), None
+
+    (loss_sum, mask_sum, acc_sum), _ = jax.lax.scan(
+        body, (jnp.zeros(()), jnp.zeros(()), jnp.zeros(())), (hs, ts))
+    denom = jnp.maximum(mask_sum, 1.0)
+    return loss_sum / denom, {"acc": acc_sum / denom, "tokens": mask_sum}
+
+
+def make_loss_fn(cfg: ArchConfig, *, impl: str = "auto",
+                 moe_impl: str = "dispatch", remat: bool = True):
+    def loss_fn(params, batch):
+        hidden = R.lm_hidden(cfg, params, batch, impl=impl, moe_impl=moe_impl,
+                             remat=remat)
+        return chunked_ce_loss(cfg, params, hidden, batch["targets"])
+    return loss_fn
+
+
+def make_train_step(cfg: ArchConfig, opt_cfg: OptConfig, *, impl: str = "auto",
+                    moe_impl: str = "dispatch", remat: bool = True,
+                    microbatches: int = 1):
+    """Returns train_step(params, opt_state, batch) -> (params, opt, metrics).
+
+    batch leading dim = global batch; with microbatches>1 it is split and
+    grads are accumulated in fp32 (overlap-friendly: each microbatch's
+    reduce-scatter pipelines with the next microbatch's compute under XLA).
+    """
+    loss_fn = make_loss_fn(cfg, impl=impl, moe_impl=moe_impl, remat=remat)
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def single(params, batch):
+        (loss, metrics), grads = grad_fn(params, batch)
+        return loss, metrics, grads
+
+    def train_step(params, opt_state, batch):
+        if microbatches == 1:
+            loss, metrics, grads = single(params, batch)
+        else:
+            k = microbatches
+            mb = jax.tree_util.tree_map(
+                lambda x: x.reshape((k, x.shape[0] // k) + x.shape[1:]), batch)
+
+            def body(carry, b_i):
+                loss_a, grads_a = carry
+                loss, metrics, grads = single(params, b_i)
+                grads_a = jax.tree_util.tree_map(
+                    lambda a, g: a + g.astype(F32) / k, grads_a, grads)
+                return (loss_a + loss / k, grads_a), metrics
+
+            zeros = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, F32), params)
+            (loss, grads_f32), metrics = jax.lax.scan(body, (jnp.zeros(()), zeros), mb)
+            metrics = jax.tree_util.tree_map(lambda m: m[-1], metrics)
+            grads = jax.tree_util.tree_map(
+                lambda g, p: g.astype(p.dtype), grads_f32, params)
+        params, opt_state, opt_metrics = adamw_update(params, grads, opt_state, opt_cfg)
+        metrics = dict(metrics, loss=loss, **opt_metrics)
+        return params, opt_state, metrics
+
+    return train_step

@@ -1,0 +1,14 @@
+"""Small shared utilities."""
+import os
+
+
+def cost_mode() -> bool:
+    """Dry-run cost lowering: unroll scans so HLO FLOPs reflect true trip
+    counts (XLA cost analysis counts while-loop bodies once)."""
+    return os.environ.get("REPRO_COST_MODE", "0") == "1"
+
+
+def opt_flags() -> set:
+    """Named perf optimizations for §Perf experiments (REPRO_OPTS=a,b,c)."""
+    v = os.environ.get("REPRO_OPTS", "")
+    return {x.strip() for x in v.split(",") if x.strip()}

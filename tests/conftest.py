@@ -1,0 +1,18 @@
+import os
+
+# Smoke tests / benches see exactly ONE device (the dry-run sets its own
+# placeholder-device flag in its own process — never here).
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import jax  # noqa: E402
+import numpy as np  # noqa: E402
+import pytest  # noqa: E402
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)
+
+
+def pytest_configure(config):
+    config.addinivalue_line("markers", "slow: long-running integration test")

@@ -1,0 +1,187 @@
+"""TailBench++ harness semantics: the paper's four features + baselines."""
+import numpy as np
+import pytest
+
+from repro.core.balancer import POLICIES
+from repro.core.client import (ClientConfig, ConstantQPS, DiurnalQPS,
+                               PiecewiseQPS, TraceQPS)
+from repro.core.harness import Experiment, ServerSpec, build_simulator, run, run_repeated
+from repro.core.legacy import legacy_experiment, plusplus_equivalent
+from repro.core.profiles import TAILBENCH_APPS, tailbench_profile
+from repro.core.stats import Summary, welch_ttest
+
+
+def test_feature1_unconstrained_clients():
+    """Clients joining mid-run are served (original TailBench rejects them)."""
+    clients = [ClientConfig(0, ConstantQPS(50), start_time=0.0),
+               ClientConfig(1, ConstantQPS(50), start_time=5.0),
+               ClientConfig(2, ConstantQPS(50), start_time=10.0)]
+    sim = run(Experiment(clients=clients, duration=15.0, app="xapian", seed=3))
+    assert set(sim.recorder.clients()) == {0, 1, 2}
+    assert sim.dropped == 0
+    # legacy mode (server expects 1 client): 1,2 arrive after start -> rejected
+    sim_l = run(Experiment(clients=clients, duration=15.0, app="xapian",
+                           seed=3, legacy_mode=True, legacy_expected_clients=1))
+    assert 0 in sim_l.recorder.clients()
+    assert sim_l.completed_per_client.get(1, 0) == 0
+    assert sim_l.dropped >= 2
+
+
+def test_feature2_persistent_server():
+    """Server survives an idle gap and serves a late client."""
+    clients = [ClientConfig(0, ConstantQPS(100), start_time=0.0, total_requests=50),
+               ClientConfig(1, ConstantQPS(100), start_time=20.0, total_requests=50)]
+    sim = run(Experiment(clients=clients, duration=40.0, app="masstree"))
+    assert sim.completed_per_client.get(0) == 50
+    assert sim.completed_per_client.get(1) == 50
+
+
+def test_feature2_legacy_server_terminates():
+    """Legacy: once the initial clients drain, later requests are dropped."""
+    clients = [ClientConfig(0, ConstantQPS(100), start_time=0.0, total_requests=20),
+               ClientConfig(1, ConstantQPS(100), start_time=10.0, total_requests=50)]
+    sim = run(Experiment(clients=clients, duration=40.0, app="masstree",
+                         legacy_mode=True, legacy_requests_per_client=20,
+                         legacy_expected_clients=1))
+    # client 1 tried to join after start -> dropped connection
+    assert sim.completed_per_client.get(1, 0) == 0
+    assert sim.dropped >= 1
+
+
+def test_feature3_independent_budgets():
+    """Each client runs exactly its own request count (paper Fig. 6 setup)."""
+    clients = [ClientConfig(0, ConstantQPS(200), start_time=0.0, total_requests=1000),
+               ClientConfig(1, ConstantQPS(200), start_time=1.0, total_requests=700),
+               ClientConfig(2, ConstantQPS(200), start_time=2.0, total_requests=500)]
+    sim = run(Experiment(clients=clients, duration=60.0, app="xapian"))
+    assert sim.completed_per_client[0] == 1000
+    assert sim.completed_per_client[1] == 700
+    assert sim.completed_per_client[2] == 500
+
+
+def test_feature4_variable_load():
+    """Piecewise QPS (Table 5): interval latency tracks offered load."""
+    sched = PiecewiseQPS([(0, 100), (10, 800), (20, 100)])
+    sim = run(Experiment(clients=[ClientConfig(0, sched)], duration=30.0,
+                         app="xapian", seed=5))
+    ivls = sim.recorder.intervals()
+    low1 = np.mean([ivls[t].n for t in range(2, 9) if t in ivls])
+    high = np.mean([ivls[t].n for t in range(12, 19) if t in ivls])
+    low2 = np.mean([ivls[t].n for t in range(22, 29) if t in ivls])
+    assert high > 4 * low1                  # ~8x offered load
+    assert abs(low2 - low1) < 0.5 * low1    # returns to baseline
+    # saturation raises p99 in the high window
+    p99_low = np.nanmean([ivls[t].p99 for t in range(2, 9) if t in ivls])
+    p99_high = np.nanmean([ivls[t].p99 for t in range(12, 19) if t in ivls])
+    assert p99_high > p99_low
+
+
+def test_schedules():
+    d = DiurnalQPS(base=100, amplitude=50, period=40)
+    assert d.rate(10) == pytest.approx(150)
+    assert d.rate(30) == pytest.approx(50)
+    t = TraceQPS([10, 20, 30], dt=1.0)
+    assert t.rate(0.5) == 10 and t.rate(1.5) == 20 and t.rate(99) == 30
+    p = PiecewiseQPS([(0, 100), (10, 300)])
+    assert p.rate(9.99) == 100 and p.rate(10.0) == 300
+
+
+def test_legacy_vs_plusplus_equivalence_welch():
+    """Table 4: same workload under both harnesses -> indistinguishable
+    latency distributions across seeded repetitions."""
+    p95_l, p95_p = [], []
+    for rep in range(6):
+        leg = legacy_experiment(3, 100, requests_per_client=1500,
+                                duration=30, seed=100 + rep)
+        p95_l.append(run(leg).recorder.overall().p95)
+        p95_p.append(run(plusplus_equivalent(leg)).recorder.overall().p95)
+    w = welch_ttest(p95_l, p95_p)
+    assert abs(w.t_stat) < 2.0 and w.p_value > 0.05, (w.t_stat, w.p_value)
+
+
+def test_multiserver_lowers_latency():
+    """Fig. 5: two servers beat one for a server-bound app."""
+    def make(n_servers):
+        clients = [ClientConfig(i, ConstantQPS(250), seed=2) for i in range(3)]
+        return Experiment(clients=clients,
+                          servers=tuple(ServerSpec(i) for i in range(n_servers)),
+                          app="xapian", duration=20.0, policy="round_robin")
+    s1 = run(make(1)).recorder.overall()
+    s2 = run(make(2)).recorder.overall()
+    assert s2.p99 < s1.p99
+
+
+def test_load_aware_beats_round_robin_for_heavy_client():
+    """Fig. 8: the 500-QPS client gets a dedicated server under load-aware."""
+    def make(policy, seed):
+        clients = [ClientConfig(1, ConstantQPS(500), seed=seed),
+                   ClientConfig(2, ConstantQPS(200), seed=seed),
+                   ClientConfig(3, ConstantQPS(200), seed=seed)]
+        return Experiment(clients=clients, servers=(ServerSpec(0), ServerSpec(1)),
+                          policy=policy, duration=20.0, app="xapian", seed=seed)
+    # round-robin co-locates c1 with another client; load-aware isolates it
+    worst_rr, worst_la = [], []
+    for seed in (11, 12, 13):
+        rr = run(make("round_robin", seed))
+        la = run(make("load_aware", seed))
+        worst_rr.append(max(rr.recorder.client(c).p99 for c in (1, 2, 3)))
+        worst_la.append(max(la.recorder.client(c).p99 for c in (1, 2, 3)))
+    assert np.mean(worst_la) < np.mean(worst_rr)
+
+
+def test_hedging_cuts_tail():
+    """Beyond paper: hedging exploits *server-side* execution noise
+    (Dean & Barroso); clones are cancelled when their twin starts."""
+    def make(hedge):
+        clients = [ClientConfig(i, ConstantQPS(40), seed=4) for i in range(4)]
+        servers = (ServerSpec(0, service_noise=1.0),
+                   ServerSpec(1, service_noise=1.0),
+                   ServerSpec(2, service_noise=1.0))
+        return Experiment(clients=clients, servers=servers,
+                          app="xapian", duration=30.0, policy="jsq",
+                          hedge_delay=0.01 if hedge else None, seed=4)
+    base = run(make(False)).recorder.overall()
+    hedged = run(make(True)).recorder.overall()
+    assert hedged.p99 < base.p99
+
+
+def test_elastic_server_join():
+    """A server joining mid-run absorbs load (elastic scale-out)."""
+    clients = [ClientConfig(i, ConstantQPS(350), seed=8) for i in range(2)]
+    exp = Experiment(clients=clients,
+                     servers=(ServerSpec(0), ServerSpec(1, join_at=10.0)),
+                     app="xapian", duration=20.0, policy="jsq", seed=8)
+    sim = run(exp)
+    assert sim.servers[1].total_served > 0
+    ivls = sim.recorder.intervals()
+    before = np.nanmean([ivls[t].p99 for t in range(5, 10) if t in ivls])
+    after = np.nanmean([ivls[t].p99 for t in range(14, 19) if t in ivls])
+    assert after < before
+
+
+def test_determinism():
+    clients = [ClientConfig(0, ConstantQPS(200), seed=9)]
+    a = run(Experiment(clients=clients, duration=10.0, seed=9)).recorder.all
+    b = run(Experiment(clients=clients, duration=10.0, seed=9)).recorder.all
+    assert a == b
+
+
+def test_scale_many_servers():
+    """1000 simulated servers, 200 clients — events stay O(log n)."""
+    clients = [ClientConfig(i, ConstantQPS(20), seed=i) for i in range(200)]
+    exp = Experiment(clients=clients,
+                     servers=tuple(ServerSpec(i) for i in range(1000)),
+                     app="masstree", duration=3.0, policy="round_robin")
+    sim = run(exp)
+    assert sim.recorder.overall().n > 5000
+    assert sim.dropped == 0
+
+
+def test_welch_known_values():
+    a = [2.1, 2.0, 1.9, 2.2, 2.05]
+    b = [2.1, 2.0, 1.9, 2.2, 2.05]
+    w = welch_ttest(a, b)
+    assert abs(w.t_stat) < 1e-9 and w.p_value > 0.99
+    c = [5.1, 5.3, 4.9, 5.2, 5.0]
+    w2 = welch_ttest(a, c)
+    assert w2.p_value < 0.001 and w2.significant

