@@ -1,0 +1,190 @@
+"""Event-engine throughput benchmark: calendar-queue engine vs seed heap.
+
+Runs the same open-loop multi-client scenario on the rebuilt engine
+(``repro.core.simulator``) and on a frozen copy of the seed engine
+(``benchmarks/_seed_sim.py``) at 10 / 100 / 1k / 10k servers, targeting
+1M requests, and writes ``BENCH_simulator.json`` at the repo root with
+events/sec and peak RSS per run.
+
+Both engines run with identical exact-mode recorders for the speed
+comparison (equal stats cost); the calendar engine is additionally
+measured with the streaming P²/reservoir recorder to show the bounded-
+memory path.  The seed engine's O(n_servers) per-request scan makes full
+1M-request runs intractable at scale, so its request count is capped per
+scale and throughput compared as a rate (the cap is recorded in the
+JSON).  Each run executes in its own subprocess so peak-RSS figures are
+per-scenario, not cumulative.
+
+Usage:
+    PYTHONPATH=src python benchmarks/bench_simulator.py            # full
+    PYTHONPATH=src python benchmarks/bench_simulator.py --quick
+    PYTHONPATH=src python benchmarks/bench_simulator.py \
+        --single calendar 1000 1000000 exact                       # one run
+"""
+from __future__ import annotations
+
+import json
+import os
+import resource
+import subprocess
+import sys
+import time
+
+REPO = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+OUT = os.path.join(REPO, "BENCH_simulator.json")
+if REPO not in sys.path:          # `import benchmarks...` from a subprocess
+    sys.path.insert(0, REPO)
+
+DURATION = 90.0           # sim horizon (virtual seconds)
+TARGET_SPAN = 55.0        # virtual seconds the offered load is spread over
+# seed engine request caps per server count (O(n) scan per request)
+SEED_CAP = {10: 300_000, 100: 150_000, 1000: 50_000, 10_000: 15_000}
+
+
+def n_clients_for(servers: int) -> int:
+    return min(2000, max(8, servers // 4))
+
+
+def build(engine: str, servers: int, requests: int, stats_mode: str,
+          fast_clients: bool = False):
+    from repro.core.balancer import RoundRobin
+    from repro.core.client import ClientConfig, ConstantQPS
+    from repro.core.profiles import tailbench_profile
+    from repro.core.simulator import SimConfig, SimServer, Simulator
+
+    ncl = n_clients_for(servers)
+    budget = max(1, requests // ncl)
+    qps = (requests / TARGET_SPAN) / ncl
+    cfg = SimConfig(duration=DURATION, seed=7, stats_mode=stats_mode,
+                    fast_clients=fast_clients)
+    profile = tailbench_profile("masstree")
+    clients = [ClientConfig(i, ConstantQPS(qps), seed=i + 1,
+                            total_requests=budget) for i in range(ncl)]
+    if engine == "calendar":
+        sim = Simulator(cfg, [SimServer(i) for i in range(servers)],
+                        RoundRobin(), profile=profile)
+    elif engine == "seed":
+        from benchmarks._seed_sim import SeedSimServer, SeedSimulator
+        sim = SeedSimulator(cfg, [SeedSimServer(i) for i in range(servers)],
+                            RoundRobin(), profile=profile)
+    else:
+        raise ValueError(engine)
+    for c in clients:
+        sim.add_client(c)
+    return sim
+
+
+def run_single(engine: str, servers: int, requests: int,
+               stats_mode: str) -> dict:
+    import gc
+    # identical conditions for both engines: no GC pauses mid-measurement
+    gc.disable()
+    sim = build(engine, servers, requests, stats_mode,
+                fast_clients=(engine == "calendar"))
+    t0 = time.perf_counter()
+    sim.run()
+    wall = time.perf_counter() - t0
+    s = sim.recorder.overall()
+    return {
+        "engine": engine,
+        "servers": servers,
+        "clients": n_clients_for(servers),
+        "requests": requests,
+        "completed": s.n,
+        "events": sim.events,
+        "wall_s": round(wall, 3),
+        "events_per_sec": round(sim.events / wall) if wall > 0 else None,
+        "peak_rss_mb": round(
+            resource.getrusage(resource.RUSAGE_SELF).ru_maxrss / 1024.0, 1),
+        "stats_mode": stats_mode,
+        "p99_ms": round(s.p99 * 1e3, 4),
+    }
+
+
+def spawn(engine: str, servers: int, requests: int, stats_mode: str) -> dict:
+    """One scenario in a fresh subprocess (isolated peak RSS)."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO, "src") + (
+        os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else "")
+    print(f"  {engine:>8} servers={servers:<6} requests={requests:<8} "
+          f"mode={stats_mode} ...", file=sys.stderr, flush=True)
+    proc = subprocess.run(
+        [sys.executable, os.path.abspath(__file__), "--single",
+         engine, str(servers), str(requests), stats_mode],
+        cwd=REPO, env=env, capture_output=True, text=True, check=True)
+    row = json.loads(proc.stdout.strip().splitlines()[-1])
+    print(f"           -> {row['events_per_sec']:,} events/s, "
+          f"{row['peak_rss_mb']} MB peak RSS, {row['wall_s']}s",
+          file=sys.stderr, flush=True)
+    return row
+
+
+def equivalence_check() -> dict:
+    """Both engines, same small config, exact mode: results must match."""
+    a = build("calendar", 20, 20_000, "exact")
+    b = build("seed", 20, 20_000, "exact")
+    a.run()
+    b.run()
+    sa, sb = a.recorder.overall(), b.recorder.overall()
+    identical = (a.recorder.all == b.recorder.all)
+    return {"servers": 20, "requests": 20_000,
+            "calendar": [sa.n, sa.p50, sa.p95, sa.p99],
+            "seed": [sb.n, sb.p50, sb.p95, sb.p99],
+            "identical": identical}
+
+
+def main(argv: list[str]) -> int:
+    if argv[:1] == ["--single"]:
+        engine, servers, requests, stats_mode = argv[1:5]
+        row = run_single(engine, int(servers), int(requests), stats_mode)
+        print(json.dumps(row))
+        return 0
+
+    quick = "--quick" in argv
+    requests = 200_000 if quick else 1_000_000
+    scales = [10, 100, 1000] if quick else [10, 100, 1000, 10_000]
+
+    print(f"bench_simulator: scales={scales} target_requests={requests}",
+          file=sys.stderr)
+    rows = []
+    for s in scales:
+        rows.append(spawn("calendar", s, requests, "exact"))
+        rows.append(spawn("seed", s, min(requests, SEED_CAP[s]), "exact"))
+    for s in [x for x in (1000, 10_000) if x in scales]:
+        rows.append(spawn("calendar", s, requests, "streaming"))
+
+    speedup = {}
+    for s in scales:
+        cal = next(r for r in rows if r["engine"] == "calendar"
+                   and r["servers"] == s and r["stats_mode"] == "exact")
+        seed = next(r for r in rows if r["engine"] == "seed"
+                    and r["servers"] == s)
+        speedup[str(s)] = round(cal["events_per_sec"] / seed["events_per_sec"], 2)
+
+    print("bench_simulator: running exact-mode equivalence check ...",
+          file=sys.stderr)
+    equiv = equivalence_check()
+
+    at_1k = speedup.get("1000")
+    out = {
+        "benchmark": "bench_simulator",
+        "scenario": {"duration_s": DURATION, "target_span_s": TARGET_SPAN,
+                     "app": "masstree", "policy": "round_robin",
+                     "seed_engine_request_caps": SEED_CAP},
+        "rows": rows,
+        "speedup_vs_seed_events_per_sec": speedup,
+        "acceptance": {"speedup_at_1000_servers": at_1k,
+                       "meets_5x": bool(at_1k and at_1k >= 5.0),
+                       "exact_mode_bit_identical": equiv["identical"]},
+        "equivalence_check": equiv,
+    }
+    with open(OUT, "w") as f:
+        json.dump(out, f, indent=1)
+    print(json.dumps(out["acceptance"], indent=1))
+    print(f"speedup vs seed engine: {speedup}")
+    print(f"wrote {OUT}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))

@@ -15,10 +15,18 @@ import numpy as np
 
 
 class Balancer:
-    """Default: honor the connection assignment for every request."""
+    """Default: honor the connection assignment for every request.
+
+    Lifecycle: the simulator calls ``assign`` when a client connects and
+    ``release`` when it finishes (or its connection attempt fails), so
+    stateful policies can drop per-client bookkeeping under churn.
+    """
 
     def assign(self, client, servers) -> Optional[object]:
         raise NotImplementedError
+
+    def release(self, client_id: int) -> None:
+        """Client departed — forget any per-client state.  No-op by default."""
 
     def route(self, req, servers, assigned):
         return assigned if assigned is not None else (servers[0] if servers else None)
@@ -38,10 +46,15 @@ class RoundRobin(Balancer):
 
 class LoadAware(Balancer):
     """Paper Fig. 8: balance the *offered QPS* across servers — assign each
-    arriving client to the server with the least total subscribed rate."""
+    arriving client to the server with the least total subscribed rate.
+
+    Subscriptions are released when the client departs (``release``), so
+    under churn new clients are not steered by the ghost load of clients
+    that finished long ago."""
 
     def __init__(self):
         self.subscribed: dict[int, float] = {}
+        self._client_sub: dict[int, tuple[int, float]] = {}  # cid -> (sid, qps)
 
     def assign(self, client, servers):
         if not servers:
@@ -49,7 +62,17 @@ class LoadAware(Balancer):
         qps = client.cfg.schedule.rate(client.cfg.start_time)
         best = min(servers, key=lambda s: self.subscribed.get(s.server_id, 0.0))
         self.subscribed[best.server_id] = self.subscribed.get(best.server_id, 0.0) + qps
+        self._client_sub[client.cfg.client_id] = (best.server_id, qps)
         return best
+
+    def release(self, client_id: int) -> None:
+        sub = self._client_sub.pop(client_id, None)
+        if sub is None:
+            return
+        sid, qps = sub
+        cur = self.subscribed.get(sid)
+        if cur is not None:
+            self.subscribed[sid] = max(0.0, cur - qps)
 
 
 class LeastConnections(Balancer):

@@ -13,6 +13,7 @@ rate) — TailBench's generator — with Zipf-like service demands preserved
 from __future__ import annotations
 
 import math
+from bisect import bisect_right
 from dataclasses import dataclass, field
 from typing import Optional, Sequence
 
@@ -38,15 +39,21 @@ class ConstantQPS(QPSSchedule):
 @dataclass
 class PiecewiseQPS(QPSSchedule):
     """[(t_start, qps), ...] — e.g. the paper's Table 5:
-    [(0,100),(10,300),(20,500),(30,600),(40,800),(50,100)]."""
+    [(0,100),(10,300),(20,500),(30,600),(40,800),(50,100)].
+
+    Lookups are O(log n) via bisect over the (sorted) breakpoints — the
+    generator re-samples the rate every MAX_STEP, so this sits on the
+    arrival hot path.  Times before the first breakpoint have rate 0."""
     points: Sequence[tuple]
 
+    def __post_init__(self):
+        pts = sorted((float(t0), float(q)) for t0, q in self.points)
+        self._ts = [t0 for t0, _ in pts]
+        self._qs = [q for _, q in pts]
+
     def rate(self, t: float) -> float:
-        r = 0.0
-        for t0, q in self.points:
-            if t >= t0:
-                r = q
-        return r
+        i = bisect_right(self._ts, t) - 1
+        return self._qs[i] if i >= 0 else 0.0
 
 
 @dataclass
@@ -64,11 +71,15 @@ class DiurnalQPS(QPSSchedule):
 
 @dataclass
 class TraceQPS(QPSSchedule):
-    """Replay a recorded per-second QPS trace."""
+    """Replay a recorded per-second QPS trace (uniform dt -> O(1) lookup).
+
+    An empty trace has no defined rate: NaN, not an IndexError."""
     trace: Sequence[float]
     dt: float = 1.0
 
     def rate(self, t: float) -> float:
+        if len(self.trace) == 0:
+            return float("nan")
         i = min(int(t / self.dt), len(self.trace) - 1)
         return float(self.trace[max(i, 0)])
 
@@ -97,13 +108,18 @@ class ClientGenerator:
         self.rng = np.random.default_rng((cfg.seed, cfg.client_id, rng_stream))
         self.t = cfg.start_time
         self.sent = 0
+        # hot-path bindings (next_arrival runs once per generated request)
+        self._budget = math.inf if cfg.total_requests is None else cfg.total_requests
+        self._end = math.inf if cfg.end_time is None else cfg.end_time
+        self._rate = cfg.schedule.rate
+        self._draw = self.rng.exponential
+        self._sample = self.profile.sample
 
     def exhausted(self, t: Optional[float] = None) -> bool:
-        if self.cfg.total_requests is not None and self.sent >= self.cfg.total_requests:
+        if self.sent >= self._budget:
             return True
-        if self.cfg.end_time is not None and (t or self.t) >= self.cfg.end_time:
-            return True
-        return False
+        # explicit None check: t == 0.0 is a real timestamp, not "unset"
+        return (self.t if t is None else t) >= self._end
 
     MAX_STEP = 0.25  # re-sample the rate at least this often (seconds)
 
@@ -114,22 +130,87 @@ class ClientGenerator:
         boundary we advance to the boundary and redraw at the new rate —
         statistically exact for piecewise-constant schedules.
         """
+        t = self.t
+        budget, end, step = self._budget, self._end, self.MAX_STEP
+        if self.sent >= budget or t >= end:
+            return None
         while True:
-            if self.exhausted(self.t):
-                return None
-            rate = self.cfg.schedule.rate(self.t)
+            rate = self._rate(t)
+            if rate != rate:       # NaN (e.g. empty TraceQPS): no defined
+                self.t = t         # rate, treat the client as exhausted —
+                return None        # NaN would slip past the <= 0 guard
             if rate <= 0:
-                self.t += self.MAX_STEP
+                t += step
+                if t >= end:
+                    self.t = t
+                    return None
                 continue
-            gap = self.rng.exponential(1.0 / rate)
+            gap = self._draw(1.0 / rate)
             # never step across a grid boundary: memorylessness makes
             # redrawing at the boundary exact for piecewise-constant rates
-            next_grid = (math.floor(self.t / self.MAX_STEP) + 1) * self.MAX_STEP
-            if self.t + gap >= next_grid:
-                self.t = next_grid
+            next_grid = (math.floor(t / step) + 1.0) * step
+            if t + gap >= next_grid:
+                t = next_grid
+                if t >= end:
+                    self.t = t
+                    return None
                 continue
-            self.t += gap
-            if self.exhausted(self.t):
+            t += gap
+            self.t = t
+            if t >= end:
                 return None
             self.sent += 1
-            return self.t, self.profile.sample(self.rng)
+            return t, self._sample(self.rng)
+
+
+class BatchedClientGenerator(ClientGenerator):
+    """Vectorized arrival generation for constant-rate open-loop clients.
+
+    Draws inter-arrival gaps and service demands in numpy chunks instead
+    of one scalar RNG call per request — ~10x cheaper per arrival, which
+    matters when a 10k-server run pumps millions of requests.  The
+    arrival process is the same Poisson law (for a constant rate the
+    MAX_STEP re-gridding of the base class is a statistical no-op by
+    memorylessness), but the RNG stream differs from the scalar path, so
+    this is opt-in (``SimConfig.fast_clients``) and never used by the
+    bit-compatible figure configs.
+    """
+
+    CHUNK = 4096
+
+    def __init__(self, cfg: ClientConfig, profile, rng_stream: int = 0):
+        super().__init__(cfg, profile, rng_stream)
+        if not isinstance(cfg.schedule, ConstantQPS) or cfg.schedule.qps <= 0:
+            raise ValueError("BatchedClientGenerator needs ConstantQPS > 0")
+        self._scale = 1.0 / cfg.schedule.qps
+        self._ts: list[float] = []
+        self._ds: list[float] = []
+        self._i = 0
+
+    def _refill(self) -> int:
+        k = min(self.CHUNK, int(self._budget - self.sent)) \
+            if self._budget != math.inf else self.CHUNK
+        if k <= 0:
+            return 0
+        gaps = self.rng.standard_exponential(k) * self._scale
+        ts = self.t + np.cumsum(gaps)
+        self._ts = ts.tolist()              # python floats: fast scalar reads
+        self._ds = self.profile.sample_batch(self.rng, k).tolist()
+        self._i = 0
+        return k
+
+    def next_arrival(self) -> Optional[tuple]:
+        if self.sent >= self._budget:
+            return None
+        i = self._i
+        if i >= len(self._ts):
+            if self._refill() == 0:
+                return None
+            i = 0
+        t = self._ts[i]
+        self._i = i + 1
+        self.t = t
+        if t >= self._end:
+            return None
+        self.sent += 1
+        return t, self._ds[i]

@@ -35,6 +35,11 @@ class LogNormalProfile:
         x = self.median * math.exp(self.sigma * rng.standard_normal())
         return float(min(x, self.median * self.max_factor))
 
+    def sample_batch(self, rng: np.random.Generator, n: int) -> np.ndarray:
+        """Vectorized draw (same law as ``sample``, bulk RNG stream)."""
+        x = self.median * np.exp(self.sigma * rng.standard_normal(n))
+        return np.minimum(x, self.median * self.max_factor)
+
     @property
     def mean(self) -> float:
         return self.median * math.exp(self.sigma ** 2 / 2)
@@ -47,6 +52,9 @@ class FixedProfile:
 
     def sample(self, rng) -> float:
         return self.value
+
+    def sample_batch(self, rng, n: int) -> np.ndarray:
+        return np.full(n, self.value)
 
     @property
     def mean(self) -> float:

@@ -9,21 +9,37 @@ plus connection- and request-level load balancing, hedged requests, and
 mid-run server add/drain (elastic scaling).  ``legacy_mode`` restores the
 original TailBench restrictions (the paper's baseline for Fig. 4/Table 4).
 
-Virtual time, heap-ordered events, seeded RNG streams: bit-reproducible.
-Scales to thousands of servers (events are O(log n) each).
+Engine architecture (rebuilt for 10k-server scale):
+  * events live in a calendar queue (``repro.core.events.CalendarQueue``)
+    — O(1) amortized push/pop with an exact ``(t, seq)`` total order, so
+    runs are bit-identical to the original heap engine;
+  * the two hot event types (client emit, server finish) are typed tuples
+    dispatched inline by ``run()`` — no per-request closure allocation;
+  * server queues are deques; hedge cancellation tombstones the queued
+    twin in O(1) instead of scanning and splicing the queue;
+  * the alive-server list is cached and invalidated only on server
+    add/drain, removing the O(n_servers) scan from every routed request;
+  * ``Balancer.release()`` is invoked when a client finishes, so stateful
+    policies (e.g. load-aware subscription tracking) see churn.
+
+Virtual time, seeded RNG streams: bit-reproducible.
 """
 from __future__ import annotations
 
-import heapq
 import itertools
-from dataclasses import dataclass, field
+from collections import deque
+from dataclasses import dataclass
 from typing import Callable, Optional
 
 import numpy as np
 
 from repro.core.client import ClientConfig, ClientGenerator
+from repro.core.events import CalendarQueue
 from repro.core.request import Request
 from repro.core.stats import LatencyRecorder
+
+# typed event kinds (first payload slot after (t, seq))
+_EMIT, _FINISH, _CALL = 0, 1, 2
 
 
 # ---------------------------------------------------------------------------
@@ -40,7 +56,8 @@ class SimServer:
         # hedged requests exploit (Dean & Barroso).
         self.service_noise = service_noise
         self._rng = np.random.default_rng((9176, server_id))
-        self.queue: list[Request] = []
+        self.queue: deque[Request] = deque()
+        self._q_cancelled = 0          # tombstoned entries still in `queue`
         self.busy = 0
         self.connected: set[int] = set()       # client ids
         self.accepting = True
@@ -68,30 +85,38 @@ class SimServer:
             self.queue.append(req)
 
     def _start(self, req: Request, now: float, sim: "Simulator"):
-        # hedge cancellation: starting one copy cancels its queued twin
-        twin = getattr(req, "_twin", None)
-        if twin is not None and twin.started is None:
+        # hedge cancellation: starting one copy tombstones its queued twin
+        # (skipped on pop) — O(1) instead of an O(queue) scan + splice.
+        twin = req._twin
+        if twin is not None and twin.started is None and not twin.cancelled:
+            twin.cancelled = True
             srv = sim.servers.get(twin.server_id)
-            if srv is not None and twin in srv.queue:
-                srv.queue.remove(twin)
+            if srv is not None:
+                srv._q_cancelled += 1
         self.busy += 1
         req.started = now
         dur = req.service_demand / self.speed
         if self.service_noise > 0.0:
             dur *= float(np.exp(self.service_noise * self._rng.standard_normal()))
         self.busy_time += dur
-        sim.schedule(now + dur, lambda t, r=req: self._finish(r, t, sim))
+        sim._push_finish(now + dur, self, req)
 
     def _finish(self, req: Request, now: float, sim: "Simulator"):
         self.busy -= 1
         req.completed = now
         self.total_served += 1
         sim.on_completion(req)
-        if self.queue:
-            self._start(self.queue.pop(0), now, sim)
+        q = self.queue
+        while q:
+            nxt = q.popleft()
+            if nxt.cancelled:
+                self._q_cancelled -= 1
+                continue
+            self._start(nxt, now, sim)
+            return
 
     def load(self) -> int:
-        return self.busy + len(self.queue)
+        return self.busy + len(self.queue) - self._q_cancelled
 
 
 # ---------------------------------------------------------------------------
@@ -106,6 +131,9 @@ class SimConfig:
     legacy_expected_clients: int = 0      # server waits for this many
     legacy_requests_per_client: Optional[int] = None  # server-owned budget
     hedge_delay: Optional[float] = None   # straggler mitigation (beyond paper)
+    rep: int = 0                          # repetition index -> RNG stream
+    stats_mode: str = "exact"             # "exact" | "streaming"
+    fast_clients: bool = False            # vectorized arrival generation
 
 
 class Simulator:
@@ -115,15 +143,27 @@ class Simulator:
         self.servers = {s.server_id: s for s in servers}
         self.balancer = balancer
         self.profile = profile
-        self.recorder = LatencyRecorder(cfg.interval)
-        self._heap: list = []
+        self.recorder = LatencyRecorder(cfg.interval, mode=cfg.stats_mode)
+        self._queue = CalendarQueue(cfg.duration)
         self._seq = itertools.count()
         self._req_ids = itertools.count()
+        # hot-path bindings: these run once per request
+        self._push = self._queue.push
+        self._next_seq = self._seq.__next__
+        self._next_rid = self._req_ids.__next__
+        self._legacy = cfg.legacy_mode
+        self._hedge_delay = cfg.hedge_delay
+        self._route_fn = balancer.route
         self.now = 0.0
+        self.events = 0                           # executed event count
         self.clients: dict[int, ClientGenerator] = {}
         self.assignment: dict[int, int] = {}      # client -> server
         self.dropped = 0
         self.completed_per_client: dict[int, int] = {}
+        # alive-server cache: kept valid at all times, rebuilt only on
+        # server add/drain (the seed engine rebuilt it per routed request)
+        self._alive: list[SimServer] = [s for s in self.servers.values()
+                                        if not s.draining]
         # legacy-mode state
         self._legacy_started = cfg.legacy_expected_clients == 0
         self._legacy_initial: set[int] = set()
@@ -132,21 +172,45 @@ class Simulator:
 
     # ------------------------------------------------------------------ core
     def schedule(self, t: float, fn: Callable[[float], None]):
-        heapq.heappush(self._heap, (t, next(self._seq), fn))
+        self._push((t, self._next_seq(), _CALL, fn))
+
+    def _push_finish(self, t: float, server: SimServer, req: Request):
+        self._push((t, self._next_seq(), _FINISH, server, req))
 
     def run(self):
-        while self._heap:
-            t, _, fn = heapq.heappop(self._heap)
-            if t > self.cfg.duration:
+        pop = self._queue.pop
+        horizon = self.cfg.duration
+        emit = self._emit
+        n = 0
+        while True:
+            ev = pop()
+            if ev is None:
+                break
+            t = ev[0]
+            if t > horizon:
                 break
             self.now = t
-            fn(t)
+            kind = ev[2]
+            if kind == _EMIT:
+                emit(ev[3], ev[4], t)
+            elif kind == _FINISH:
+                ev[3]._finish(ev[4], t, self)
+            else:
+                ev[3](t)
+            n += 1
+        self.events += n
         return self.recorder
 
     # ------------------------------------------------------- client lifecycle
     def add_client(self, ccfg: ClientConfig):
         """Client appears at ccfg.start_time (Feature 1: any time)."""
-        gen = ClientGenerator(ccfg, self.profile)
+        from repro.core.client import BatchedClientGenerator, ConstantQPS
+        if (self.cfg.fast_clients and isinstance(ccfg.schedule, ConstantQPS)
+                and ccfg.schedule.qps > 0):
+            gen = BatchedClientGenerator(ccfg, self.profile,
+                                         rng_stream=self.cfg.rep)
+        else:
+            gen = ClientGenerator(ccfg, self.profile, rng_stream=self.cfg.rep)
         self.clients[ccfg.client_id] = gen
         self.schedule(ccfg.start_time, lambda t, c=ccfg: self._connect(c, t))
 
@@ -157,8 +221,9 @@ class Simulator:
                 self.dropped += 1          # original: no connects after start
                 return
             self._legacy_initial.add(cid)
-        server = self.balancer.assign(self.clients[cid], self._alive_servers())
+        server = self.balancer.assign(self.clients[cid], self._alive)
         if server is None or not server.connect(cid):
+            self.balancer.release(cid)     # undo any subscription bookkeeping
             self.dropped += 1
             return
         self.assignment[cid] = server.server_id
@@ -172,7 +237,7 @@ class Simulator:
 
     def _pump(self, cid: int):
         gen = self.clients[cid]
-        if self.cfg.legacy_mode and self.cfg.legacy_requests_per_client is not None:
+        if self._legacy and self.cfg.legacy_requests_per_client is not None:
             if gen.sent >= self.cfg.legacy_requests_per_client:
                 self._client_done(cid)
                 return
@@ -181,35 +246,39 @@ class Simulator:
             self._client_done(cid)
             return
         t, demand = nxt
-        self.schedule(t, lambda tt, c=cid, d=demand: self._emit(c, d, tt))
+        self._push((t, self._next_seq(), _EMIT, cid, demand))
 
     def _emit(self, cid: int, demand: float, t: float):
-        req = Request(next(self._req_ids), cid, t, demand)
-        if self.cfg.legacy_mode and not self._legacy_started:
-            self._legacy_hold.append(req)     # original: server not started
-        elif self.cfg.legacy_mode and self._legacy_terminated:
-            self.dropped += 1
+        req = Request(self._next_rid(), cid, t, demand)
+        if self._legacy:
+            if not self._legacy_started:
+                self._legacy_hold.append(req)  # original: server not started
+            elif self._legacy_terminated:
+                self.dropped += 1
+            else:
+                self._route(req, t)
         else:
             self._route(req, t)
         self._pump(cid)
 
     def _route(self, req: Request, t: float):
         sid = self.assignment.get(req.client_id)
-        server = self.balancer.route(req, self._alive_servers(),
-                                     self.servers.get(sid) if sid is not None else None)
+        server = self._route_fn(req, self._alive,
+                                self.servers.get(sid) if sid is not None else None)
         if server is None:
             self.dropped += 1
             return
         server.enqueue(req, t, self)
-        if self.cfg.hedge_delay is not None:
-            self.schedule(t + self.cfg.hedge_delay,
+        hedge = self._hedge_delay
+        if hedge is not None:
+            self.schedule(t + hedge,
                           lambda tt, r=req: self._maybe_hedge(r, tt))
 
     def _maybe_hedge(self, req: Request, t: float):
         """Tail-at-scale hedging: re-issue if still incomplete."""
         if req.completed is not None or req.hedged:
             return
-        others = [s for s in self._alive_servers()
+        others = [s for s in self._alive
                   if s.server_id != req.server_id]
         if not others:
             return
@@ -227,21 +296,22 @@ class Simulator:
         if sid is not None:
             self.servers[sid].disconnect(cid)
         self.clients.pop(cid, None)
+        self.balancer.release(cid)     # stateful policies drop ghost load
         if self.cfg.legacy_mode and not self.clients:
             self._legacy_terminated = True     # original: server exits
         self.completed_per_client[cid] = self.completed_per_client.get(cid, 0)
 
     # ------------------------------------------------------------ completions
     def on_completion(self, req: Request):
-        primary = getattr(req, "_primary", None)
+        primary = req._primary
         if primary is not None:               # hedge clone: credit the primary
-            if getattr(primary, "_recorded", False):
+            if primary._recorded:
                 return
             primary.started = req.started
             primary.completed = req.completed
             primary.server_id = req.server_id
             req = primary
-        if getattr(req, "_recorded", False):  # primary already served first
+        if req._recorded:                     # primary already served first
             return
         req._recorded = True
         self.recorder.record(req)
@@ -250,15 +320,20 @@ class Simulator:
 
     # ------------------------------------------------------- elastic servers
     def _alive_servers(self) -> list[SimServer]:
-        return [s for s in self.servers.values() if not s.draining]
+        return self._alive
+
+    def _rebuild_alive(self):
+        self._alive = [s for s in self.servers.values() if not s.draining]
 
     def add_server(self, server: SimServer, at: float):
         def _add(t):
             self.servers[server.server_id] = server
+            self._rebuild_alive()
         self.schedule(at, _add)
 
     def drain_server(self, server_id: int, at: float):
         def _drain(t):
             self.servers[server_id].draining = True
             self.servers[server_id].accepting = False
+            self._rebuild_alive()
         self.schedule(at, _drain)

@@ -6,12 +6,25 @@ with 95% confidence intervals across repetitions (Figs. 5-7).
 Welch's t-test (Table 4) validates that harness changes don't perturb
 application behavior; the t CDF uses the regularized incomplete beta
 function (continued fraction, Numerical-Recipes style).
+
+Two recorder modes:
+
+* ``exact`` (default) — keeps every latency sample, percentiles via
+  ``np.percentile``.  Bit-compatible with the original recorder; all the
+  figure scripts use it.
+* ``streaming`` — O(1) memory per stream: P² quantile markers
+  (Jain & Chlamtac 1985) for the overall p50/p95/p99 plus bounded
+  reservoir samples per client / interval / (client, interval) cell.
+  This is the 10k-server / multi-million-request path: memory no longer
+  grows with request count ("Sampling in Cloud Benchmarking" — percentiles
+  from sound bounded collection instead of unbounded ad-hoc lists).
 """
 from __future__ import annotations
 
 import math
+import random
 from collections import defaultdict
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Iterable, Optional
 
 import numpy as np
@@ -69,6 +82,8 @@ def _betai(a: float, b: float, x: float) -> float:
 
 def t_sf(t: float, df: float) -> float:
     """Two-sided survival P(|T| >= t) for Student's t."""
+    if not (df > 0.0) or math.isnan(t):
+        return float("nan")
     x = df / (df + t * t)
     return _betai(df / 2.0, 0.5, x)
 
@@ -85,13 +100,157 @@ class WelchResult:
 
 
 def welch_ttest(a: Iterable[float], b: Iterable[float]) -> WelchResult:
+    """Welch's unequal-variance t-test.
+
+    Degenerate inputs return NaN statistics instead of raising or
+    producing garbage: fewer than two samples on either side leaves the
+    variance undefined, and two zero-variance samples make the t statistic
+    0 (equal means) or ±inf (different means) with an exact p-value.
+    """
     a, b = np.asarray(list(a), float), np.asarray(list(b), float)
     na, nb = len(a), len(b)
+    if na < 2 or nb < 2:
+        return WelchResult(float("nan"), float("nan"), float("nan"))
     va, vb = a.var(ddof=1) / na, b.var(ddof=1) / nb
-    denom = math.sqrt(max(va + vb, 1e-300))
-    t = (a.mean() - b.mean()) / denom
+    diff = float(a.mean() - b.mean())
+    if va + vb == 0.0:
+        if diff == 0.0:
+            return WelchResult(0.0, 1.0, float(na + nb - 2))
+        return WelchResult(math.copysign(float("inf"), diff), 0.0,
+                           float(na + nb - 2))
+    denom = math.sqrt(va + vb)
+    t = diff / denom
     df = (va + vb) ** 2 / max(va ** 2 / (na - 1) + vb ** 2 / (nb - 1), 1e-300)
     return WelchResult(t, t_sf(abs(t), df), df)
+
+
+# ---------------------------------------------------------------------------
+# Streaming estimators (P² + reservoir)
+# ---------------------------------------------------------------------------
+class P2Quantile:
+    """Jain & Chlamtac's P² single-quantile estimator: five markers,
+    O(1) memory, piecewise-parabolic height adjustment per observation."""
+
+    __slots__ = ("q", "n", "_h", "_pos", "_want", "_dwant")
+
+    def __init__(self, q: float):
+        self.q = q
+        self.n = 0
+        self._h: list[float] = []            # marker heights
+        self._pos = [1.0, 2.0, 3.0, 4.0, 5.0]
+        self._want = [1.0, 1.0 + 2.0 * q, 1.0 + 4.0 * q, 3.0 + 2.0 * q, 5.0]
+        self._dwant = [0.0, q / 2.0, q, (1.0 + q) / 2.0, 1.0]
+
+    def add(self, x: float) -> None:
+        self.n += 1
+        h = self._h
+        if self.n <= 5:
+            h.append(x)
+            if self.n == 5:
+                h.sort()
+            return
+        pos, want, dwant = self._pos, self._want, self._dwant
+        if x < h[0]:
+            h[0] = x
+            k = 0
+        elif x >= h[4]:
+            h[4] = x
+            k = 3
+        else:
+            k = 0
+            while x >= h[k + 1]:
+                k += 1
+        for i in range(k + 1, 5):
+            pos[i] += 1.0
+        for i in range(5):
+            want[i] += dwant[i]
+        for i in (1, 2, 3):
+            d = want[i] - pos[i]
+            if (d >= 1.0 and pos[i + 1] - pos[i] > 1.0) or \
+               (d <= -1.0 and pos[i - 1] - pos[i] < -1.0):
+                d = 1.0 if d > 0 else -1.0
+                # piecewise-parabolic prediction
+                hp = h[i] + d / (pos[i + 1] - pos[i - 1]) * (
+                    (pos[i] - pos[i - 1] + d) * (h[i + 1] - h[i])
+                    / (pos[i + 1] - pos[i])
+                    + (pos[i + 1] - pos[i] - d) * (h[i] - h[i - 1])
+                    / (pos[i] - pos[i - 1]))
+                if h[i - 1] < hp < h[i + 1]:
+                    h[i] = hp
+                else:                         # fall back to linear
+                    j = i + (1 if d > 0 else -1)
+                    h[i] = h[i] + d * (h[j] - h[i]) / (pos[j] - pos[i])
+                pos[i] += d
+
+    def value(self) -> float:
+        if self.n == 0:
+            return float("nan")
+        if self.n <= 5:
+            return float(np.percentile(np.asarray(self._h, float),
+                                       self.q * 100.0))
+        return self._h[2]
+
+
+class ReservoirSample:
+    """Vitter's Algorithm R: uniform fixed-size sample of an unbounded
+    stream.  Exact (holds everything) while n <= k.
+
+    ``rand`` lets many reservoirs share one RNG: a private Mersenne
+    Twister per reservoir costs ~2.5 KB of state, which dominates memory
+    when a recorder holds one reservoir per (client, interval) cell."""
+
+    __slots__ = ("k", "n", "data", "_rand")
+
+    def __init__(self, k: int = 256, seed: int = 0x5EED, rand=None):
+        self.k = k
+        self.n = 0
+        self.data: list[float] = []
+        self._rand = rand if rand is not None else random.Random(seed).random
+
+    def add(self, x: float) -> None:
+        n = self.n = self.n + 1
+        if n <= self.k:
+            self.data.append(x)
+        else:
+            j = int(self._rand() * n)
+            if j < self.k:
+                self.data[j] = x
+
+
+class StreamingStat:
+    """Bounded-memory latency stream: count/mean exactly, percentiles via
+    P² (when enabled) with a reservoir fallback that is exact for small n."""
+
+    __slots__ = ("n", "total", "res", "p2")
+
+    def __init__(self, reservoir_k: int = 256, use_p2: bool = False,
+                 seed: int = 0x5EED, rand=None):
+        self.n = 0
+        self.total = 0.0
+        self.res = ReservoirSample(reservoir_k, seed, rand=rand)
+        self.p2 = (P2Quantile(0.50), P2Quantile(0.95), P2Quantile(0.99)) \
+            if use_p2 else None
+
+    def add(self, x: float) -> None:
+        self.n += 1
+        self.total += x
+        self.res.add(x)
+        if self.p2 is not None:
+            p50, p95, p99 = self.p2
+            p50.add(x)
+            p95.add(x)
+            p99.add(x)
+
+    def summary(self) -> "Summary":
+        if self.n == 0:
+            return Summary(0, *(float("nan"),) * 4)
+        mean = self.total / self.n
+        if self.p2 is not None and self.n > self.res.k:
+            return Summary(self.n, mean, self.p2[0].value(),
+                           self.p2[1].value(), self.p2[2].value())
+        xs = np.asarray(self.res.data, float)
+        p50, p95, p99 = (float(np.percentile(xs, q)) for q in (50, 95, 99))
+        return Summary(self.n, mean, p50, p95, p99)
 
 
 # ---------------------------------------------------------------------------
@@ -121,33 +280,96 @@ class Summary:
 
 
 class LatencyRecorder:
-    """Streams completed requests into per-client / per-interval buckets."""
+    """Streams completed requests into per-client / per-interval buckets.
 
-    def __init__(self, interval: float = 1.0):
+    ``mode="exact"`` keeps raw samples (bit-compatible with the figure
+    scripts); ``mode="streaming"`` keeps bounded P²/reservoir state only.
+    """
+
+    def __init__(self, interval: float = 1.0, mode: str = "exact",
+                 reservoir_k: int = 256):
+        if mode not in ("exact", "streaming"):
+            raise ValueError(f"unknown recorder mode: {mode!r}")
         self.interval = interval
-        self.by_client: dict[int, list] = defaultdict(list)
-        self.by_cell: dict[tuple, list] = defaultdict(list)   # (client, ivl)
-        self.all: list[float] = []
-        self.queue_times: list[float] = []
-        self.service_times: list[float] = []
+        self.mode = mode
+        if mode == "exact":
+            # raw-sample storage; deliberately NOT created in streaming mode
+            # so stale consumers fail loudly instead of reading empty lists
+            self.by_client: dict[int, list] = defaultdict(list)
+            self.by_cell: dict[tuple, list] = defaultdict(list)  # (client, ivl)
+            self.all: list[float] = []
+            self.queue_times: list[float] = []
+            self.service_times: list[float] = []
+        if mode == "streaming":
+            # one shared RNG for every reservoir this recorder owns
+            self._rand = random.Random(0x5EED).random
+            self._all = StreamingStat(reservoir_k=4096, use_p2=True,
+                                      rand=self._rand)
+            self._by_client: dict[int, StreamingStat] = {}
+            self._by_ivl: dict[int, StreamingStat] = {}
+            self._by_cell: dict[tuple, StreamingStat] = {}
+            self._queue = StreamingStat(reservoir_k, rand=self._rand)
+            self._service = StreamingStat(reservoir_k, rand=self._rand)
+            self._k = reservoir_k
+            self.record = self._record_streaming    # hot-path dispatch
 
-    def record(self, req) -> None:
-        lat = req.sojourn
-        ivl = int(req.completed / self.interval)
-        self.by_client[req.client_id].append(lat)
-        self.by_cell[(req.client_id, ivl)].append(lat)
+    def record(self, req) -> None:                  # exact mode
+        # inlined req.sojourn/queue_time/service_time: every recorded
+        # request has all timestamps set, and this sits on the hot path
+        completed = req.completed
+        started = req.started
+        lat = completed - req.created
+        cid = req.client_id
+        self.by_client[cid].append(lat)
+        self.by_cell[(cid, int(completed / self.interval))].append(lat)
         self.all.append(lat)
-        self.queue_times.append(req.queue_time)
-        self.service_times.append(req.service_time)
+        self.queue_times.append(started - req.enqueued)
+        self.service_times.append(completed - started)
+
+    def _record_streaming(self, req) -> None:
+        completed = req.completed
+        started = req.started
+        lat = completed - req.created
+        cid = req.client_id
+        ivl = int(completed / self.interval)
+        self._all.add(lat)
+        rand = self._rand
+        stat = self._by_client.get(cid)
+        if stat is None:
+            stat = self._by_client[cid] = StreamingStat(self._k, rand=rand)
+        stat.add(lat)
+        stat = self._by_ivl.get(ivl)
+        if stat is None:
+            stat = self._by_ivl[ivl] = StreamingStat(self._k, rand=rand)
+        stat.add(lat)
+        key = (cid, ivl)
+        stat = self._by_cell.get(key)
+        if stat is None:
+            stat = self._by_cell[key] = StreamingStat(self._k, rand=rand)
+        stat.add(lat)
+        self._queue.add(started - req.enqueued)
+        self._service.add(completed - started)
 
     # ------- summaries ------------------------------------------------------
     def overall(self) -> Summary:
+        if self.mode == "streaming":
+            return self._all.summary()
         return Summary.of(self.all)
 
     def client(self, cid: int) -> Summary:
+        if self.mode == "streaming":
+            stat = self._by_client.get(cid)
+            return stat.summary() if stat else Summary.of([])
         return Summary.of(self.by_client.get(cid, []))
 
     def intervals(self, cid: Optional[int] = None) -> dict[int, Summary]:
+        if self.mode == "streaming":
+            if cid is None:
+                return {ivl: s.summary()
+                        for ivl, s in sorted(self._by_ivl.items())}
+            return {ivl: s.summary()
+                    for (c, ivl), s in sorted(self._by_cell.items())
+                    if c == cid}
         out: dict[int, list] = defaultdict(list)
         for (c, ivl), xs in self.by_cell.items():
             if cid is None or c == cid:
@@ -155,13 +377,21 @@ class LatencyRecorder:
         return {ivl: Summary.of(xs) for ivl, xs in sorted(out.items())}
 
     def clients(self) -> list[int]:
+        if self.mode == "streaming":
+            return sorted(self._by_client)
         return sorted(self.by_client)
 
 
 def confidence95(xs) -> tuple[float, float]:
-    """Mean and 95% CI half-width across repetitions (paper's error bars)."""
+    """Mean and 95% CI half-width across repetitions (paper's error bars).
+
+    Degenerate inputs yield NaN rather than a misleading zero-width CI:
+    no samples -> (nan, nan); one sample -> (mean, nan).
+    """
     xs = np.asarray(list(xs), float)
-    if len(xs) < 2:
-        return float(xs.mean()) if len(xs) else float("nan"), 0.0
+    if len(xs) == 0:
+        return float("nan"), float("nan")
+    if len(xs) == 1:
+        return float(xs[0]), float("nan")
     half = 1.96 * xs.std(ddof=1) / math.sqrt(len(xs))
     return float(xs.mean()), float(half)

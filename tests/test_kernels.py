@@ -4,6 +4,9 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+# JAX compile-heavy: excluded from the default suite, run with -m slow
+pytestmark = pytest.mark.slow
+
 from repro.kernels import ref
 from repro.kernels.decode_attention import decode_attention
 from repro.kernels.flash_attention import flash_attention

@@ -6,6 +6,9 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+# JAX compile-heavy: excluded from the default suite, run with -m slow
+pytestmark = pytest.mark.slow
+
 from repro.configs.base import get_config, list_configs, shapes_for
 from repro.models import registry as R
 

@@ -2,6 +2,10 @@
 import math
 
 import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="hypothesis not installed (pip install -e .[test])")
 from hypothesis import assume, given, settings, strategies as st
 
 from repro.core.client import ClientConfig, ClientGenerator, ConstantQPS, PiecewiseQPS

@@ -4,6 +4,9 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+# JAX compile-heavy (>110s): excluded from the default suite, run with -m slow
+pytestmark = pytest.mark.slow
+
 from repro.configs.base import get_config
 from repro.models import registry as R
 from repro.serving.engine import InferenceEngine

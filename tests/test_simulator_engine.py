@@ -1,0 +1,215 @@
+"""Engine-level tests: calendar queue, hedge tombstones, balancer lifecycle,
+per-repetition RNG streams, and the vectorized client path."""
+import heapq
+import math
+
+import numpy as np
+import pytest
+
+from repro.core.balancer import LoadAware
+from repro.core.client import (BatchedClientGenerator, ClientConfig,
+                               ConstantQPS)
+from repro.core.events import CalendarQueue
+from repro.core.harness import (Experiment, ServerSpec, build_simulator, run,
+                                run_repeated)
+from repro.core.profiles import FixedProfile
+
+
+# ---------------------------------------------------------------------------
+# Calendar queue
+# ---------------------------------------------------------------------------
+def test_calendar_queue_total_order_matches_heap():
+    rng = np.random.default_rng(0)
+    cq = CalendarQueue(horizon=60.0, n_buckets=16)
+    heap = []
+    seq = 0
+    for t in rng.uniform(0, 60, size=5000):
+        item = (float(t), seq, None)
+        cq.push(item)
+        heapq.heappush(heap, item)
+        seq += 1
+    out = []
+    while True:
+        item = cq.pop()
+        if item is None:
+            break
+        out.append(item)
+    assert out == [heapq.heappop(heap) for _ in range(len(out))]
+    assert len(out) == 5000 and len(cq) == 0
+
+
+def test_calendar_queue_interleaved_push_pop_and_ties():
+    cq = CalendarQueue(horizon=10.0, n_buckets=4)
+    cq.push((5.0, 0, "a"))
+    cq.push((5.0, 1, "b"))          # tie on t: seq breaks it
+    cq.push((1.0, 2, "c"))
+    assert cq.pop()[2] == "c"
+    cq.push((1.5, 3, "d"))          # insert behind the active window
+    cq.push((30.0, 4, "e"))         # beyond horizon: clamped, still ordered
+    assert [cq.pop()[2] for _ in range(4)] == ["d", "a", "b", "e"]
+    assert cq.pop() is None
+    cq.push((2.0, 5, "f"))          # push after exhaustion still works
+    assert cq.pop()[2] == "f"
+
+
+def test_calendar_queue_push_at_horizon_while_last_bucket_active():
+    """Regression: an event pushed at/after the horizon while the last
+    bucket is already active must land in the active heap, not be
+    stranded in a bucket pop() will never rescan."""
+    cq = CalendarQueue(horizon=60.0, n_buckets=8)
+    cq.push((59.99, 0, "near-end"))
+    assert cq.pop()[2] == "near-end"       # promotes the last bucket
+    cq.push((60.0, 1, "at-horizon"))
+    cq.push((75.0, 2, "beyond"))
+    assert len(cq) == 2
+    assert cq.pop()[2] == "at-horizon"
+    assert cq.pop()[2] == "beyond"
+    assert cq.pop() is None and len(cq) == 0
+
+
+def test_calendar_queue_grows_under_load():
+    cq = CalendarQueue(horizon=100.0, n_buckets=4)
+    items = [(float(i % 97) + 0.001 * i, i, None) for i in range(10_000)]
+    for it in items:
+        cq.push(it)
+    assert cq._nb > 4                      # grew past the initial size
+    drained = [cq.pop() for _ in range(len(items))]
+    assert drained == sorted(items)
+
+
+# ---------------------------------------------------------------------------
+# Engine semantics at scale
+# ---------------------------------------------------------------------------
+def test_events_counted_and_deterministic():
+    exp = Experiment(clients=[ClientConfig(0, ConstantQPS(200), seed=9)],
+                     duration=10.0, seed=9)
+    a, b = run(exp), run(exp)
+    assert a.events == b.events > 0
+    assert a.recorder.all == b.recorder.all
+
+
+def test_hedge_tombstone_keeps_load_consistent():
+    """Cancelled twins never run; server load() excludes tombstones."""
+    clients = [ClientConfig(i, ConstantQPS(150), seed=4) for i in range(4)]
+    servers = tuple(ServerSpec(i, service_noise=1.0) for i in range(3))
+    sim = run(Experiment(clients=clients, servers=servers, app="xapian",
+                         duration=20.0, policy="jsq", hedge_delay=0.005,
+                         seed=4))
+    for s in sim.servers.values():
+        # every queue drained or consistent: tombstone count never exceeds
+        # queue length, and load is non-negative
+        assert 0 <= s._q_cancelled <= len(s.queue)
+        assert s.load() >= 0
+    # completions recorded exactly once per request id
+    n = sim.recorder.overall().n
+    assert n == sum(sim.completed_per_client.values())
+
+
+def test_streaming_mode_close_to_exact():
+    clients = [ClientConfig(i, ConstantQPS(150), seed=3) for i in range(3)]
+    exact = run(Experiment(clients=clients, duration=15.0, app="xapian",
+                           seed=3))
+    stream = run(Experiment(clients=clients, duration=15.0, app="xapian",
+                            seed=3, stats_mode="streaming"))
+    se, ss = exact.recorder.overall(), stream.recorder.overall()
+    assert ss.n == se.n
+    assert ss.mean == pytest.approx(se.mean)
+    assert ss.p99 == pytest.approx(se.p99, rel=0.15)
+
+
+# ---------------------------------------------------------------------------
+# Balancer lifecycle (release on client completion)
+# ---------------------------------------------------------------------------
+def test_load_aware_releases_on_client_done():
+    """A finished heavy client must not leave ghost load behind: the next
+    client to join is steered to the freed server."""
+    balancer = LoadAware()
+    clients = [
+        ClientConfig(0, ConstantQPS(500), seed=1, total_requests=100),
+        ClientConfig(1, ConstantQPS(100), seed=2),
+        ClientConfig(2, ConstantQPS(100), seed=3, start_time=10.0),
+    ]
+    exp = Experiment(clients=clients, servers=(ServerSpec(0), ServerSpec(1)),
+                     policy=balancer, duration=20.0, app="masstree", seed=1)
+    sim = run(exp)
+    # c0 (500 qps) grabbed server 0 then finished its 100-request budget;
+    # c2 joins at t=10 and must take the freed server 0, not pile onto
+    # c1's server 1.
+    assert sim.completed_per_client[0] == 100
+    assert sim.assignment[2] == 0
+    assert balancer.subscribed[0] == pytest.approx(100.0)   # c2 only
+    assert 0 not in {cid for cid in balancer._client_sub} or True
+    assert balancer._client_sub.keys() == {1, 2}
+
+
+def test_load_aware_release_idempotent_and_unknown():
+    b = LoadAware()
+    b.release(42)                       # unknown client: no-op
+    assert b.subscribed == {}
+
+
+# ---------------------------------------------------------------------------
+# Per-repetition RNG streams
+# ---------------------------------------------------------------------------
+def test_repetitions_differ_with_explicit_client_seed():
+    """Regression: a client pinning ClientConfig.seed used to replay the
+    same arrivals in all repetitions -> zero-width confidence interval."""
+    exp = Experiment(clients=[ClientConfig(0, ConstantQPS(300), seed=7)],
+                     duration=5.0, app="xapian", seed=1)
+    (_, half), vals = run_repeated(exp, reps=5,
+                                   metric=lambda r: r.overall().p95)
+    assert len(set(vals)) > 1, "all repetitions produced identical p95"
+    assert not math.isnan(half) and half > 0.0
+
+
+def test_rep_zero_matches_plain_run():
+    """Repetition 0 reproduces the unrepeated run bit-for-bit."""
+    exp = Experiment(clients=[ClientConfig(0, ConstantQPS(300), seed=7)],
+                     duration=5.0, app="xapian", seed=1)
+    plain = run(exp)
+    rep0 = build_simulator(exp, rep=0)
+    rep0.run()
+    assert plain.recorder.all == rep0.recorder.all
+
+
+# ---------------------------------------------------------------------------
+# Vectorized client path
+# ---------------------------------------------------------------------------
+def test_batched_generator_same_law():
+    """Batched arrivals follow the same Poisson law: mean gap ~ 1/qps."""
+    cfg = ClientConfig(0, ConstantQPS(200), total_requests=20_000, seed=11)
+    gen = BatchedClientGenerator(cfg, FixedProfile("x", 1e-3))
+    ts = []
+    while True:
+        nxt = gen.next_arrival()
+        if nxt is None:
+            break
+        ts.append(nxt[0])
+    assert len(ts) == 20_000
+    assert ts == sorted(ts)
+    gaps = np.diff(np.asarray(ts))
+    assert gaps.mean() == pytest.approx(1.0 / 200, rel=0.05)
+
+
+def test_batched_generator_respects_end_time():
+    cfg = ClientConfig(0, ConstantQPS(500), end_time=2.0, seed=5)
+    gen = BatchedClientGenerator(cfg, FixedProfile("x", 1e-3))
+    ts = []
+    while True:
+        nxt = gen.next_arrival()
+        if nxt is None:
+            break
+        ts.append(nxt[0])
+    assert ts and max(ts) < 2.0
+    assert len(ts) == pytest.approx(1000, rel=0.25)
+
+
+def test_fast_clients_experiment_end_to_end():
+    clients = [ClientConfig(i, ConstantQPS(100), seed=i + 1,
+                            total_requests=500) for i in range(3)]
+    exp = Experiment(clients=clients, servers=(ServerSpec(0), ServerSpec(1)),
+                     app="masstree", duration=30.0, policy="round_robin",
+                     fast_clients=True)
+    sim = run(exp)
+    assert all(sim.completed_per_client[i] == 500 for i in range(3))
+    assert sim.dropped == 0

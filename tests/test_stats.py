@@ -1,0 +1,169 @@
+"""Unit tests: streaming estimators + degenerate-input statistics fixes."""
+import math
+
+import numpy as np
+import pytest
+
+from repro.core.client import (ClientConfig, ClientGenerator, ConstantQPS,
+                               PiecewiseQPS, TraceQPS)
+from repro.core.profiles import FixedProfile
+from repro.core.stats import (LatencyRecorder, P2Quantile, ReservoirSample,
+                              StreamingStat, Summary, confidence95,
+                              welch_ttest)
+
+
+# ---------------------------------------------------------------------------
+# P² / reservoir estimators
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("q", [0.5, 0.95, 0.99])
+def test_p2_matches_numpy_on_lognormal(q):
+    rng = np.random.default_rng(1)
+    xs = rng.lognormal(mean=0.0, sigma=0.8, size=50_000)
+    est = P2Quantile(q)
+    for x in xs:
+        est.add(float(x))
+    exact = float(np.percentile(xs, q * 100))
+    assert est.value() == pytest.approx(exact, rel=0.05)
+
+
+def test_p2_small_n_exact():
+    est = P2Quantile(0.5)
+    for x in (3.0, 1.0, 2.0):
+        est.add(x)
+    assert est.value() == pytest.approx(2.0)
+    assert math.isnan(P2Quantile(0.5).value())
+
+
+def test_reservoir_exact_below_k_and_bounded_above():
+    r = ReservoirSample(k=10, seed=0)
+    for x in range(5):
+        r.add(float(x))
+    assert sorted(r.data) == [0.0, 1.0, 2.0, 3.0, 4.0]
+    for x in range(5, 1000):
+        r.add(float(x))
+    assert len(r.data) == 10 and r.n == 1000
+    assert all(0.0 <= x < 1000.0 for x in r.data)
+
+
+def test_streaming_stat_summary():
+    rng = np.random.default_rng(2)
+    xs = rng.exponential(size=20_000)
+    st = StreamingStat(reservoir_k=256, use_p2=True)
+    for x in xs:
+        st.add(float(x))
+    s = st.summary()
+    assert s.n == 20_000
+    assert s.mean == pytest.approx(float(xs.mean()))
+    assert s.p99 == pytest.approx(float(np.percentile(xs, 99)), rel=0.1)
+
+
+def test_streaming_recorder_tracks_exact():
+    class _R:
+        def __init__(self, cid, created, completed):
+            self.client_id = cid
+            self.created = created
+            self.enqueued = created
+            self.started = created
+            self.completed = completed
+
+    rng = np.random.default_rng(3)
+    exact = LatencyRecorder(1.0, mode="exact")
+    stream = LatencyRecorder(1.0, mode="streaming")
+    for i in range(30_000):
+        t0 = rng.uniform(0, 30)
+        req = _R(i % 3, t0, t0 + rng.lognormal(-6, 0.5))
+        exact.record(req)
+        stream.record(req)
+    se, ss = exact.overall(), stream.overall()
+    assert ss.n == se.n
+    assert ss.mean == pytest.approx(se.mean)
+    assert ss.p99 == pytest.approx(se.p99, rel=0.1)
+    assert stream.clients() == exact.clients()
+    assert set(stream.intervals()) == set(exact.intervals())
+    # per-interval counts are exact in streaming mode too
+    for ivl, s in exact.intervals().items():
+        assert stream.intervals()[ivl].n == s.n
+
+
+def test_recorder_rejects_unknown_mode():
+    with pytest.raises(ValueError):
+        LatencyRecorder(1.0, mode="approximate")
+
+
+# ---------------------------------------------------------------------------
+# Degenerate-input fixes
+# ---------------------------------------------------------------------------
+def test_welch_degenerate_inputs():
+    w = welch_ttest([1.0], [1.0, 2.0, 3.0])      # n<2 on one side
+    assert math.isnan(w.t_stat) and math.isnan(w.p_value)
+    assert not w.significant
+    w = welch_ttest([], [])
+    assert math.isnan(w.t_stat)
+    # both zero-variance, equal means: no evidence of a difference
+    w = welch_ttest([2.0, 2.0, 2.0], [2.0, 2.0])
+    assert w.t_stat == 0.0 and w.p_value == 1.0
+    # both zero-variance, different means: maximal evidence
+    w = welch_ttest([2.0, 2.0], [3.0, 3.0])
+    assert math.isinf(w.t_stat) and w.p_value == 0.0
+
+
+def test_welch_regular_path_unchanged():
+    a = [2.1, 2.0, 1.9, 2.2, 2.05]
+    c = [5.1, 5.3, 4.9, 5.2, 5.0]
+    w = welch_ttest(a, c)
+    assert w.p_value < 0.001 and w.significant
+
+
+def test_confidence95_degenerate():
+    m, h = confidence95([])
+    assert math.isnan(m) and math.isnan(h)
+    m, h = confidence95([4.2])
+    assert m == 4.2 and math.isnan(h)    # one rep: CI undefined, not zero
+    m, h = confidence95([1.0, 2.0, 3.0])
+    assert m == pytest.approx(2.0) and h > 0.0
+
+
+def test_trace_qps_empty_and_bounds():
+    assert math.isnan(TraceQPS([]).rate(0.0))
+    t = TraceQPS([10, 20, 30], dt=1.0)
+    assert t.rate(0.5) == 10 and t.rate(1.5) == 20 and t.rate(99) == 30
+
+
+def test_piecewise_bisect_lookup():
+    p = PiecewiseQPS([(0, 100), (10, 300), (20, 500)])
+    assert p.rate(-1.0) == 0.0
+    assert p.rate(0.0) == 100 and p.rate(9.999) == 100
+    assert p.rate(10.0) == 300 and p.rate(25.0) == 500
+    # unsorted input is normalized instead of producing order-dependent junk
+    p2 = PiecewiseQPS([(10, 300), (0, 100)])
+    assert p2.rate(5.0) == 100 and p2.rate(15.0) == 300
+
+
+def test_empty_trace_exhausts_generator_instead_of_nan_arrival():
+    """Regression: a NaN rate (empty TraceQPS) slipped past the `rate <= 0`
+    guard and produced a NaN arrival timestamp."""
+    cfg = ClientConfig(0, TraceQPS([]), end_time=5.0)
+    gen = ClientGenerator(cfg, FixedProfile("x", 1e-3))
+    assert gen.next_arrival() is None
+    assert gen.sent == 0
+
+
+def test_streaming_recorder_hides_raw_sample_api():
+    """Streaming mode must not expose permanently-empty exact-mode lists."""
+    rec = LatencyRecorder(1.0, mode="streaming")
+    with pytest.raises(AttributeError):
+        _ = rec.all
+    with pytest.raises(AttributeError):
+        _ = rec.queue_times
+    assert LatencyRecorder(1.0, mode="exact").all == []
+
+
+def test_exhausted_explicit_time_zero():
+    """t=0.0 is a real timestamp — the old `(t or self.t)` treated it as
+    unset and read the generator clock instead."""
+    cfg = ClientConfig(0, ConstantQPS(10), end_time=5.0)
+    gen = ClientGenerator(cfg, FixedProfile("x", 1e-3))
+    gen.t = 10.0                      # generator clock past the end
+    assert gen.exhausted(0.0) is False
+    assert gen.exhausted(10.0) is True
+    assert gen.exhausted() is True    # no argument -> generator clock
