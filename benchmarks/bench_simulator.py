@@ -9,7 +9,10 @@ events/sec and peak RSS per run.
 Both engines run with identical exact-mode recorders for the speed
 comparison (equal stats cost); the calendar engine is additionally
 measured with the streaming P²/reservoir recorder to show the bounded-
-memory path.  The seed engine's O(n_servers) per-request scan makes full
+memory path.  The calendar rows run with ``fast_clients`` (the rebuilt
+engine's vectorized arrival path), so the reported speedup is the whole
+rebuilt request path — event queue + client generation — not the
+calendar queue in isolation.  The seed engine's O(n_servers) per-request scan makes full
 1M-request runs intractable at scale, so its request count is capped per
 scale and throughput compared as a rate (the cap is recorded in the
 JSON).  Each run executes in its own subprocess so peak-RSS figures are
@@ -18,8 +21,15 @@ per-scenario, not cumulative.
 Usage:
     PYTHONPATH=src python benchmarks/bench_simulator.py            # full
     PYTHONPATH=src python benchmarks/bench_simulator.py --quick
+    PYTHONPATH=src python benchmarks/bench_simulator.py --smoke --check 1.1
     PYTHONPATH=src python benchmarks/bench_simulator.py \
         --single calendar 1000 1000000 exact                       # one run
+
+``--smoke`` is the CI regression gate: small scales, and with
+``--check MIN`` the run exits non-zero if the calendar engine's
+events/sec advantage over the seed engine at the largest scale falls
+below MIN or the exact-mode equivalence check fails — engine-perf
+regressions fail CI instead of only showing up in BENCH_simulator.json.
 """
 from __future__ import annotations
 
@@ -55,8 +65,10 @@ def build(engine: str, servers: int, requests: int, stats_mode: str,
     ncl = n_clients_for(servers)
     budget = max(1, requests // ncl)
     qps = (requests / TARGET_SPAN) / ncl
+    # gauges off: the A/B measures the event engine, and the vendored seed
+    # engine predates the telemetry sampler
     cfg = SimConfig(duration=DURATION, seed=7, stats_mode=stats_mode,
-                    fast_clients=fast_clients)
+                    fast_clients=fast_clients, gauges=False)
     profile = tailbench_profile("masstree")
     clients = [ClientConfig(i, ConstantQPS(qps), seed=i + 1,
                             total_requests=budget) for i in range(ncl)]
@@ -141,8 +153,16 @@ def main(argv: list[str]) -> int:
         return 0
 
     quick = "--quick" in argv
-    requests = 200_000 if quick else 1_000_000
-    scales = [10, 100, 1000] if quick else [10, 100, 1000, 10_000]
+    smoke = "--smoke" in argv
+    check = None
+    if "--check" in argv:
+        check = float(argv[argv.index("--check") + 1])
+    if smoke:
+        requests, scales = 60_000, [10, 100]
+    elif quick:
+        requests, scales = 200_000, [10, 100, 1000]
+    else:
+        requests, scales = 1_000_000, [10, 100, 1000, 10_000]
 
     print(f"bench_simulator: scales={scales} target_requests={requests}",
           file=sys.stderr)
@@ -166,6 +186,7 @@ def main(argv: list[str]) -> int:
     equiv = equivalence_check()
 
     at_1k = speedup.get("1000")
+    top = str(max(scales))
     out = {
         "benchmark": "bench_simulator",
         "scenario": {"duration_s": DURATION, "target_span_s": TARGET_SPAN,
@@ -178,11 +199,26 @@ def main(argv: list[str]) -> int:
                        "exact_mode_bit_identical": equiv["identical"]},
         "equivalence_check": equiv,
     }
-    with open(OUT, "w") as f:
-        json.dump(out, f, indent=1)
+    if not smoke:       # the repo-root JSON records full/quick-scale runs
+        with open(OUT, "w") as f:
+            json.dump(out, f, indent=1)
+        print(f"wrote {OUT}")
     print(json.dumps(out["acceptance"], indent=1))
     print(f"speedup vs seed engine: {speedup}")
-    print(f"wrote {OUT}")
+    if check is not None:
+        ok = True
+        if not equiv["identical"]:
+            print("CHECK FAILED: exact-mode results diverge from the seed "
+                  "engine", file=sys.stderr)
+            ok = False
+        if speedup[top] < check:
+            print(f"CHECK FAILED: speedup at {top} servers is "
+                  f"{speedup[top]}x < required {check}x", file=sys.stderr)
+            ok = False
+        if not ok:
+            return 1
+        print(f"check passed: speedup@{top}={speedup[top]}x >= {check}x, "
+              f"exact mode bit-identical")
     return 0
 
 

@@ -12,7 +12,7 @@ import jax
 from benchmarks.common import emit
 from repro.configs.base import get_config
 from repro.core.client import ClientConfig, ConstantQPS
-from repro.core.harness import run_engine_experiment
+from repro.core.runtime import EngineRuntime
 from repro.models import registry as R
 from repro.serving.engine import InferenceEngine
 
@@ -32,10 +32,11 @@ def main() -> str:
             e.run_until_idle()
         clients = [ClientConfig(i, ConstantQPS(qps / 2), end_time=3.0, seed=i)
                    for i in range(2)]
-        rec = run_engine_experiment(engines, clients, policy="jsq",
-                                    duration=3.0, prompt_len=16,
-                                    max_new_tokens=4, vocab=cfg.vocab_size)
-        s = rec.overall()
+        rt = EngineRuntime(engines, clients, policy="jsq", duration=3.0,
+                           prompt_len=16, max_new_tokens=4,
+                           vocab=cfg.vocab_size)
+        rt.run()
+        s = rt.telemetry.overall()
         rows.append({"qps": qps, "n": s.n, "p50_ms": f"{s.p50*1e3:.1f}",
                      "p95_ms": f"{s.p95*1e3:.1f}", "p99_ms": f"{s.p99*1e3:.1f}"})
         p99 = s.p99

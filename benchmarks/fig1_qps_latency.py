@@ -22,7 +22,7 @@ def main() -> str:
         from repro.core.harness import ServerSpec
         exp = Experiment(clients=clients, servers=(ServerSpec(0, workers=6),),
                          duration=15.0, app="xapian", seed=1)
-        s = run(exp).recorder.overall()
+        s = run(exp).telemetry.overall()
         rows.append({"qps": qps, "n": s.n, "mean_ms": s.mean * 1e3,
                      "p95_ms": s.p95 * 1e3, "p99_ms": s.p99 * 1e3})
         if prev_p99 and s.p99 > 3 * prev_p99 and knee is None:

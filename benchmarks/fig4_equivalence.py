@@ -42,8 +42,8 @@ def main() -> str:
                 pp = plusplus_equivalent(legacy_experiment(
                     3, qps / 3, requests_per_client=int(qps * dur / 3),
                     app=app, duration=dur, seed=seed + 500_000))
-                s_l = run(leg).recorder.overall()
-                s_p = run(pp).recorder.overall()
+                s_l = run(leg).telemetry.overall()
+                s_p = run(pp).telemetry.overall()
                 for m in METRICS:
                     legacy_vals[m].append(getattr(s_l, m))
                     pp_vals[m].append(getattr(s_p, m))

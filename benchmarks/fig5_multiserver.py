@@ -41,7 +41,7 @@ def main() -> str:
             vals = {"p95": [], "p99": []}
             for rep in range(13):
                 sim = run(_rp(exp, seed=exp.seed + 1000 * (rep + 1)))
-                s_all = sim.recorder.overall()
+                s_all = sim.telemetry.overall()
                 vals["p95"].append(s_all.p95)
                 vals["p99"].append(s_all.p99)
             for pct in ("p95", "p99"):

@@ -26,12 +26,12 @@ def main() -> str:
     sim = run(exp)
     rows = []
     for cid in (1, 2, 3):
-        for ivl, s in sim.recorder.intervals(cid).items():
+        for ivl, s in sim.telemetry.series(cid).items():
             rows.append({"client": cid, "t": ivl, "n": s.n,
                          "p99_ms": f"{s.p99 * 1e3:.3f}"})
     # check the paper's observation: client 3 alone (~t>52) ≈ client 1 solo (~t<14)
-    solo1 = [s.p99 for i, s in sim.recorder.intervals(1).items() if 2 <= i <= 12]
-    solo3 = [s.p99 for i, s in sim.recorder.intervals(3).items() if i >= 53]
+    solo1 = sim.telemetry.window("p99", 2, 13, cid=1)
+    solo3 = sim.telemetry.window("p99", 53, cid=3)
     ratio = np.nanmean(solo3) / np.nanmean(solo1) if solo1 and solo3 else float("nan")
     emit("fig6_interleaved", rows, t0, f"solo3_vs_solo1_p99_ratio={ratio:.2f}")
     return f"ratio={ratio:.2f}"

@@ -23,13 +23,12 @@ def main() -> str:
                      app="xapian", duration=60.0, seed=13)
     sim = run(exp)
     rows = []
-    for ivl, s in sim.recorder.intervals().items():
+    for ivl, s in sim.telemetry.series().items():
         rows.append({"t": ivl, "n": s.n, "mean_ms": f"{s.mean*1e3:.3f}",
                      "p95_ms": f"{s.p95*1e3:.3f}", "p99_ms": f"{s.p99*1e3:.3f}"})
-    iv = sim.recorder.intervals()
-    first = np.nanmean([iv[t].p99 for t in range(2, 9) if t in iv])
-    last = np.nanmean([iv[t].p99 for t in range(52, 59) if t in iv])
-    peak = np.nanmax([iv[t].p99 for t in range(41, 50) if t in iv])
+    first = np.nanmean(sim.telemetry.window("p99", 2, 9))
+    last = np.nanmean(sim.telemetry.window("p99", 52, 59))
+    peak = np.nanmax(sim.telemetry.window("p99", 41, 50))
     sym = last / first
     emit("fig7_dynamic_qps", rows, t0,
          f"first_vs_last_p99_ratio={sym:.2f};peak_p99_ms={peak*1e3:.1f}")

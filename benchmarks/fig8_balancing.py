@@ -28,7 +28,7 @@ def main() -> str:
                              seed=seed)
             sim = run(exp)
             for c in (1, 2, 3):
-                per_client[c].append(sim.recorder.client(c).p99)
+                per_client[c].append(sim.telemetry.client(c).p99)
         for c in (1, 2, 3):
             rows.append({"policy": policy, "client": c,
                          "p99_ms": f"{np.mean(per_client[c])*1e3:.3f}"})

@@ -12,7 +12,7 @@ import numpy as np
 
 from repro.configs.base import get_config
 from repro.core.client import ClientConfig, ConstantQPS
-from repro.core.harness import run_engine_experiment
+from repro.core.runtime import EngineRuntime
 from repro.models import registry as R
 from repro.serving.engine import InferenceEngine
 
@@ -31,10 +31,10 @@ for e in engines:
 clients = [ClientConfig(0, ConstantQPS(15), end_time=4.0, seed=0),
            ClientConfig(1, ConstantQPS(15), end_time=4.0, seed=1)]
 print("serving 4s of open-loop traffic at 30 QPS across 2 replicas...")
-rec = run_engine_experiment(engines, clients, policy="jsq", duration=4.0,
-                            prompt_len=16, max_new_tokens=4,
-                            vocab=cfg.vocab_size)
-s = rec.overall()
+rt = EngineRuntime(engines, clients, policy="jsq", duration=4.0,
+                   prompt_len=16, max_new_tokens=4, vocab=cfg.vocab_size)
+rt.run()
+s = rt.telemetry.overall()
 print(f"served n={s.n}  mean={s.mean*1e3:.1f}ms  p50={s.p50*1e3:.1f}ms  "
       f"p95={s.p95*1e3:.1f}ms  p99={s.p99*1e3:.1f}ms")
 for i, e in enumerate(engines):

@@ -27,6 +27,16 @@ class QPSSchedule:
     def rate(self, t: float) -> float:
         raise NotImplementedError
 
+    def next_change(self, t: float) -> Optional[float]:
+        """Earliest time > t at which the rate may change.
+
+        ``math.inf`` means the rate is constant from ``t`` on; ``None``
+        means unknown (continuously varying) — callers must re-sample on
+        the MAX_STEP grid.  Schedules with breakpoints override this so
+        generators can skip zero-rate regions (e.g. night-time trace
+        gaps) in one step instead of spinning through them."""
+        return None
+
 
 @dataclass
 class ConstantQPS(QPSSchedule):
@@ -34,6 +44,9 @@ class ConstantQPS(QPSSchedule):
 
     def rate(self, t: float) -> float:
         return self.qps
+
+    def next_change(self, t: float) -> float:
+        return math.inf
 
 
 @dataclass
@@ -54,6 +67,10 @@ class PiecewiseQPS(QPSSchedule):
     def rate(self, t: float) -> float:
         i = bisect_right(self._ts, t) - 1
         return self._qs[i] if i >= 0 else 0.0
+
+    def next_change(self, t: float) -> float:
+        i = bisect_right(self._ts, t)
+        return self._ts[i] if i < len(self._ts) else math.inf
 
 
 @dataclass
@@ -82,6 +99,19 @@ class TraceQPS(QPSSchedule):
             return float("nan")
         i = min(int(t / self.dt), len(self.trace) - 1)
         return float(self.trace[max(i, 0)])
+
+    def next_change(self, t: float) -> float:
+        """Start time of the next cell whose rate differs from rate(t) —
+        lets generators jump a whole idle night in one step."""
+        n = len(self.trace)
+        if n == 0:
+            return math.inf
+        i = max(min(int(t / self.dt), n - 1), 0)
+        cur = self.trace[i]
+        for j in range(i + 1, n):
+            if self.trace[j] != cur:
+                return j * self.dt
+        return math.inf
 
 
 # ---------------------------------------------------------------------------
@@ -112,6 +142,7 @@ class ClientGenerator:
         self._budget = math.inf if cfg.total_requests is None else cfg.total_requests
         self._end = math.inf if cfg.end_time is None else cfg.end_time
         self._rate = cfg.schedule.rate
+        self._next_change = cfg.schedule.next_change
         self._draw = self.rng.exponential
         self._sample = self.profile.sample
 
@@ -140,7 +171,17 @@ class ClientGenerator:
                 self.t = t         # rate, treat the client as exhausted —
                 return None        # NaN would slip past the <= 0 guard
             if rate <= 0:
-                t += step
+                # skip dead air: jump straight to the schedule's next
+                # breakpoint instead of spinning in MAX_STEP increments
+                # (no RNG draws happen at zero rate, so skipping is exact)
+                nc = self._next_change(t)
+                if nc is None:              # continuous schedule: re-sample
+                    t += step               # on the grid as before
+                elif nc == math.inf:        # zero rate forever -> done
+                    self.t = t
+                    return None
+                else:
+                    t = max(nc, t + 1e-12)  # breakpoints are > t by contract
                 if t >= end:
                     self.t = t
                     return None

@@ -3,23 +3,21 @@
 ``Experiment`` describes clients, servers, balancer, app profile and mode
 (tailbench++ vs legacy baseline); ``run()`` executes one deterministic
 simulation; ``run_repeated()`` gives the paper's 13-repetition confidence
-intervals.  ``run_engine_experiment()`` drives a *real* JAX inference
-engine in wall-clock time with the same client machinery (the end-to-end
-validation path).
+intervals.  Declarative dynamic scenarios compile down to ``Experiment``
+(see ``repro.core.scenario``), and the same compiled experiment also runs
+wall-clock against real inference engines via
+``repro.core.runtime.EngineRuntime`` (the end-to-end validation path).
 """
 from __future__ import annotations
 
-import time
-from dataclasses import dataclass, field, replace
+from dataclasses import dataclass, replace
 from typing import Callable, Optional, Sequence
 
-import numpy as np
-
-from repro.core.balancer import POLICIES, Balancer
-from repro.core.client import ClientConfig, ClientGenerator, ConstantQPS
+from repro.core.balancer import POLICIES
+from repro.core.client import ClientConfig
 from repro.core.profiles import tailbench_profile
 from repro.core.simulator import SimConfig, SimServer, Simulator
-from repro.core.stats import LatencyRecorder, Summary, confidence95
+from repro.core.stats import LatencyRecorder, confidence95
 
 
 @dataclass
@@ -48,6 +46,8 @@ class Experiment:
     profile: Optional[object] = None          # overrides `app`
     stats_mode: str = "exact"                 # "exact" | "streaming" recorder
     fast_clients: bool = False                # vectorized constant-QPS arrivals
+    slo: Optional[float] = None               # latency SLO (telemetry frames)
+    injections: Sequence = ()                 # compiled Scenario injections
 
     def resolved_profile(self):
         return self.profile or tailbench_profile(self.app)
@@ -61,7 +61,13 @@ def build_simulator(exp: Experiment, rep: int = 0) -> Simulator:
     independent arrival processes even for clients that pin an explicit
     seed (repetition 0 reproduces the un-repeated run bit-for-bit).
     """
-    servers = [SimServer(s.server_id, s.workers, s.speed, s.service_noise)
+    def _srv_seed(sid: int) -> tuple:
+        # domain-separated (seed, server_id, rep): repetitions draw
+        # independent server-noise streams (mirrors the client-RNG fix)
+        return (9176, exp.seed, sid, rep)
+
+    servers = [SimServer(s.server_id, s.workers, s.speed, s.service_noise,
+                         rng_seed=_srv_seed(s.server_id))
                for s in exp.servers if s.join_at == 0.0]
     balancer = POLICIES[exp.policy]() if isinstance(exp.policy, str) else exp.policy
     n_expected = exp.legacy_expected_clients
@@ -72,7 +78,8 @@ def build_simulator(exp: Experiment, rep: int = 0) -> Simulator:
                     legacy_expected_clients=n_expected if exp.legacy_mode else 0,
                     legacy_requests_per_client=exp.legacy_requests_per_client,
                     hedge_delay=exp.hedge_delay, rep=rep,
-                    stats_mode=exp.stats_mode, fast_clients=exp.fast_clients)
+                    stats_mode=exp.stats_mode, fast_clients=exp.fast_clients,
+                    slo=exp.slo)
     sim = Simulator(cfg, servers, balancer, profile=exp.resolved_profile())
     for c in exp.clients:
         c2 = replace(c, seed=c.seed if c.seed else exp.seed)
@@ -80,9 +87,13 @@ def build_simulator(exp: Experiment, rep: int = 0) -> Simulator:
     for s in exp.servers:
         if s.join_at > 0.0:
             sim.add_server(SimServer(s.server_id, s.workers, s.speed,
-                                     s.service_noise), s.join_at)
+                                     s.service_noise,
+                                     rng_seed=_srv_seed(s.server_id)),
+                           s.join_at)
         if s.drain_at is not None:
             sim.drain_server(s.server_id, s.drain_at)
+    for inj in exp.injections:
+        sim.apply_injection(inj.kind, inj.at, inj.params)
     return sim
 
 
@@ -110,84 +121,30 @@ def run_repeated(exp: Experiment, reps: int = 13,
 
 
 # ---------------------------------------------------------------------------
-# Real-engine mode: same clients, wall-clock time, actual JAX inference.
+# Real-engine mode: deprecated shim over repro.core.runtime.EngineRuntime.
 # ---------------------------------------------------------------------------
 def run_engine_experiment(engines: list, clients: Sequence[ClientConfig], *,
                           policy: str = "round_robin", duration: float = 10.0,
                           prompt_len: int = 16, max_new_tokens: int = 4,
                           vocab: int = 256, seed: int = 0,
                           time_scale: float = 1.0) -> LatencyRecorder:
-    """Drive real InferenceEngine(s) with the harness's open-loop clients.
+    """Deprecated: use ``repro.core.runtime.EngineRuntime``.
 
-    Arrival times are pre-generated (virtual seconds x time_scale); the loop
-    admits due requests and steps engines round-robin.  Latency = wall time
-    from (scaled) arrival to completion.
+    The bespoke wall-clock loop that used to live here silently diverged
+    from the simulator's client/balancer machinery; ``EngineRuntime``
+    reuses ``ClientGenerator``, ``Balancer`` (assign/route/release
+    lifecycle) and ``LatencyRecorder`` verbatim, so one scenario runs on
+    either backend.  This shim survives one release for callers of the
+    old entry point and returns the recorder as before.
     """
-    from repro.core.profiles import FixedProfile
-    from repro.core.request import Request as Rec
+    import warnings
 
-    rng = np.random.default_rng(seed)
-    # pre-generate every client's arrival timeline
-    arrivals = []      # (t, client_id, req_id)
-    rid = 0
-    for c in clients:
-        gen = ClientGenerator(c, FixedProfile("tok", 0.0))
-        while True:
-            nxt = gen.next_arrival()
-            if nxt is None or nxt[0] > duration:
-                break
-            arrivals.append((nxt[0] * time_scale, c.client_id, rid))
-            rid += 1
-    arrivals.sort()
-    balancer = POLICIES[policy]()
-
-    class _EngineShim:
-        def __init__(self, i, eng):
-            self.server_id, self.eng = i, eng
-            self.connected: set = set()
-            self.accepting = True
-
-        def load(self):
-            return self.eng.pending() + self.eng.n_active()
-
-        def connect(self, cid):
-            self.connected.add(cid)
-            return True
-
-    shims = [_EngineShim(i, e) for i, e in enumerate(engines)]
-    assignment: dict[int, _EngineShim] = {}
-    recorder = LatencyRecorder()
-    meta: dict[int, tuple] = {}
-    t0 = time.monotonic()
-    idx = 0
-    pending_total = len(arrivals)
-    done_total = 0
-    while done_total < pending_total:
-        now = time.monotonic() - t0
-        while idx < len(arrivals) and arrivals[idx][0] <= now:
-            t_arr, cid, req_id = arrivals[idx]
-            idx += 1
-            if cid not in assignment:
-                class _C:  # minimal client view for the balancer
-                    cfg = [c for c in clients if c.client_id == cid][0]
-                assignment[cid] = balancer.assign(_C(), shims) or shims[0]
-            shim = balancer.route(None, shims, assignment[cid])
-            prompt = rng.integers(0, vocab, size=prompt_len)
-            meta[req_id] = (cid, t_arr)
-            shim.eng.submit(prompt, max_new_tokens, req_id)
-        stepped = False
-        for shim in shims:
-            if not shim.eng.idle():
-                for comp in shim.eng.step():
-                    cid, t_arr = meta[comp.req_id]
-                    wall = time.monotonic() - t0
-                    rec = Rec(comp.req_id, cid, t_arr, 0.0)
-                    rec.enqueued = t_arr
-                    rec.started = wall - comp.latency
-                    rec.completed = wall
-                    recorder.record(rec)
-                    done_total += 1
-                stepped = True
-        if not stepped and idx < len(arrivals):
-            time.sleep(min(0.001, max(0.0, arrivals[idx][0] - (time.monotonic() - t0))))
-    return recorder
+    from repro.core.runtime import EngineRuntime
+    warnings.warn("run_engine_experiment is deprecated; use "
+                  "repro.core.runtime.EngineRuntime", DeprecationWarning,
+                  stacklevel=2)
+    rt = EngineRuntime(engines, clients, policy=policy, duration=duration,
+                       prompt_len=prompt_len, max_new_tokens=max_new_tokens,
+                       vocab=vocab, seed=seed, time_scale=time_scale)
+    rt.run()
+    return rt.recorder

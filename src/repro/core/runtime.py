@@ -1,0 +1,509 @@
+"""Runtime layer: one scenario, two execution backends.
+
+``Runtime`` is the common surface over the two ways a compiled
+``Experiment`` can execute:
+
+* ``SimulatorRuntime`` — the virtual-time discrete-event ``Simulator``
+  (deterministic, bit-reproducible, millions of requests per second);
+* ``EngineRuntime`` — a wall-clock loop driving real step-based
+  inference engines (``repro.serving.engine``) with the *same*
+  ``ClientGenerator`` arrival processes, the same ``Balancer``
+  assign/route/release lifecycle, and the same ``LatencyRecorder`` /
+  ``MetricsPipeline`` telemetry.
+
+Because both backends consume identical client configs and seeds, the
+engine path replays bit-identical arrival timelines to the simulator —
+the sim-vs-engine parity path the paper's validation methodology needs.
+
+``EngineRuntime`` accepts anything engine-shaped: an object with
+``submit(prompt, max_new_tokens, req_id)``, ``step() -> [Completion]``,
+``pending()``, ``n_active()`` and ``idle()`` (``InferenceEngine`` and
+``StubEngine`` both qualify).  Clocks are injectable; ``VirtualClock``
+lets the wall-clock loop run in accelerated virtual time for tests and
+stub-backed scenario runs.
+"""
+from __future__ import annotations
+
+import heapq
+import itertools
+import time
+from typing import Callable, Optional, Sequence
+
+import numpy as np
+
+from repro.core.balancer import POLICIES
+from repro.core.client import ClientConfig, ClientGenerator
+from repro.core.harness import Experiment, build_simulator
+from repro.core.profiles import FixedProfile
+from repro.core.request import Request
+from repro.core.stats import LatencyRecorder, MetricsPipeline
+
+# injection kinds the wall-clock backend can honor (speed scaling and
+# hedging need simulator control over service execution)
+_ENGINE_INJECTIONS = ("server_join", "server_drain", "server_fail",
+                      "set_policy")
+
+
+class Runtime:
+    """A scenario execution backend: run once, expose telemetry."""
+
+    recorder: LatencyRecorder
+    telemetry: MetricsPipeline
+
+    def run(self) -> MetricsPipeline:
+        raise NotImplementedError
+
+
+class SimulatorRuntime(Runtime):
+    """Virtual-time backend — thin adapter over ``build_simulator``."""
+
+    def __init__(self, experiment: Experiment, rep: int = 0):
+        self.sim = build_simulator(experiment, rep=rep)
+        self.recorder = self.sim.recorder
+        self.telemetry = self.sim.telemetry
+
+    @property
+    def dropped(self) -> int:
+        return self.sim.dropped
+
+    def run(self) -> MetricsPipeline:
+        self.sim.run()
+        return self.telemetry
+
+
+# ---------------------------------------------------------------------------
+# Virtual clock (accelerated wall-clock for stub engines and tests)
+# ---------------------------------------------------------------------------
+class VirtualClock:
+    """A manually-advanced monotonic clock.
+
+    ``sleep`` advances time instead of blocking; ``advance_to`` jumps
+    forward but never past ``limit`` (the runtime parks the next arrival
+    deadline there so an engine skipping ahead to its next completion
+    cannot leap over a due admission).
+    """
+
+    def __init__(self, t: float = 0.0):
+        self.t = t
+        self.limit: Optional[float] = None
+
+    def __call__(self) -> float:
+        return self.t
+
+    def sleep(self, dt: float) -> None:
+        self.t += dt
+
+    def advance_to(self, t: float) -> None:
+        if self.limit is not None:
+            t = min(t, self.limit)
+        if t > self.t:
+            self.t = t
+
+
+# ---------------------------------------------------------------------------
+# Engine-backed wall-clock runtime
+# ---------------------------------------------------------------------------
+class EngineServerHandle:
+    """Balancer-compatible view of one engine replica (the same surface
+    ``SimServer`` offers: server_id/connected/accepting/load/connect)."""
+
+    def __init__(self, server_id: int, engine):
+        self.server_id = server_id
+        self.engine = engine
+        self.connected: set[int] = set()
+        self.accepting = True
+        self.draining = False
+        self.failed = False
+        self.workers = getattr(engine, "max_batch", 1)
+        self.outstanding: set[int] = set()     # req_ids submitted, not done
+        self.total_served = 0
+
+    @property
+    def busy(self) -> int:
+        return self.engine.n_active()
+
+    @property
+    def busy_time(self):
+        """Cumulative service seconds, when the engine accounts for them
+        (StubEngine does; telemetry falls back to instantaneous busy)."""
+        return getattr(self.engine, "busy_time", None)
+
+    def load(self) -> int:
+        return self.engine.pending() + self.engine.n_active()
+
+    def connect(self, client_id: int) -> bool:
+        if not self.accepting:
+            return False
+        self.connected.add(client_id)
+        return True
+
+    def disconnect(self, client_id: int) -> None:
+        self.connected.discard(client_id)
+
+
+class EngineRuntime(Runtime):
+    """Drive real engines with the harness's open-loop client machinery.
+
+    Replaces the old ``run_engine_experiment`` ad-hoc loop: arrivals come
+    lazily from ``ClientGenerator`` (same RNG streams as the simulator),
+    connection assignment / request routing / departure go through the
+    full ``Balancer`` assign/route/release lifecycle, completions are
+    recorded by a verbatim ``LatencyRecorder``, and per-interval gauges
+    feed the shared ``MetricsPipeline``.
+    """
+
+    def __init__(self, engines, clients: Sequence[ClientConfig], *,
+                 policy: str = "round_robin", duration: float = 10.0,
+                 prompt_len: int = 16, max_new_tokens: int = 4,
+                 vocab: int = 256, seed: int = 0, time_scale: float = 1.0,
+                 interval: float = 1.0, slo: Optional[float] = None,
+                 injections: Sequence = (), rep: int = 0,
+                 profile=None, stats_mode: str = "exact",
+                 engine_factory: Optional[Callable[[int], object]] = None,
+                 clock: Callable[[], float] = time.monotonic,
+                 sleep: Callable[[float], None] = time.sleep):
+        if isinstance(engines, dict):
+            handle_map = {sid: EngineServerHandle(sid, e)
+                          for sid, e in engines.items()}
+        else:
+            handle_map = {i: EngineServerHandle(i, e)
+                          for i, e in enumerate(engines)}
+        self.handles: dict[int, EngineServerHandle] = handle_map
+        self.balancer = POLICIES[policy]() if isinstance(policy, str) else policy
+        self.duration = duration
+        self.interval = interval
+        self.time_scale = time_scale
+        self.prompt_len = prompt_len
+        self.max_new_tokens = max_new_tokens
+        self.vocab = vocab
+        self.engine_factory = engine_factory
+        # timestamps are recorded in wall seconds; with a stretched clock
+        # (time_scale != 1) the recorder's bucket width scales with them so
+        # interval indices stay in *virtual* time, aligned with the gauge
+        # samples and the scenario's QPS schedule
+        self.recorder = LatencyRecorder(interval * time_scale, mode=stats_mode)
+        self.telemetry = MetricsPipeline(self.recorder, interval, slo=slo)
+        self.dropped = 0
+        self._clock = clock
+        self._sleep = sleep
+        self._rng = np.random.default_rng(seed)
+        self._rid = itertools.count()
+        prof = profile if profile is not None else FixedProfile("tok", 0.0)
+        # O(1) per-arrival lookups (the old loop re-scanned the client
+        # list on every first-arrival: O(n_clients) per admission)
+        self.client_cfgs: dict[int, ClientConfig] = {c.client_id: c
+                                                     for c in clients}
+        self._gens: dict[int, ClientGenerator] = {
+            c.client_id: ClientGenerator(c, prof, rng_stream=rep)
+            for c in clients}
+        self.assignment: dict[int, EngineServerHandle] = {}
+        self._meta: dict[int, tuple] = {}       # req_id -> (cid, t_arr)
+        # only injections the wall-clock backend can honor; the rest are
+        # surfaced instead of silently dropped
+        self._injections = sorted((i for i in injections
+                                   if i.kind in _ENGINE_INJECTIONS),
+                                  key=lambda i: i.at)
+        self.unsupported = [i for i in injections
+                            if i.kind not in _ENGINE_INJECTIONS]
+        self._alive: list[EngineServerHandle] = [
+            h for h in self.handles.values() if not h.draining and not h.failed]
+        # pre-build engines for scheduled joins NOW, outside the measured
+        # loop — a real engine's factory JIT-compiles and warms for
+        # seconds, which would otherwise stall serving at the join instant
+        self._prepared: dict[int, object] = {}
+        if engine_factory is not None:
+            for inj in self._injections:
+                if inj.kind == "server_join":
+                    sid = inj.params["server_id"]
+                    self._prepared[sid] = engine_factory(sid)
+
+    # ------------------------------------------------------------ assembly
+    @classmethod
+    def from_experiment(cls, exp: Experiment, engines, *,
+                        engine_factory=None, rep: int = 0,
+                        prompt_len: int = 16, max_new_tokens: int = 4,
+                        vocab: int = 256, time_scale: float = 1.0,
+                        clock: Callable[[], float] = time.monotonic,
+                        sleep: Callable[[float], None] = time.sleep
+                        ) -> "EngineRuntime":
+        """Build the wall-clock runtime from a compiled scenario.
+
+        ``engines`` supplies one engine per initial server spec (list, in
+        spec order, or dict keyed by server_id); servers that join later
+        are built on demand via ``engine_factory(server_id)``.  Uses the
+        experiment's app profile for the client generators, so arrival
+        timelines are bit-identical to ``build_simulator``'s.
+        """
+        from dataclasses import replace as _replace
+
+        from repro.core.scenario import Injection
+
+        base = [s for s in exp.servers if s.join_at == 0.0]
+        if not isinstance(engines, dict):
+            engines = list(engines)
+            if len(engines) < len(base):
+                raise ValueError(f"need {len(base)} engines for the initial "
+                                 f"fleet, got {len(engines)}")
+            engines = {s.server_id: e for s, e in zip(base, engines)}
+        else:
+            # an engine pre-registered for a server that only joins later
+            # would be replaced mid-run, orphaning its in-flight requests
+            joining = {s.server_id for s in exp.servers if s.join_at > 0.0}
+            early = joining & engines.keys()
+            if early:
+                raise ValueError(f"servers {sorted(early)} join mid-run; "
+                                 f"supply them via engine_factory, not the "
+                                 f"initial engines dict")
+        injections = list(exp.injections)
+        if exp.hedge_delay is not None:
+            # hedging is simulator-only; surface it via the unsupported
+            # list instead of silently running the scenario un-hedged
+            injections.append(Injection(0.0, "set_hedge",
+                                        {"delay": exp.hedge_delay}))
+        for s in exp.servers:
+            if s.join_at > 0.0:
+                injections.append(Injection(s.join_at, "server_join",
+                                            {"server_id": s.server_id,
+                                             "workers": s.workers,
+                                             "speed": s.speed,
+                                             "service_noise": s.service_noise}))
+            if s.drain_at is not None:
+                injections.append(Injection(s.drain_at, "server_drain",
+                                            {"server_id": s.server_id}))
+        clients = [_replace(c, seed=c.seed if c.seed else exp.seed)
+                   for c in exp.clients]
+        return cls(engines, clients, policy=exp.policy,
+                   duration=exp.duration, interval=exp.interval,
+                   vocab=vocab, prompt_len=prompt_len,
+                   max_new_tokens=max_new_tokens, seed=exp.seed,
+                   time_scale=time_scale, slo=exp.slo, injections=injections,
+                   rep=rep, profile=exp.resolved_profile(),
+                   stats_mode=exp.stats_mode,
+                   engine_factory=engine_factory, clock=clock, sleep=sleep)
+
+    # ------------------------------------------------------------ internals
+    def _rebuild_alive(self) -> None:
+        self._alive = [h for h in self.handles.values()
+                       if not h.draining and not h.failed]
+
+    def _push_next(self, heap: list, cid: int) -> None:
+        gen = self._gens.get(cid)
+        if gen is None:
+            return
+        nxt = gen.next_arrival()
+        if nxt is None or nxt[0] > self.duration:
+            self._client_done(cid)
+            return
+        heapq.heappush(heap, (nxt[0] * self.time_scale, cid))
+
+    def _client_done(self, cid: int) -> None:
+        handle = self.assignment.pop(cid, None)
+        if handle is not None:
+            handle.disconnect(cid)
+        self._gens.pop(cid, None)
+        self.balancer.release(cid)
+
+    def _admit(self, cid: int, t_arr: float) -> bool:
+        """Admit one arrival; False means the client was terminated
+        (connection refused — mirrors Simulator._connect semantics, where
+        a refused client never generates traffic)."""
+        gen = self._gens[cid]
+        if cid not in self.assignment:
+            handle = self.balancer.assign(gen, self._alive)
+            if handle is None or not handle.connect(cid):
+                self.balancer.release(cid)
+                self._gens.pop(cid, None)
+                self.dropped += 1
+                return False
+            self.assignment[cid] = handle
+        handle = self.balancer.route(None, self._alive,
+                                     self.assignment.get(cid))
+        if handle is None or handle.failed:
+            self.dropped += 1
+            return True
+        rid = next(self._rid)
+        prompt = self._rng.integers(0, self.vocab, size=self.prompt_len)
+        self._meta[rid] = (cid, t_arr)
+        handle.outstanding.add(rid)
+        handle.engine.submit(prompt, self.max_new_tokens, rid)
+        return True
+
+    def _complete(self, handle: EngineServerHandle, comp, wall: float) -> None:
+        meta = self._meta.pop(comp.req_id, None)
+        handle.outstanding.discard(comp.req_id)
+        if meta is None:
+            return                      # request of a failed server: dropped
+        cid, t_arr = meta
+        rec = Request(comp.req_id, cid, t_arr, 0.0)
+        rec.enqueued = t_arr
+        rec.started = wall - comp.latency
+        rec.completed = wall
+        rec.server_id = handle.server_id
+        self.recorder.record(rec)
+        handle.total_served += 1
+
+    def _apply_injection(self, inj) -> None:
+        kind, p = inj.kind, inj.params
+        if kind == "server_join":
+            sid = p["server_id"]
+            existing = self.handles.get(sid)
+            if existing is not None and not existing.failed:
+                raise ValueError(f"server_join for live server {sid}: "
+                                 f"replacing it would orphan its in-flight "
+                                 f"requests")
+            engine = self._prepared.pop(sid, None)
+            if engine is None:
+                if self.engine_factory is None:
+                    raise ValueError("server_join injection needs "
+                                     "engine_factory")
+                engine = self.engine_factory(sid)
+            self.handles[sid] = EngineServerHandle(sid, engine)
+            self._rebuild_alive()
+        elif kind == "server_drain":
+            h = self.handles.get(p["server_id"])
+            if h is not None:
+                h.accepting = False
+                h.draining = True
+                self._rebuild_alive()
+        elif kind == "server_fail":
+            h = self.handles.get(p["server_id"])
+            if h is not None and not h.failed:
+                h.failed = True
+                h.accepting = False
+                for rid in h.outstanding:
+                    if self._meta.pop(rid, None) is not None:
+                        self.dropped += 1
+                h.outstanding.clear()
+                self._rebuild_alive()
+                for cid in list(h.connected):
+                    h.disconnect(cid)
+                    self._reassign(cid)
+        elif kind == "set_policy":
+            pol = p["policy"]
+            self.balancer = POLICIES[pol]() if isinstance(pol, str) else pol
+        else:                                   # pre-filtered in __init__
+            raise ValueError(f"unsupported engine injection: {kind!r}")
+
+    def _reassign(self, cid: int) -> None:
+        self.balancer.release(cid)
+        self.assignment.pop(cid, None)
+        gen = self._gens.get(cid)
+        if gen is None:
+            return
+        handle = self.balancer.assign(gen, self._alive)
+        if handle is None or not handle.connect(cid):
+            self.balancer.release(cid)
+            return
+        self.assignment[cid] = handle
+
+    def _drain_gauges(self, now: float) -> None:
+        """Sample per-server gauges for every interval boundary that has
+        elapsed (boundaries are wall instants; labels are virtual time)."""
+        while self._next_sample <= now and \
+                self._next_sample <= self.duration * self.time_scale:
+            self.telemetry.sample_servers(
+                self._next_sample / self.time_scale, self.handles.values())
+            self._next_sample += self.interval * self.time_scale
+
+    # ---------------------------------------------------------------- run
+    def run(self) -> MetricsPipeline:
+        heap: list = []
+        for cid in list(self._gens):
+            self._push_next(heap, cid)
+        injections = list(self._injections)
+        inj_idx = 0
+        self._next_sample = self.interval * self.time_scale
+        end_wall = self.duration * self.time_scale
+        t0 = self._clock()
+        while True:
+            now = self._clock() - t0
+            while inj_idx < len(injections) and \
+                    injections[inj_idx].at * self.time_scale <= now:
+                self._apply_injection(injections[inj_idx])
+                inj_idx += 1
+            self._drain_gauges(now)
+            admitted = False
+            while heap and heap[0][0] <= now:
+                t_arr, cid = heapq.heappop(heap)
+                if self._admit(cid, t_arr):
+                    self._push_next(heap, cid)
+                admitted = True
+            # parity with the simulator's horizon: pending injections keep
+            # the loop alive (sleeping toward them) even after the last
+            # request drains; the idle gauge tail after the final event is
+            # fast-forwarded by the closing _drain_gauges below, where
+            # nothing can change the readings anymore
+            if not heap and not self._meta and inj_idx >= len(injections):
+                break
+            # park the next deadline (arrival, injection, or gauge
+            # boundary) on the clock so engines skipping ahead in virtual
+            # time cannot leap over a due event — e.g. completing requests
+            # a server_fail injection should have destroyed.  Only events
+            # that clear themselves belong here (the horizon does not —
+            # clamping on it would wedge a completion due just past it).
+            if hasattr(self._clock, "limit"):
+                targets = []
+                if heap:
+                    targets.append(heap[0][0])
+                if inj_idx < len(injections):
+                    targets.append(injections[inj_idx].at * self.time_scale)
+                if self._next_sample <= end_wall:
+                    targets.append(self._next_sample)
+                self._clock.limit = t0 + min(targets) if targets else None
+            stepped = False
+            for handle in list(self.handles.values()):
+                if handle.failed or handle.engine.idle():
+                    continue
+                completions = handle.engine.step()
+                stepped = True
+                if completions:
+                    wall = self._clock() - t0
+                    for comp in completions:
+                        self._complete(handle, comp, wall)
+            if not admitted and not stepped:
+                # nothing in flight: sleep the whole gap to the next due
+                # event (arrival, injection, gauge, or the horizon)
+                # instead of 1ms-spinning; with work outstanding poll at 1ms
+                now = self._clock() - t0
+                targets = [end_wall]
+                if heap:
+                    targets.append(heap[0][0])
+                if inj_idx < len(injections):
+                    targets.append(injections[inj_idx].at * self.time_scale)
+                if self._next_sample <= end_wall:
+                    targets.append(self._next_sample)
+                wait = min(targets) - now
+                if self._meta:
+                    wait = min(wait, 0.001)
+                self._sleep(max(wait, 1e-6))
+        # close out the idle tail: sample every remaining interval up to
+        # the scenario horizon (the fleet is quiescent, so these read the
+        # same as they would have in real time)
+        self._drain_gauges(end_wall)
+        return self.telemetry
+
+
+# ---------------------------------------------------------------------------
+# One entry point, either backend
+# ---------------------------------------------------------------------------
+def run_scenario(scenario, backend: str = "sim", *, rep: int = 0,
+                 engines=None, engine_factory=None, **engine_kw) -> Runtime:
+    """Compile a ``Scenario`` and execute it on the chosen backend.
+
+    ``backend="sim"`` runs the deterministic virtual-time simulator;
+    ``backend="engine"`` drives the supplied engines wall-clock.  Returns
+    the finished ``Runtime`` (telemetry under ``.telemetry``).
+    """
+    exp = scenario.compile()
+    if backend == "sim":
+        rt: Runtime = SimulatorRuntime(exp, rep=rep)
+    elif backend == "engine":
+        if engines is None:
+            raise ValueError("backend='engine' needs engines=")
+        rt = EngineRuntime.from_experiment(exp, engines, rep=rep,
+                                           engine_factory=engine_factory,
+                                           **engine_kw)
+    else:
+        raise ValueError(f"unknown backend: {backend!r}")
+    rt.run()
+    return rt

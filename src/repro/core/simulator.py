@@ -36,7 +36,7 @@ import numpy as np
 from repro.core.client import ClientConfig, ClientGenerator
 from repro.core.events import CalendarQueue
 from repro.core.request import Request
-from repro.core.stats import LatencyRecorder
+from repro.core.stats import LatencyRecorder, MetricsPipeline
 
 # typed event kinds (first payload slot after (t, seq))
 _EMIT, _FINISH, _CALL = 0, 1, 2
@@ -47,7 +47,8 @@ _EMIT, _FINISH, _CALL = 0, 1, 2
 # ---------------------------------------------------------------------------
 class SimServer:
     def __init__(self, server_id: int, workers: int = 1, speed: float = 1.0,
-                 service_noise: float = 0.0):
+                 service_noise: float = 0.0,
+                 rng_seed: Optional[tuple] = None):
         self.server_id = server_id
         self.workers = workers
         self.speed = speed
@@ -55,13 +56,19 @@ class SimServer:
         # multiplicative log-normal noise drawn per execution.  This is what
         # hedged requests exploit (Dean & Barroso).
         self.service_noise = service_noise
-        self._rng = np.random.default_rng((9176, server_id))
+        # rng_seed threads (experiment seed, server_id, rep) through so
+        # repetitions draw independent server-noise streams — the bare
+        # (9176, server_id) default replayed identical noise across all 13
+        # reps, understating confidence intervals.
+        self._rng = np.random.default_rng(
+            (9176, server_id) if rng_seed is None else rng_seed)
         self.queue: deque[Request] = deque()
         self._q_cancelled = 0          # tombstoned entries still in `queue`
         self.busy = 0
         self.connected: set[int] = set()       # client ids
         self.accepting = True
         self.draining = False
+        self.failed = False            # fault injection: completions are lost
         self.total_served = 0
         self.busy_time = 0.0
 
@@ -103,6 +110,12 @@ class SimServer:
 
     def _finish(self, req: Request, now: float, sim: "Simulator"):
         self.busy -= 1
+        if self.failed:
+            # the server died while this request was in flight: the
+            # response is lost, and nothing further starts here
+            sim._lost(req)
+            req.cancelled = True      # block any pending hedge timer
+            return
         req.completed = now
         self.total_served += 1
         sim.on_completion(req)
@@ -134,6 +147,10 @@ class SimConfig:
     rep: int = 0                          # repetition index -> RNG stream
     stats_mode: str = "exact"             # "exact" | "streaming"
     fast_clients: bool = False            # vectorized arrival generation
+    slo: Optional[float] = None           # latency SLO for telemetry frames
+    gauges: bool = True                   # sample per-server telemetry gauges
+                                          # each interval (off: saves the
+                                          # O(n_servers) sweep per interval)
 
 
 class Simulator:
@@ -144,6 +161,8 @@ class Simulator:
         self.balancer = balancer
         self.profile = profile
         self.recorder = LatencyRecorder(cfg.interval, mode=cfg.stats_mode)
+        self.telemetry = MetricsPipeline(self.recorder, cfg.interval,
+                                         slo=cfg.slo)
         self._queue = CalendarQueue(cfg.duration)
         self._seq = itertools.count()
         self._req_ids = itertools.count()
@@ -169,6 +188,10 @@ class Simulator:
         self._legacy_initial: set[int] = set()
         self._legacy_hold: list[Request] = []
         self._legacy_terminated = False
+        # telemetry: per-server gauges sampled at every interval boundary
+        # (read-only callbacks — they never perturb simulation state)
+        if cfg.gauges:
+            self.schedule(cfg.interval, self._sample_gauges)
 
     # ------------------------------------------------------------------ core
     def schedule(self, t: float, fn: Callable[[float], None]):
@@ -276,8 +299,8 @@ class Simulator:
 
     def _maybe_hedge(self, req: Request, t: float):
         """Tail-at-scale hedging: re-issue if still incomplete."""
-        if req.completed is not None or req.hedged:
-            return
+        if req.completed is not None or req.hedged or req.cancelled:
+            return            # done, already hedged, or destroyed by a failure
         others = [s for s in self._alive
                   if s.server_id != req.server_id]
         if not others:
@@ -337,3 +360,115 @@ class Simulator:
             self.servers[server_id].accepting = False
             self._rebuild_alive()
         self.schedule(at, _drain)
+
+    # ------------------------------------------------------------- telemetry
+    def _sample_gauges(self, t: float):
+        self.telemetry.sample_servers(t, self.servers.values())
+        nxt = t + self.cfg.interval
+        if nxt <= self.cfg.duration:
+            self.schedule(nxt, self._sample_gauges)
+
+    # ------------------------------------------------------------ injections
+    def fail_server(self, server_id: int, at: float):
+        """Fault injection: at ``at`` the server dies — queued requests and
+        in-flight responses are lost, connected clients rebalance."""
+        def _fail(t):
+            srv = self.servers.get(server_id)
+            if srv is None or srv.failed:
+                return
+            srv.failed = True
+            srv.accepting = False
+            srv.draining = True
+            for req in srv.queue:
+                if not req.cancelled:
+                    self._lost(req)
+                    req.cancelled = True   # pending hedge timers must not
+            srv.queue.clear()              # resurrect a destroyed request
+            srv._q_cancelled = 0
+            self._rebuild_alive()
+            for cid in list(srv.connected):
+                srv.disconnect(cid)
+                self._reassign(cid, t)
+        self.schedule(at, _fail)
+
+    def _lost(self, req: Request):
+        """A copy of ``req`` was destroyed by a server failure.  Count a
+        drop only when no other copy can still deliver it — a hedged
+        request with a live twin elsewhere is not lost, and counting it
+        would double-book the request as both dropped and served."""
+        primary = req._primary or req
+        if primary._recorded:
+            return
+        twin = req._twin
+        if twin is not None and not twin.cancelled and twin.completed is None:
+            srv = self.servers.get(twin.server_id)
+            if srv is not None and not srv.failed:
+                return                # twin survives on a healthy server
+        # no copy can deliver it: account the drop exactly once (a hedge
+        # pair destroyed by the same failure reaches here for both copies)
+        primary._recorded = True
+        self.dropped += 1
+
+    def _reassign(self, cid: int, t: float):
+        """Re-home a live client after its server vanished."""
+        self.balancer.release(cid)
+        self.assignment.pop(cid, None)
+        gen = self.clients.get(cid)
+        if gen is None:
+            return
+        server = self.balancer.assign(gen, self._alive)
+        if server is None or not server.connect(cid):
+            self.balancer.release(cid)
+            return               # unassigned: requests fall back to route()
+        self.assignment[cid] = server.server_id
+
+    def set_server_speed(self, server_id: int, at: float, factor: float):
+        """Slowdown/speedup injection: scale the server's speed at ``at``."""
+        def _set(t):
+            srv = self.servers.get(server_id)
+            if srv is not None:
+                srv.speed *= factor
+        self.schedule(at, _set)
+
+    def set_policy(self, policy, at: float):
+        """Swap the balancing policy mid-run: new assignments and
+        request-level routing use it from ``at`` onward."""
+        def _set(t):
+            from repro.core.balancer import POLICIES
+            b = POLICIES[policy]() if isinstance(policy, str) else policy
+            self.balancer = b
+            self._route_fn = b.route
+        self.schedule(at, _set)
+
+    def set_hedge(self, delay: Optional[float], at: float):
+        """Enable/retune/disable request hedging mid-run."""
+        def _set(t):
+            self._hedge_delay = delay
+        self.schedule(at, _set)
+
+    def apply_injection(self, kind: str, at: float, params: dict):
+        """Apply one compiled ``Scenario`` injection (see core/scenario.py)."""
+        if kind == "server_fail":
+            self.fail_server(params["server_id"], at)
+        elif kind == "server_speed":
+            self.set_server_speed(params["server_id"], at, params["factor"])
+        elif kind == "server_join":
+            sid = params["server_id"]
+            # same (seed, server_id, rep) noise-stream layout as
+            # build_simulator: injected joins must not replay identical
+            # noise across repetitions either
+            rng_seed = params.get("rng_seed") or (9176, self.cfg.seed, sid,
+                                                  self.cfg.rep)
+            self.add_server(
+                SimServer(sid, params.get("workers", 1),
+                          params.get("speed", 1.0),
+                          params.get("service_noise", 0.0),
+                          rng_seed=rng_seed), at)
+        elif kind == "server_drain":
+            self.drain_server(params["server_id"], at)
+        elif kind == "set_policy":
+            self.set_policy(params["policy"], at)
+        elif kind == "set_hedge":
+            self.set_hedge(params["delay"], at)
+        else:
+            raise ValueError(f"unknown injection kind: {kind!r}")

@@ -382,6 +382,156 @@ class LatencyRecorder:
         return sorted(self.by_client)
 
 
+# ---------------------------------------------------------------------------
+# Metrics pipeline: per-interval time series over a LatencyRecorder
+# ---------------------------------------------------------------------------
+@dataclass
+class IntervalFrame:
+    """One interval of the run's time series ("Tell-Tale Tail Latencies":
+    tail numbers are only interpretable next to their per-interval series)."""
+    t: int                          # interval index (t*interval .. (t+1)*interval)
+    n: int                          # requests completed in the interval
+    qps: float                      # served throughput (n / interval)
+    mean: float
+    p50: float
+    p95: float
+    p99: float
+    slo_violation_frac: float       # fraction of latencies > slo (nan: no SLO)
+    # server_id -> fraction of capacity consumed by service work INITIATED
+    # this interval (busy_time accrues at request start, clipped to 1.0);
+    # exact for service times << interval, leads true occupancy by up to
+    # one service time otherwise
+    util: dict
+    qdepth: dict                    # server_id -> queued requests (sampled)
+
+
+class MetricsPipeline:
+    """Time-series telemetry over a ``LatencyRecorder``.
+
+    Both runtimes (virtual-time ``Simulator`` and wall-clock
+    ``EngineRuntime``) publish through this one interface:
+
+    * latency summaries delegate verbatim to the underlying recorder, so
+      consumers that switch from ``sim.recorder.X`` to ``sim.telemetry.X``
+      see bit-identical numbers (the figure scripts rely on this);
+    * per-server gauges (utilization, queue depth) are sampled by the
+      runtime at interval boundaries via ``sample_servers``;
+    * ``frames()`` joins both into per-interval ``IntervalFrame`` rows
+      (served QPS, windowed percentiles, SLO-violation fraction).
+
+    In streaming-recorder mode the per-interval percentiles and SLO
+    fractions come from the bounded reservoir samples (approximate); in
+    exact mode they are computed from the raw per-cell latency lists.
+    """
+
+    def __init__(self, recorder: "LatencyRecorder", interval: float = 1.0,
+                 slo: Optional[float] = None):
+        self.recorder = recorder
+        self.interval = interval
+        self.slo = slo
+        # ivl -> server_id -> (utilization, queue_depth), sampled at the
+        # *end* of each interval by the owning runtime
+        self._gauges: dict[int, dict[int, tuple]] = {}
+        self._busy_time: dict[int, float] = {}      # last busy_time reading
+
+    # ---- runtime-facing ----------------------------------------------------
+    def sample_servers(self, t: float, servers) -> None:
+        """Record per-server gauges at time ``t`` (an interval boundary).
+
+        ``servers`` is any iterable of objects with ``server_id``,
+        ``workers``/``max_batch`` capacity, and busy/queue accounting
+        (``SimServer`` and the engine-runtime server handles both fit).
+        Servers exposing a cumulative ``busy_time`` get time-averaged
+        utilization over the interval; otherwise the instantaneous
+        busy-worker fraction at the sample point is used.
+        """
+        ivl = int(round(t / self.interval)) - 1     # gauge closes interval t-1
+        snap = {}
+        for s in servers:
+            cap = getattr(s, "workers", None) or getattr(s, "max_batch", 1)
+            busy = s.busy if hasattr(s, "busy") else s.load()
+            bt = getattr(s, "busy_time", None)
+            if bt is not None and cap:
+                delta = bt - self._busy_time.get(s.server_id, 0.0)
+                self._busy_time[s.server_id] = bt
+                util = min(max(delta / (self.interval * cap), 0.0), 1.0)
+            else:
+                util = min(busy / cap, 1.0) if cap else 0.0
+            snap[s.server_id] = (util, max(s.load() - busy, 0))
+        self._gauges[ivl] = snap
+
+    # ---- latency accessors (bit-compatible with the recorder) --------------
+    def overall(self) -> Summary:
+        return self.recorder.overall()
+
+    def client(self, cid: int) -> Summary:
+        return self.recorder.client(cid)
+
+    def clients(self) -> list:
+        return self.recorder.clients()
+
+    def series(self, cid: Optional[int] = None) -> dict:
+        """Per-interval latency summaries (delegates to the recorder)."""
+        return self.recorder.intervals(cid)
+
+    def window(self, metric: str, lo: int = 0, hi: Optional[int] = None,
+               cid: Optional[int] = None) -> list:
+        """Raw per-interval values of ``metric`` over [lo, hi) — the
+        building block the figure scripts' window statistics use."""
+        return [getattr(s, metric) for t, s in self.series(cid).items()
+                if t >= lo and (hi is None or t < hi)]
+
+    # ---- time series -------------------------------------------------------
+    def _interval_samples(self) -> dict[int, list]:
+        rec = self.recorder
+        out: dict[int, list] = defaultdict(list)
+        if rec.mode == "exact":
+            for (c, ivl), xs in rec.by_cell.items():
+                out[ivl].extend(xs)
+        else:
+            for ivl, stat in rec._by_ivl.items():
+                out[ivl] = stat.res.data
+        return out
+
+    def frames(self) -> list[IntervalFrame]:
+        samples = self._interval_samples()
+        series = self.series()
+        ivls = sorted(set(series) | set(self._gauges))
+        frames = []
+        for ivl in ivls:
+            s = series.get(ivl)
+            xs = samples.get(ivl, [])
+            if self.slo is not None and xs:
+                viol = sum(1 for x in xs if x > self.slo) / len(xs)
+            else:
+                viol = float("nan")
+            gauges = self._gauges.get(ivl, {})
+            util = {sid: g[0] for sid, g in gauges.items()}
+            qdepth = {sid: g[1] for sid, g in gauges.items()}
+            if s is None:
+                s = Summary(0, *(float("nan"),) * 4)
+            frames.append(IntervalFrame(
+                t=ivl, n=s.n, qps=s.n / self.interval, mean=s.mean,
+                p50=s.p50, p95=s.p95, p99=s.p99, slo_violation_frac=viol,
+                util=util, qdepth=qdepth))
+        return frames
+
+    def to_rows(self) -> list[dict]:
+        """Flat dict rows (CSV-friendly) of the interval time series."""
+        rows = []
+        for f in self.frames():
+            mean_util = (sum(f.util.values()) / len(f.util)
+                         if f.util else float("nan"))
+            rows.append({"t": f.t, "n": f.n, "qps": f.qps,
+                         "mean_ms": f.mean * 1e3, "p50_ms": f.p50 * 1e3,
+                         "p95_ms": f.p95 * 1e3, "p99_ms": f.p99 * 1e3,
+                         "slo_violation_frac": f.slo_violation_frac,
+                         "mean_util": mean_util,
+                         "total_qdepth": sum(f.qdepth.values())
+                                         if f.qdepth else 0})
+        return rows
+
+
 def confidence95(xs) -> tuple[float, float]:
     """Mean and 95% CI half-width across repetitions (paper's error bars).
 

@@ -1,0 +1,46 @@
+"""Named scenario registry.
+
+Canonical dynamic scenarios (``repro.scenarios.canonical``) register
+themselves here; ``get()`` builds one by name with optional overrides.
+
+    from repro.scenarios import get, names
+    sc = get("flash-crowd", duration=30.0, seed=3)
+
+Run any of them from the command line on either backend:
+
+    PYTHONPATH=src python -m repro.scenarios --list
+    PYTHONPATH=src python -m repro.scenarios flash-crowd --backend sim
+    PYTHONPATH=src python -m repro.scenarios flash-crowd --backend engine --stub
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict
+
+from repro.core.scenario import Scenario
+
+SCENARIOS: Dict[str, Callable[..., Scenario]] = {}
+
+
+def register(name: str):
+    """Decorator: register a ``(**overrides) -> Scenario`` builder."""
+    def deco(fn):
+        SCENARIOS[name] = fn
+        fn.scenario_name = name
+        return fn
+    return deco
+
+
+def names() -> list[str]:
+    return sorted(SCENARIOS)
+
+
+def get(name: str, **overrides) -> Scenario:
+    try:
+        builder = SCENARIOS[name]
+    except KeyError:
+        raise KeyError(f"unknown scenario {name!r}; available: {names()}") \
+            from None
+    return builder(**overrides)
+
+
+from repro.scenarios import canonical as _canonical  # noqa: E402,F401  (registers)

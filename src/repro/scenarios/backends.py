@@ -1,0 +1,73 @@
+"""Engine-fleet builders shared by the scenario CLI and launch/serve.
+
+One place constructs the engine replicas (and the join factory) a
+compiled scenario's engine backend needs — real JAX ``InferenceEngine``s
+with warmed compile caches, or profile-timed ``StubEngine``s on a
+virtual clock.
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+
+def build_real_engines(arch: str, n: int, *, smoke: bool = False,
+                       max_batch: int = 4, prompt_len: int = 16,
+                       max_new_tokens: int = 4, seed: int = 0):
+    """-> (engines, factory, vocab_size): ``n`` warmed real engines plus a
+    ``factory(server_id)`` for servers that join mid-scenario."""
+    import jax
+
+    from repro.configs.base import get_config
+    from repro.models import registry as R
+    from repro.serving.engine import make_warmed_engine
+
+    cfg = get_config(arch + ("-smoke" if smoke else ""))
+    params = R.init_params(cfg, jax.random.PRNGKey(seed))
+
+    def factory(sid=None):
+        return make_warmed_engine(cfg, params, max_batch=max_batch,
+                                  prompt_len=prompt_len,
+                                  max_new_tokens=max_new_tokens)
+    return [factory() for _ in range(n)], factory, cfg.vocab_size
+
+
+def run_experiment_on_real_engines(exp, *, arch: str, smoke: bool = False,
+                                   max_batch: int = 4, prompt_len: int = 16,
+                                   max_new_tokens: int = 4, seed: int = 0,
+                                   time_scale: float = 1.0):
+    """Run a compiled experiment wall-clock on warmed real engines and
+    return the finished ``EngineRuntime`` — the single assembly path the
+    scenario CLI and ``launch/serve --scenario`` both use."""
+    from repro.core.runtime import EngineRuntime
+
+    n_base = sum(1 for s in exp.servers if s.join_at == 0.0)
+    engines, factory, vocab = build_real_engines(
+        arch, n_base, smoke=smoke, max_batch=max_batch,
+        prompt_len=prompt_len, max_new_tokens=max_new_tokens, seed=seed)
+    rt = EngineRuntime.from_experiment(
+        exp, engines, engine_factory=factory, vocab=vocab,
+        prompt_len=prompt_len, max_new_tokens=max_new_tokens,
+        time_scale=time_scale)
+    rt.run()
+    return rt
+
+
+def build_stub_engines(exp, clock: Callable[[], float], seed: int = 0):
+    """-> (engines, factory): one profile-timed ``StubEngine`` per initial
+    server spec of the compiled experiment, honoring workers and speed."""
+    from repro.serving.engine import StubEngine
+
+    profile = exp.resolved_profile()
+    specs = {s.server_id: s for s in exp.servers}
+    engines = {s.server_id: StubEngine(profile, workers=s.workers,
+                                       speed=s.speed, seed=seed + s.server_id,
+                                       clock=clock)
+               for s in exp.servers if s.join_at == 0.0}
+
+    def factory(sid: int):
+        spec = specs.get(sid)
+        return StubEngine(profile,
+                          workers=spec.workers if spec else 1,
+                          speed=spec.speed if spec else 1.0,
+                          seed=seed + sid, clock=clock)
+    return engines, factory

@@ -12,6 +12,7 @@ latency decomposes into queue wait (admission) + service (prefill+decode).
 from __future__ import annotations
 
 import time
+from collections import deque
 from dataclasses import dataclass, field
 from typing import Callable, Optional
 
@@ -40,6 +41,77 @@ class Completion:
     tokens: list
     ttft: float                    # time to first token (from submit)
     latency: float                 # total sojourn
+
+
+class StubEngine:
+    """Engine-protocol stand-in: no model, just timed service slots.
+
+    Serves each request after a profile-sampled service time on one of
+    ``workers`` parallel slots — the wall-clock analogue of ``SimServer``.
+    Lets ``EngineRuntime``, the scenario CLI and the parity tests exercise
+    the real-time path without weights or a JIT compile.  With a clock
+    that exposes ``advance_to`` (``repro.core.runtime.VirtualClock``),
+    ``step()`` jumps virtual time to the next completion the way a real
+    engine's blocking decode step consumes wall time.
+    """
+
+    def __init__(self, profile, *, workers: int = 1, speed: float = 1.0,
+                 seed: int = 0, clock: Callable[[], float] = time.monotonic):
+        self.profile = profile
+        self.max_batch = workers
+        self.speed = speed
+        self.clock = clock
+        self._rng = np.random.default_rng((9176, 0x57AB, seed))
+        self.queue: deque[tuple] = deque()      # (req_id, submitted_at)
+        self.active: dict[int, tuple] = {}      # req_id -> (finish, start, submit)
+        self.total_served = 0
+        self.busy_time = 0.0                    # accrued service seconds
+
+    def submit(self, prompt, max_new_tokens: int, req_id: int) -> None:
+        self.queue.append((req_id, self.clock()))
+
+    def pending(self) -> int:
+        return len(self.queue)
+
+    def n_active(self) -> int:
+        return len(self.active)
+
+    def idle(self) -> bool:
+        return not self.queue and not self.active
+
+    def step(self) -> list[Completion]:
+        now = self.clock()
+        done = []
+        for rid, (finish, start, submit) in list(self.active.items()):
+            if finish <= now:
+                del self.active[rid]
+                done.append(Completion(rid, [], ttft=start - submit,
+                                       latency=finish - submit))
+                self.total_served += 1
+        while self.queue and len(self.active) < self.max_batch:
+            rid, submit = self.queue.popleft()
+            dur = self.profile.sample(self._rng) / self.speed
+            self.busy_time += dur
+            self.active[rid] = (now + dur, now, submit)
+        if not done and self.active and hasattr(self.clock, "advance_to"):
+            # mimic a blocking decode step: consume (virtual) time up to
+            # the earliest in-flight completion
+            self.clock.advance_to(min(f for f, _, _ in self.active.values()))
+        return done
+
+
+def make_warmed_engine(cfg: ArchConfig, params, *, max_batch: int = 4,
+                       prompt_len: int = 16,
+                       max_new_tokens: int = 4) -> "InferenceEngine":
+    """Build an InferenceEngine sized for the harness's request shape and
+    warm its prefill/decode compile caches, so measured latency is
+    serving, not compilation.  Shared by the serving launcher and the
+    scenario CLI's real-engine backend."""
+    eng = InferenceEngine(cfg, params, max_batch=max_batch,
+                          max_len=prompt_len + max_new_tokens + 32)
+    eng.submit(np.arange(prompt_len) % cfg.vocab_size, 2, -1)
+    eng.run_until_idle()
+    return eng
 
 
 def _bucket(n: int, buckets=(32, 64, 128, 256, 512, 1024, 2048, 4096)) -> int:

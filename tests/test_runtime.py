@@ -1,0 +1,223 @@
+"""Runtime layer: the wall-clock EngineRuntime reuses the simulator's
+client/balancer/recorder machinery, honors the balancer lifecycle, and
+accepts the same compiled Scenario as the virtual-time backend."""
+import warnings
+
+import numpy as np
+import pytest
+
+from repro.core.client import ClientConfig, ConstantQPS
+from repro.core.harness import (Experiment, ServerSpec, run,
+                                run_engine_experiment)
+from repro.core.profiles import FixedProfile, tailbench_profile
+from repro.core.runtime import (EngineRuntime, SimulatorRuntime,
+                                VirtualClock, run_scenario)
+from repro.core.scenario import (ClientArrival, Scenario, ServerFail,
+                                 SetPolicy)
+from repro.serving.engine import StubEngine
+
+
+def _stub_fleet(n, clock, profile=None, workers=2, seed=0):
+    prof = profile or FixedProfile("svc", 2e-3)
+    return [StubEngine(prof, workers=workers, seed=seed + i, clock=clock)
+            for i in range(n)]
+
+
+def _make_runtime(clients, n_engines=2, profile=None, **kw):
+    clock = VirtualClock()
+    engines = _stub_fleet(n_engines, clock, profile)
+    rt = EngineRuntime(engines, clients, clock=clock, sleep=clock.sleep, **kw)
+    return rt
+
+
+def test_engine_runtime_serves_all_clients():
+    clients = [ClientConfig(i, ConstantQPS(100), seed=i + 1,
+                            total_requests=200) for i in range(3)]
+    rt = _make_runtime(clients, policy="round_robin", duration=30.0)
+    rt.run()
+    s = rt.telemetry.overall()
+    assert s.n == 600
+    assert sorted(rt.recorder.clients()) == [0, 1, 2]
+    assert all(rt.telemetry.client(i).n == 200 for i in range(3))
+    # balancer lifecycle: exhausted clients released their connections
+    assert rt.assignment == {}
+
+
+def test_engine_runtime_arrivals_match_simulator():
+    """Same configs + seeds + profile -> bit-identical arrival timelines
+    (the generators are shared verbatim across backends)."""
+    from repro.core.harness import build_simulator
+    clients = [ClientConfig(i, ConstantQPS(150), seed=7,
+                            total_requests=150) for i in range(2)]
+    exp = Experiment(clients=clients, servers=(ServerSpec(0), ServerSpec(1)),
+                     app="xapian", duration=30.0, seed=7)
+
+    def drain(gen):
+        out = []
+        while True:
+            nxt = gen.next_arrival()
+            if nxt is None:
+                break
+            out.append(nxt)              # (time, service_demand) pairs
+        return out
+
+    # pull the arrival streams out of each backend's own generators
+    # before running anything: they must be the exact same draws
+    sim_gens = build_simulator(exp).clients
+    eng_rt = EngineRuntime.from_experiment(
+        exp, _stub_fleet(2, VirtualClock(), tailbench_profile("xapian")))
+    for cid in (0, 1):
+        assert drain(sim_gens[cid]) == drain(eng_rt._gens[cid])
+
+    # and end-to-end both backends serve every generated request
+    sim = run(exp)
+    clock = VirtualClock()
+    engines = _stub_fleet(2, clock, tailbench_profile("xapian"))
+    rt = EngineRuntime.from_experiment(exp, engines, clock=clock,
+                                       sleep=clock.sleep)
+    rt.run()
+    assert rt.telemetry.overall().n == sim.telemetry.overall().n == 300
+
+
+def test_engine_runtime_telemetry_frames():
+    clients = [ClientConfig(0, ConstantQPS(200), seed=3, end_time=10.0)]
+    rt = _make_runtime(clients, duration=10.0, slo=1e-9)
+    rt.run()
+    frames = rt.telemetry.frames()
+    assert len(frames) >= 9
+    assert sum(f.n for f in frames) == rt.telemetry.overall().n
+    mid = frames[len(frames) // 2]
+    assert mid.qps > 0 and 0 <= mid.slo_violation_frac <= 1.0
+    assert mid.util and all(0.0 <= u <= 1.0 for u in mid.util.values())
+
+
+def test_engine_runtime_load_aware_release_on_churn():
+    """Short-lived clients must not leave ghost subscriptions behind."""
+    from repro.core.balancer import LoadAware
+    bal = LoadAware()
+    clients = [ClientConfig(0, ConstantQPS(400), seed=1, total_requests=50),
+               ClientConfig(1, ConstantQPS(100), seed=2, total_requests=400)]
+    rt = _make_runtime(clients, policy=bal, duration=30.0)
+    rt.run()
+    assert rt.telemetry.overall().n == 450
+    assert bal._client_sub == {}           # every departure released
+
+
+def test_scenario_parity_sim_vs_engine():
+    """One Scenario, both backends: same arrival count, same ordering of
+    light vs heavy intervals, plausibly-scaled latencies."""
+    sc = Scenario(
+        name="parity", duration=20.0, seed=11, app="xapian", policy="jsq",
+        servers=(ServerSpec(0, workers=2), ServerSpec(1, workers=2)),
+        events=[ClientArrival(0.0, 300.0, count=2),
+                ClientArrival(8.0, 600.0, count=2, leave_at=14.0)])
+    sim_rt = run_scenario(sc, "sim")
+    clock = VirtualClock()
+    exp = sc.compile()
+    engines = _stub_fleet(2, clock, tailbench_profile("xapian"), seed=11)
+    eng_rt = run_scenario(sc, "engine", engines=engines,
+                          clock=clock, sleep=clock.sleep)
+    s_sim, s_eng = sim_rt.telemetry.overall(), eng_rt.telemetry.overall()
+    # identical client machinery -> identical arrivals; served counts may
+    # differ only by the horizon cutoff (the sim truncates completions at
+    # t=duration, the engine drains its last in-flight handful)
+    assert s_sim.n > 0 and s_eng.n > 0
+    assert abs(s_sim.n - s_eng.n) <= 20
+    # plausibly-ordered latencies: positive, tail >= median, same decade
+    for s in (s_sim, s_eng):
+        assert 0 < s.p50 <= s.p95 <= s.p99
+    assert 0.2 < s_eng.p50 / s_sim.p50 < 5.0
+    # both see the mid-run surge
+    for rt in (sim_rt, eng_rt):
+        base = np.mean(rt.telemetry.window("n", 2, 8))
+        surge = np.mean(rt.telemetry.window("n", 9, 14))
+        assert surge > 1.5 * base
+
+
+def test_engine_runtime_server_fail_injection():
+    sc = Scenario(
+        name="fail", duration=15.0, seed=5, policy="jsq",
+        servers=(ServerSpec(0), ServerSpec(1)),
+        events=[ClientArrival(0.0, 300.0, count=2),
+                ServerFail(6.0, 1),
+                SetPolicy(8.0, "round_robin")])
+    clock = VirtualClock()
+    engines = _stub_fleet(2, clock, FixedProfile("svc", 1e-3))
+    rt = run_scenario(sc, "engine", engines=engines,
+                      clock=clock, sleep=clock.sleep)
+    assert rt.handles[1].failed
+    assert rt.handles[0].total_served > 0
+    # served requests only stopped on the failed replica
+    assert rt.telemetry.overall().n > 0
+    from repro.core.balancer import RoundRobin
+    assert isinstance(rt.balancer, RoundRobin)
+
+
+def test_engine_runtime_unsupported_injections_surface():
+    from repro.core.scenario import SetHedge
+    sc = Scenario(name="h", duration=5.0,
+                  events=[ClientArrival(0.0, 100.0),
+                          SetHedge(2.0, 0.01)])
+    clock = VirtualClock()
+    engines = _stub_fleet(1, clock)
+    rt = run_scenario(sc, "engine", engines=engines,
+                      clock=clock, sleep=clock.sleep)
+    assert [i.kind for i in rt.unsupported] == ["set_hedge"]
+
+
+def test_run_engine_experiment_shim_deprecated():
+    # the legacy shim runs on the real wall clock; 50 requests at 100 QPS
+    # complete in well under a second against a 2ms-service stub
+    engines = [StubEngine(FixedProfile("svc", 2e-3), workers=2)]
+    clients = [ClientConfig(0, ConstantQPS(100), seed=1, total_requests=50)]
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        rec = run_engine_experiment(engines, clients, duration=5.0)
+    assert any(issubclass(x.category, DeprecationWarning) for x in w)
+    assert rec.overall().n == 50
+
+
+def test_simulator_runtime_adapter():
+    exp = Experiment(clients=[ClientConfig(0, ConstantQPS(200), seed=9)],
+                     duration=10.0, seed=9)
+    rt = SimulatorRuntime(exp)
+    rt.run()
+    assert rt.telemetry.overall().n > 0
+    assert rt.recorder is rt.sim.recorder
+
+
+def test_engine_runtime_time_scale_aligns_telemetry():
+    """time_scale stretches wall time; interval indices must stay in
+    virtual time so frames align with gauges and the QPS schedule."""
+    clock = VirtualClock()
+    eng = [StubEngine(FixedProfile("s", 2e-3), workers=2, clock=clock)]
+    rt = EngineRuntime(eng, [ClientConfig(0, ConstantQPS(50), seed=1,
+                                          end_time=4.0)],
+                       duration=4.0, time_scale=4.0,
+                       clock=clock, sleep=clock.sleep)
+    rt.run()
+    frames = rt.telemetry.frames()
+    assert max(f.t for f in frames) <= 4
+    full = [f for f in frames if f.n > 20]
+    assert full and all(25 < f.qps < 75 for f in full)
+
+
+def test_engine_runtime_refused_connection_kills_client():
+    """Parity with Simulator._connect: a client refused at connect time
+    generates no traffic and counts one drop."""
+    clock = VirtualClock()
+    eng = _stub_fleet(1, clock)
+    eng[0].accepting = False          # unused by handle; refuse via policy
+    from repro.core.balancer import Balancer
+
+    class _RefuseAll(Balancer):
+        def assign(self, client, servers):
+            return None
+
+    rt = EngineRuntime(eng, [ClientConfig(0, ConstantQPS(100), seed=1,
+                                          end_time=5.0)],
+                       policy=_RefuseAll(), duration=5.0,
+                       clock=clock, sleep=clock.sleep)
+    rt.run()
+    assert rt.dropped == 1
+    assert rt.telemetry.overall().n == 0

@@ -1,0 +1,215 @@
+"""Scenario layer: canonical scenarios build, run deterministically, and
+their dynamic events (failure, churn, policy/hedge swaps, slowdown,
+zero-rate skipping) behave as declared."""
+import math
+
+import numpy as np
+import pytest
+
+from repro.core.client import (ClientConfig, ConstantQPS, PiecewiseQPS,
+                               TraceQPS)
+from repro.core.harness import Experiment, ServerSpec, run
+from repro.core.profiles import FixedProfile
+from repro.core.runtime import run_scenario
+from repro.core.scenario import (ClientArrival, ClientChurn, FlashCrowd,
+                                 Scenario, ServerFail, ServerSlowdown,
+                                 SetHedge, SetPolicy)
+from repro.scenarios import SCENARIOS, get, names
+import repro.core.client as client_mod
+
+
+CANONICAL = names()
+
+
+def test_registry_has_the_six_canonical_scenarios():
+    assert set(CANONICAL) == {"steady", "flash-crowd", "diurnal-fleet",
+                              "server-failure", "elastic-autoscale",
+                              "churn-storm"}
+
+
+@pytest.mark.parametrize("name", CANONICAL)
+def test_canonical_scenario_compiles(name):
+    sc = get(name, seed=3)
+    exp = sc.compile()
+    cids = [c.client_id for c in exp.clients]
+    assert cids and len(set(cids)) == len(cids)
+    sids = [s.server_id for s in exp.servers]
+    assert sids and len(set(sids)) == len(sids)
+    for inj in exp.injections:
+        assert 0.0 <= inj.at <= sc.duration
+
+
+@pytest.mark.parametrize("name", CANONICAL)
+def test_canonical_scenario_runs_deterministically(name):
+    """Same seed -> bit-identical recorder digest, twice."""
+    dur = 12.0
+    a = run_scenario(get(name, seed=5, duration=dur), "sim")
+    b = run_scenario(get(name, seed=5, duration=dur), "sim")
+    assert a.recorder.all, name
+    assert a.recorder.all == b.recorder.all
+    c = run_scenario(get(name, seed=6, duration=dur), "sim")
+    assert a.recorder.all != c.recorder.all      # seed actually threads
+
+
+def test_flash_crowd_raises_interval_load():
+    rt = run_scenario(get("flash-crowd", seed=1), "sim")
+    frames = {f.t: f for f in rt.telemetry.frames()}
+    before = np.mean([frames[t].qps for t in range(5, 14)])
+    during = np.mean([frames[t].qps for t in range(16, 24)])
+    assert during > 2.0 * before
+
+
+def test_server_failure_loses_and_recovers():
+    rt = run_scenario(get("server-failure", seed=2), "sim")
+    sim = rt.sim
+    assert sim.servers[2].failed
+    assert rt.dropped > 0                      # queued/in-flight work lost
+    assert sim.servers[3].total_served > 0     # replacement absorbed load
+    # the survivors plus replacement keep serving after the failure
+    late = rt.telemetry.window("n", 32, 44)
+    assert sum(late) > 0
+
+
+def test_churn_storm_expands_clients():
+    exp = get("churn-storm", seed=4).compile()
+    assert len(exp.clients) > 20               # the Poisson storm expanded
+    # churned clients have bounded lifetimes
+    churned = [c for c in exp.clients if c.end_time is not None]
+    assert churned
+    rt = run_scenario(get("churn-storm", seed=4), "sim")
+    assert len(rt.recorder.clients()) > 10
+
+
+def test_policy_and_hedge_injections_apply():
+    sc = Scenario(
+        name="swap", duration=10.0,
+        servers=(ServerSpec(0), ServerSpec(1)),
+        events=[ClientArrival(0.0, 100.0, count=2),
+                SetPolicy(5.0, "jsq"),
+                SetHedge(6.0, 0.01)])
+    rt = run_scenario(sc, "sim")
+    from repro.core.balancer import JoinShortestQueue
+    assert isinstance(rt.sim.balancer, JoinShortestQueue)
+    assert rt.sim._hedge_delay == 0.01
+
+
+def test_slowdown_injection_hurts_then_recovers():
+    base = Scenario(
+        name="slow", duration=30.0, seed=9,
+        servers=(ServerSpec(0),),
+        events=[ClientArrival(0.0, 300.0, count=1),
+                ServerSlowdown(10.0, 0, factor=4.0, until=20.0)])
+    rt = run_scenario(base, "sim")
+    p99_before = np.nanmean(rt.telemetry.window("p99", 2, 9))
+    p99_during = np.nanmean(rt.telemetry.window("p99", 12, 19))
+    p99_after = np.nanmean(rt.telemetry.window("p99", 24, 29))
+    assert p99_during > 3.0 * p99_before
+    assert p99_after < p99_during / 2
+    assert rt.sim.servers[0].speed == pytest.approx(1.0)   # restored
+
+
+def test_compile_rejects_unknown_servers():
+    sc = Scenario(name="bad", duration=5.0,
+                  events=[ServerFail(1.0, 99)])
+    with pytest.raises(ValueError):
+        sc.compile()
+
+
+# ---------------------------------------------------------------------------
+# Zero-rate skipping (satellite: next_change breakpoints)
+# ---------------------------------------------------------------------------
+def test_piecewise_next_change():
+    p = PiecewiseQPS([(0, 100), (10, 0), (5000, 100)])
+    assert p.next_change(0.0) == 10.0
+    assert p.next_change(10.0) == 5000.0
+    assert p.next_change(6000.0) == math.inf
+    assert ConstantQPS(5).next_change(3.0) == math.inf
+
+
+def test_trace_next_change_skips_flat_regions():
+    t = TraceQPS([0.0] * 3600 + [50.0, 50.0], dt=1.0)
+    assert t.rate(100.0) == 0.0
+    assert t.next_change(0.5) == 3600.0
+    assert t.next_change(3600.5) == math.inf    # constant to the end
+    assert TraceQPS([]).next_change(0.0) == math.inf
+
+
+def test_generator_skips_long_idle_gap_in_one_step():
+    """A night-time gap must not be walked in MAX_STEP increments."""
+    calls = {"n": 0}
+    sched = PiecewiseQPS([(0, 0), (100_000, 50)])
+    orig = sched.rate
+
+    def counting_rate(t):
+        calls["n"] += 1
+        return orig(t)
+    sched.rate = counting_rate
+    gen = client_mod.ClientGenerator(
+        ClientConfig(0, sched, seed=1), FixedProfile("x", 1e-3))
+    t, _ = gen.next_arrival()
+    assert t >= 100_000
+    # seed behavior: 400k spin iterations; now a handful of rate lookups
+    assert calls["n"] < 50
+
+
+def test_generator_zero_forever_terminates():
+    gen = client_mod.ClientGenerator(
+        ClientConfig(0, ConstantQPS(0.0), seed=1), FixedProfile("x", 1e-3))
+    assert gen.next_arrival() is None
+
+
+def test_trace_generator_skips_idle_night():
+    trace = [20.0] * 5 + [0.0] * 100_000 + [20.0] * 5
+    gen = client_mod.ClientGenerator(
+        ClientConfig(0, TraceQPS(trace, dt=1.0), seed=2),
+        FixedProfile("x", 1e-3))
+    ts = []
+    while True:
+        nxt = gen.next_arrival()
+        if nxt is None or nxt[0] > 100_010:
+            break
+        ts.append(nxt[0])
+    day1 = [t for t in ts if t < 10]
+    day2 = [t for t in ts if t >= 100_000]
+    assert day1 and day2
+    assert not any(10 <= t < 100_000 for t in ts)
+
+
+# ---------------------------------------------------------------------------
+# Server-noise RNG threading (satellite: (seed, server_id, rep) streams)
+# ---------------------------------------------------------------------------
+def test_server_noise_differs_across_reps():
+    exp = Experiment(clients=[ClientConfig(0, ConstantQPS(100), seed=3)],
+                     servers=(ServerSpec(0, service_noise=0.8),),
+                     duration=8.0, app="xapian", seed=3)
+    r0 = run(exp, rep=0).recorder.all
+    r1 = run(exp, rep=1).recorder.all
+    assert r0 != r1
+
+
+def test_server_noise_differs_across_seeds_same_arrivals():
+    """Same client arrivals, different experiment seed -> different noise."""
+    clients = [ClientConfig(0, ConstantQPS(100), seed=3)]
+    servers = (ServerSpec(0, service_noise=0.8),)
+    a = run(Experiment(clients=clients, servers=servers, duration=8.0,
+                       app="xapian", seed=1)).recorder.all
+    b = run(Experiment(clients=clients, servers=servers, duration=8.0,
+                       app="xapian", seed=2)).recorder.all
+    assert a != b
+
+
+def test_failure_with_hedging_conserves_requests():
+    """Regression: a request destroyed by fail_server must not be
+    resurrected by its pending hedge timer — every generated request is
+    recorded exactly once OR counted dropped, never both."""
+    total = 40 * 4
+    sc = Scenario(
+        name="fail-hedge", duration=120.0, seed=13, app="sphinx",
+        policy="jsq", hedge_delay=0.3,
+        servers=(ServerSpec(0, workers=2), ServerSpec(1, workers=2)),
+        events=[ClientArrival(0.0, 20.0, count=4, requests=40),
+                ServerFail(2.0, 0)])
+    rt = run_scenario(sc, "sim")
+    n, dropped = rt.telemetry.overall().n, rt.dropped
+    assert dropped > 0                       # the failure destroyed work
+    assert n + dropped == total, (n, dropped)
