@@ -9,7 +9,9 @@ events/sec and peak RSS per run.
 Both engines run with identical exact-mode recorders for the speed
 comparison (equal stats cost); the calendar engine is additionally
 measured with the streaming P²/reservoir recorder to show the bounded-
-memory path.  The calendar rows run with ``fast_clients`` (the rebuilt
+memory path, and a ``batched`` row runs the continuous-batching serve
+loop (BatchedService op events) at every scale so the batched hot path
+is perf-gated alongside the scalar one.  The calendar rows run with ``fast_clients`` (the rebuilt
 engine's vectorized arrival path), so the reported speedup is the whole
 rebuilt request path — event queue + client generation — not the
 calendar queue in isolation.  The seed engine's O(n_servers) per-request scan makes full
@@ -30,6 +32,9 @@ Usage:
 events/sec advantage over the seed engine at the largest scale falls
 below MIN or the exact-mode equivalence check fails — engine-perf
 regressions fail CI instead of only showing up in BENCH_simulator.json.
+Smoke runs write ``BENCH_simulator.smoke.json`` instead, so the
+committed full-scale record at the repo root is never clobbered by a
+CI-scale run.
 """
 from __future__ import annotations
 
@@ -42,6 +47,7 @@ import time
 
 REPO = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
 OUT = os.path.join(REPO, "BENCH_simulator.json")
+OUT_SMOKE = os.path.join(REPO, "BENCH_simulator.smoke.json")
 if REPO not in sys.path:          # `import benchmarks...` from a subprocess
     sys.path.insert(0, REPO)
 
@@ -49,6 +55,12 @@ DURATION = 90.0           # sim horizon (virtual seconds)
 TARGET_SPAN = 55.0        # virtual seconds the offered load is spread over
 # seed engine request caps per server count (O(n) scan per request)
 SEED_CAP = {10: 300_000, 100: 150_000, 1000: 50_000, 10_000: 15_000}
+# batched-row request cap per server count: 10 batched servers sustain
+# ~10k req/s with the bench BatchedService, so the full 1M-request load
+# (~18k req/s offered) can never finish inside the horizon — cap the
+# offered load below capacity and compare throughput as a rate, exactly
+# like the seed caps above
+BATCHED_CAP = {10: 400_000}
 
 
 def n_clients_for(servers: int) -> int:
@@ -59,7 +71,8 @@ def build(engine: str, servers: int, requests: int, stats_mode: str,
           fast_clients: bool = False):
     from repro.core.balancer import RoundRobin
     from repro.core.client import ClientConfig, ConstantQPS
-    from repro.core.profiles import tailbench_profile
+    from repro.core.profiles import (BatchedService, FixedProfile,
+                                     TokenLengths, tailbench_profile)
     from repro.core.simulator import SimConfig, SimServer, Simulator
 
     ncl = n_clients_for(servers)
@@ -75,6 +88,22 @@ def build(engine: str, servers: int, requests: int, stats_mode: str,
     if engine == "calendar":
         sim = Simulator(cfg, [SimServer(i) for i in range(servers)],
                         RoundRobin(), profile=profile)
+    elif engine == "batched":
+        # continuous-batching serve loop: same arrival machinery, but
+        # servers run BatchedService op events (prefill + decode steps)
+        # instead of per-request finish events — the serve-loop hot path
+        # this row perf-gates
+        service = BatchedService("bench", t_memory=5e-4,
+                                 t_compute_per_seq=6.25e-5,
+                                 t_prefill_per_token=1e-5)
+        lengths = TokenLengths(prompt_median=32, prompt_sigma=0.4,
+                               new_median=8, new_sigma=0.4,
+                               prompt_max=128, new_max=32)
+        sim = Simulator(cfg, [SimServer(i, service_model=service,
+                                        max_batch=8)
+                              for i in range(servers)],
+                        RoundRobin(), profile=FixedProfile("tok", 0.0),
+                        lengths=lengths, service_model=service)
     elif engine == "seed":
         from benchmarks._seed_sim import SeedSimServer, SeedSimulator
         sim = SeedSimulator(cfg, [SeedSimServer(i) for i in range(servers)],
@@ -113,22 +142,33 @@ def run_single(engine: str, servers: int, requests: int,
     }
 
 
-def spawn(engine: str, servers: int, requests: int, stats_mode: str) -> dict:
-    """One scenario in a fresh subprocess (isolated peak RSS)."""
+def spawn(engine: str, servers: int, requests: int, stats_mode: str,
+          repeats: int = 1) -> dict:
+    """One scenario in a fresh subprocess (isolated peak RSS).
+
+    ``repeats`` reruns the scenario and keeps the fastest row: events/sec
+    noise from neighbor contention is strictly one-sided (contention only
+    slows a run down), so best-of-N is the fair estimate of engine speed
+    — the speedup-comparison rows use it so the recorded ratios are not
+    artifacts of whichever row drew the noisier seconds."""
     env = dict(os.environ)
     env["PYTHONPATH"] = os.path.join(REPO, "src") + (
         os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else "")
     print(f"  {engine:>8} servers={servers:<6} requests={requests:<8} "
           f"mode={stats_mode} ...", file=sys.stderr, flush=True)
-    proc = subprocess.run(
-        [sys.executable, os.path.abspath(__file__), "--single",
-         engine, str(servers), str(requests), stats_mode],
-        cwd=REPO, env=env, capture_output=True, text=True, check=True)
-    row = json.loads(proc.stdout.strip().splitlines()[-1])
-    print(f"           -> {row['events_per_sec']:,} events/s, "
-          f"{row['peak_rss_mb']} MB peak RSS, {row['wall_s']}s",
+    best = None
+    for _ in range(max(1, repeats)):
+        proc = subprocess.run(
+            [sys.executable, os.path.abspath(__file__), "--single",
+             engine, str(servers), str(requests), stats_mode],
+            cwd=REPO, env=env, capture_output=True, text=True, check=True)
+        row = json.loads(proc.stdout.strip().splitlines()[-1])
+        if best is None or row["events_per_sec"] > best["events_per_sec"]:
+            best = row
+    print(f"           -> {best['events_per_sec']:,} events/s, "
+          f"{best['peak_rss_mb']} MB peak RSS, {best['wall_s']}s",
           file=sys.stderr, flush=True)
-    return row
+    return best
 
 
 def equivalence_check() -> dict:
@@ -166,10 +206,16 @@ def main(argv: list[str]) -> int:
 
     print(f"bench_simulator: scales={scales} target_requests={requests}",
           file=sys.stderr)
+    # best-of-3 on the speedup-comparison rows for full runs; smoke/quick
+    # trade precision for CI latency (their gate floor has a wide margin)
+    reps = 1 if (smoke or quick) else 3
     rows = []
     for s in scales:
-        rows.append(spawn("calendar", s, requests, "exact"))
-        rows.append(spawn("seed", s, min(requests, SEED_CAP[s]), "exact"))
+        rows.append(spawn("calendar", s, requests, "exact", repeats=reps))
+        rows.append(spawn("seed", s, min(requests, SEED_CAP[s]), "exact",
+                          repeats=reps))
+        rows.append(spawn("batched", s, min(requests, BATCHED_CAP.get(s, requests)),
+                          "exact"))
     for s in [x for x in (1000, 10_000) if x in scales]:
         rows.append(spawn("calendar", s, requests, "streaming"))
 
@@ -187,22 +233,46 @@ def main(argv: list[str]) -> int:
 
     at_1k = speedup.get("1000")
     top = str(max(scales))
+    # continuous-batching serve loop, perf-gated like the scalar path:
+    # the batched row must complete its full request budget and keep its
+    # events/sec within a floor fraction of the scalar calendar engine
+    # at the same scale (its events are decode/prefill ops, so absolute
+    # rates are comparable but not identical)
+    BATCHED_REL_FLOOR = 0.15
+    batched_rel = {}
+    batched_complete = True
+    for s in scales:
+        cal = next(r for r in rows if r["engine"] == "calendar"
+                   and r["servers"] == s and r["stats_mode"] == "exact")
+        bat = next(r for r in rows if r["engine"] == "batched"
+                   and r["servers"] == s)
+        batched_rel[str(s)] = round(
+            bat["events_per_sec"] / cal["events_per_sec"], 3)
+        if bat["completed"] != bat["requests"]:
+            batched_complete = False
     out = {
         "benchmark": "bench_simulator",
         "scenario": {"duration_s": DURATION, "target_span_s": TARGET_SPAN,
                      "app": "masstree", "policy": "round_robin",
-                     "seed_engine_request_caps": SEED_CAP},
+                     "seed_engine_request_caps": SEED_CAP,
+                     "batched_request_caps": BATCHED_CAP},
         "rows": rows,
         "speedup_vs_seed_events_per_sec": speedup,
         "acceptance": {"speedup_at_1000_servers": at_1k,
                        "meets_5x": bool(at_1k and at_1k >= 5.0),
-                       "exact_mode_bit_identical": equiv["identical"]},
+                       "exact_mode_bit_identical": equiv["identical"],
+                       "batched_completed_all": batched_complete,
+                       "batched_rel_events_per_sec": batched_rel,
+                       "batched_rel_floor": BATCHED_REL_FLOOR},
         "equivalence_check": equiv,
     }
-    if not smoke:       # the repo-root JSON records full/quick-scale runs
-        with open(OUT, "w") as f:
-            json.dump(out, f, indent=1)
-        print(f"wrote {OUT}")
+    # smoke runs write a sibling JSON (CI uploads it as a workflow
+    # artifact) — never the root record, whose full-scale rows back the
+    # README/acceptance numbers and must not be clobbered by a CI-scale run
+    path = OUT_SMOKE if smoke else OUT
+    with open(path, "w") as f:
+        json.dump(out, f, indent=1)
+    print(f"wrote {path}")
     print(json.dumps(out["acceptance"], indent=1))
     print(f"speedup vs seed engine: {speedup}")
     if check is not None:
@@ -215,10 +285,20 @@ def main(argv: list[str]) -> int:
             print(f"CHECK FAILED: speedup at {top} servers is "
                   f"{speedup[top]}x < required {check}x", file=sys.stderr)
             ok = False
+        if not batched_complete:
+            print("CHECK FAILED: batched serve loop did not complete its "
+                  "request budget", file=sys.stderr)
+            ok = False
+        if batched_rel[top] < BATCHED_REL_FLOOR:
+            print(f"CHECK FAILED: batched events/sec at {top} servers is "
+                  f"{batched_rel[top]}x the scalar engine < floor "
+                  f"{BATCHED_REL_FLOOR}x", file=sys.stderr)
+            ok = False
         if not ok:
             return 1
         print(f"check passed: speedup@{top}={speedup[top]}x >= {check}x, "
-              f"exact mode bit-identical")
+              f"exact mode bit-identical, batched@{top}="
+              f"{batched_rel[top]}x >= {BATCHED_REL_FLOOR}x")
     return 0
 
 

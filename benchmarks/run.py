@@ -12,11 +12,11 @@ import traceback
 def main() -> None:
     from benchmarks import (engine_serving, fig1_qps_latency, fig4_equivalence,
                             fig5_multiserver, fig6_interleaved,
-                            fig7_dynamic_qps, fig8_balancing, hedging,
-                            roofline_table)
+                            fig7_dynamic_qps, fig8_balancing, fig_batching,
+                            hedging, roofline_table)
     benches = [fig1_qps_latency, fig4_equivalence, fig5_multiserver,
                fig6_interleaved, fig7_dynamic_qps, fig8_balancing,
-               hedging, roofline_table, engine_serving]
+               fig_batching, hedging, roofline_table, engine_serving]
     print("name,us_per_call,derived")
     failures = 0
     for b in benches:

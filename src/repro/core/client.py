@@ -85,6 +85,36 @@ class DiurnalQPS(QPSSchedule):
         return max(0.0, self.base + self.amplitude
                    * math.sin(2 * math.pi * (t + self.phase) / self.period))
 
+    def next_change(self, t: float) -> Optional[float]:
+        """When ``amplitude >= base`` the clipped sinusoid bottoms out at
+        zero for a whole sub-interval of each period; without this,
+        generators spin through the trough at the MAX_STEP fallback.
+        Inside a trough we return the exact zero-exit time (the rising
+        crossing of ``sin = -base/amplitude``).  No RNG draws happen at
+        zero rate, so only the resume instant moves (to the true
+        crossing instead of an entry-dependent grid point); schedules
+        that never clip (``amplitude < base``) are untouched.  Elsewhere
+        the rate varies continuously: None keeps the grid re-sampling."""
+        if self.amplitude == 0.0:
+            return math.inf                       # constant rate forever
+        if self.rate(t) > 0.0:
+            return None
+        # a negative amplitude is the same sinusoid half a period out of
+        # phase: fold it into the positive-amplitude math
+        amp, phase = self.amplitude, self.phase
+        if amp < 0.0:
+            amp, phase = -amp, phase + self.period / 2.0
+        s0 = -self.base / amp                     # sin level of the clip
+        if s0 > 1.0:
+            return math.inf                       # rate is zero forever
+        two_pi = 2.0 * math.pi
+        theta = (two_pi * (t + phase) / self.period) % two_pi
+        # zero region: sin(theta) <= s0, i.e. theta in
+        # [pi - asin(s0), 2*pi + asin(s0)]; the exit is the upper edge
+        theta_exit = two_pi + math.asin(max(min(s0, 1.0), -1.0))
+        delta = (theta_exit - theta) % two_pi
+        return t + delta * self.period / two_pi
+
 
 @dataclass
 class TraceQPS(QPSSchedule):
@@ -93,6 +123,15 @@ class TraceQPS(QPSSchedule):
     An empty trace has no defined rate: NaN, not an IndexError."""
     trace: Sequence[float]
     dt: float = 1.0
+
+    def __post_init__(self):
+        # change-point indices (cells whose rate differs from their
+        # predecessor), precomputed once: next_change is O(log changes)
+        # instead of a linear rescan from the current cell — O(n^2) over
+        # a long flat trace when the generator walks it breakpoint by
+        # breakpoint
+        self._changes = [j for j in range(1, len(self.trace))
+                         if self.trace[j] != self.trace[j - 1]]
 
     def rate(self, t: float) -> float:
         if len(self.trace) == 0:
@@ -107,11 +146,12 @@ class TraceQPS(QPSSchedule):
         if n == 0:
             return math.inf
         i = max(min(int(t / self.dt), n - 1), 0)
-        cur = self.trace[i]
-        for j in range(i + 1, n):
-            if self.trace[j] != cur:
-                return j * self.dt
-        return math.inf
+        # cells between two change points share one rate, so the first
+        # change index > i is exactly the next differing cell
+        k = bisect_right(self._changes, i)
+        if k >= len(self._changes):
+            return math.inf
+        return self._changes[k] * self.dt
 
 
 # ---------------------------------------------------------------------------
@@ -127,17 +167,40 @@ class ClientConfig:
     seed: int = 0
     # service-demand distribution (overridden by the app profile if None)
     profile: Optional[object] = None
+    # per-request token sizes (TokenLengths); None = unsized requests
+    lengths: Optional[object] = None
+
+
+# domain-separation salt for the size-RNG stream: request sizes must not
+# perturb the arrival-time draws (bit-compatibility of unsized configs)
+_SIZE_STREAM = 0x512E
 
 
 class ClientGenerator:
-    """Open-loop arrival process for one client."""
+    """Open-loop arrival process for one client.
 
-    def __init__(self, cfg: ClientConfig, profile, rng_stream: int = 0):
+    When a ``TokenLengths`` distribution is configured (``cfg.lengths``
+    or the harness default), every arrival also samples
+    ``(prompt_tokens, max_new_tokens)`` into ``last_sizes`` — from a
+    *separate* RNG stream keyed by the same (seed, client_id, rep), so
+    both runtime backends see identical sizes and unsized runs keep
+    bit-identical arrival draws."""
+
+    def __init__(self, cfg: ClientConfig, profile, rng_stream: int = 0,
+                 lengths=None):
         self.cfg = cfg
         self.profile = cfg.profile or profile
         self.rng = np.random.default_rng((cfg.seed, cfg.client_id, rng_stream))
         self.t = cfg.start_time
         self.sent = 0
+        self.lengths = cfg.lengths if cfg.lengths is not None else lengths
+        self.last_sizes: tuple = (0, 0)     # (prompt_tokens, max_new_tokens)
+        if self.lengths is not None:
+            self._size_rng = np.random.default_rng(
+                (cfg.seed, cfg.client_id, rng_stream, _SIZE_STREAM))
+            self._sample_sizes = self.lengths.sample
+        else:
+            self._sample_sizes = None
         # hot-path bindings (next_arrival runs once per generated request)
         self._budget = math.inf if cfg.total_requests is None else cfg.total_requests
         self._end = math.inf if cfg.end_time is None else cfg.end_time
@@ -201,6 +264,8 @@ class ClientGenerator:
             if t >= end:
                 return None
             self.sent += 1
+            if self._sample_sizes is not None:
+                self.last_sizes = self._sample_sizes(self._size_rng)
             return t, self._sample(self.rng)
 
 
@@ -219,8 +284,9 @@ class BatchedClientGenerator(ClientGenerator):
 
     CHUNK = 4096
 
-    def __init__(self, cfg: ClientConfig, profile, rng_stream: int = 0):
-        super().__init__(cfg, profile, rng_stream)
+    def __init__(self, cfg: ClientConfig, profile, rng_stream: int = 0,
+                 lengths=None):
+        super().__init__(cfg, profile, rng_stream, lengths=lengths)
         if not isinstance(cfg.schedule, ConstantQPS) or cfg.schedule.qps <= 0:
             raise ValueError("BatchedClientGenerator needs ConstantQPS > 0")
         self._scale = 1.0 / cfg.schedule.qps
@@ -254,4 +320,6 @@ class BatchedClientGenerator(ClientGenerator):
         if t >= self._end:
             return None
         self.sent += 1
+        if self._sample_sizes is not None:
+            self.last_sizes = self._sample_sizes(self._size_rng)
         return t, self._ds[i]

@@ -28,6 +28,7 @@ class ServerSpec:
     service_noise: float = 0.0     # log-sigma of per-execution server noise
     join_at: float = 0.0
     drain_at: Optional[float] = None
+    max_batch: Optional[int] = None   # batch slots (batched ServiceModels)
 
 
 @dataclass
@@ -48,9 +49,45 @@ class Experiment:
     fast_clients: bool = False                # vectorized constant-QPS arrivals
     slo: Optional[float] = None               # latency SLO (telemetry frames)
     injections: Sequence = ()                 # compiled Scenario injections
+    # pluggable ServiceModel: None = scalar default (the app profile);
+    # a BatchedService switches servers to the continuous-batching loop
+    service_model: Optional[object] = None
+    lengths: Optional[object] = None          # default per-request TokenLengths
 
     def resolved_profile(self):
-        return self.profile or tailbench_profile(self.app)
+        if self.profile is not None:
+            return self.profile
+        if self.service_model is not None:
+            if getattr(self.service_model, "kind", "scalar") == "batched":
+                # batched servers cost requests by token counts, not by a
+                # client-sampled scalar demand — don't burn RNG draws on one
+                from repro.core.profiles import FixedProfile
+                return FixedProfile("tokens", 0.0)
+            prof = getattr(self.service_model, "profile", None)
+            if prof is not None:
+                # a ScalarService wrapper IS a profile choice — honor it
+                # instead of silently falling back to the app default
+                return prof
+        return tailbench_profile(self.app)
+
+    def resolved_service(self):
+        """The effective ServiceModel (scalar wraps the profile)."""
+        from repro.core.profiles import resolve_service_model
+        return resolve_service_model(self.service_model,
+                                     self.resolved_profile())
+
+    def resolved_lengths(self):
+        """The effective per-request TokenLengths.  A batched service
+        model costs requests by token counts, so leaving ``lengths``
+        unset must not degenerate every request to a single prompt token
+        and zero decode steps — default to the stock distribution."""
+        if self.lengths is not None:
+            return self.lengths
+        if (self.service_model is not None
+                and getattr(self.service_model, "kind", "scalar") == "batched"):
+            from repro.core.profiles import TokenLengths
+            return TokenLengths()
+        return None
 
 
 def build_simulator(exp: Experiment, rep: int = 0) -> Simulator:
@@ -67,7 +104,9 @@ def build_simulator(exp: Experiment, rep: int = 0) -> Simulator:
         return (9176, exp.seed, sid, rep)
 
     servers = [SimServer(s.server_id, s.workers, s.speed, s.service_noise,
-                         rng_seed=_srv_seed(s.server_id))
+                         rng_seed=_srv_seed(s.server_id),
+                         service_model=exp.service_model,
+                         max_batch=s.max_batch)
                for s in exp.servers if s.join_at == 0.0]
     balancer = POLICIES[exp.policy]() if isinstance(exp.policy, str) else exp.policy
     n_expected = exp.legacy_expected_clients
@@ -80,7 +119,9 @@ def build_simulator(exp: Experiment, rep: int = 0) -> Simulator:
                     hedge_delay=exp.hedge_delay, rep=rep,
                     stats_mode=exp.stats_mode, fast_clients=exp.fast_clients,
                     slo=exp.slo)
-    sim = Simulator(cfg, servers, balancer, profile=exp.resolved_profile())
+    sim = Simulator(cfg, servers, balancer, profile=exp.resolved_profile(),
+                    lengths=exp.resolved_lengths(),
+                    service_model=exp.service_model)
     for c in exp.clients:
         c2 = replace(c, seed=c.seed if c.seed else exp.seed)
         sim.add_client(c2)
@@ -88,7 +129,9 @@ def build_simulator(exp: Experiment, rep: int = 0) -> Simulator:
         if s.join_at > 0.0:
             sim.add_server(SimServer(s.server_id, s.workers, s.speed,
                                      s.service_noise,
-                                     rng_seed=_srv_seed(s.server_id)),
+                                     rng_seed=_srv_seed(s.server_id),
+                                     service_model=exp.service_model,
+                                     max_batch=s.max_batch),
                            s.join_at)
         if s.drain_at is not None:
             sim.drain_server(s.server_id, s.drain_at)

@@ -14,11 +14,31 @@ Two kinds of "application" can sit behind a server:
    proportional to prompt length.  See repro/launch/roofline.py.
 
 Both expose ``sample(rng) -> seconds of server work``.
+
+On top of the raw profiles sits the pluggable **ServiceModel** layer — the
+contract between a workload and the thing that executes it:
+
+* ``ScalarService`` wraps a profile: one request occupies one worker slot
+  for a profile-sampled number of seconds.  This is the paper's TailBench
+  semantics and the bit-identical default everywhere.
+* ``BatchedService`` models a continuous-batching inference engine,
+  calibrated from the roofline model (``repro.launch.roofline``): one
+  decode step costs ``max(compute x batch, memory)`` seconds — weight/KV
+  streaming is batch-independent, compute scales per sequence — so
+  throughput rises sub-linearly with occupancy exactly like the real
+  ``InferenceEngine``.  Prefill cost is proportional to prompt tokens.
+
+``BatchScheduler`` is the shared continuous-batching op sequencer: the
+virtual-time ``SimServer`` serve loop and the wall-clock
+``BatchedStubEngine`` both drive it, so the simulator and the engine
+backend agree on batching dynamics *by construction*.
 """
 from __future__ import annotations
 
 import math
-from dataclasses import dataclass
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Callable, Optional
 
 import numpy as np
 
@@ -87,6 +107,261 @@ TAILBENCH_APPS: dict[str, LogNormalProfile] = {
 
 def tailbench_profile(app: str) -> LogNormalProfile:
     return TAILBENCH_APPS[app]
+
+
+# ---------------------------------------------------------------------------
+# Request token-size distributions (shared by both runtime backends)
+# ---------------------------------------------------------------------------
+@dataclass(frozen=True)
+class TokenLengths:
+    """Per-request size distribution: log-normal prompt and output token
+    counts (median + log-sigma), truncated to [1, max].
+
+    Sampled by ``ClientGenerator`` from a dedicated RNG stream derived
+    from the same (seed, client_id, rep) tuple as the arrival stream —
+    so the simulator and the engine runtime draw *identical request
+    sizes* without perturbing the arrival-time draws."""
+    prompt_median: float = 128.0
+    prompt_sigma: float = 0.6
+    new_median: float = 32.0
+    new_sigma: float = 0.5
+    prompt_max: int = 2048
+    new_max: int = 512
+
+    def sample(self, rng: np.random.Generator) -> tuple[int, int]:
+        z1, z2 = rng.standard_normal(2)
+        p = self.prompt_median * math.exp(self.prompt_sigma * z1)
+        n = self.new_median * math.exp(self.new_sigma * z2)
+        return (max(1, min(int(p), self.prompt_max)),
+                max(1, min(int(n), self.new_max)))
+
+    @property
+    def mean_new_tokens(self) -> float:
+        return self.new_median * math.exp(self.new_sigma ** 2 / 2)
+
+
+# ---------------------------------------------------------------------------
+# ServiceModel layer
+# ---------------------------------------------------------------------------
+def apply_service_noise(dur: float, sigma: float, rng) -> float:
+    """Multiplicative log-normal execution noise (interference, GC
+    pauses — what hedged requests exploit, Dean & Barroso).  The one
+    noise law every backend shares: SimServer and the stub engines must
+    perturb service identically or the cross-backend parity the
+    ServiceModel layer guarantees silently breaks.  Draws from ``rng``
+    only when ``sigma > 0`` (zero noise consumes no stream)."""
+    if sigma > 0.0:
+        dur *= float(np.exp(sigma * rng.standard_normal()))
+    return dur
+
+
+@dataclass(frozen=True)
+class ScalarService:
+    """One request = one worker slot for ``profile``-sampled seconds.
+
+    The bit-identical default: wrapping an existing LogNormal/Fixed
+    profile changes nothing about how the simulator executes requests —
+    the profile is still sampled client-side at generation time and the
+    server still runs G/G/c FIFO slots."""
+    profile: object
+    kind: str = field(default="scalar", init=False)
+
+    def sample(self, rng) -> float:
+        return self.profile.sample(rng)
+
+    def sample_batch(self, rng, n: int):
+        return self.profile.sample_batch(rng, n)
+
+    @property
+    def mean(self) -> float:
+        return self.profile.mean
+
+    @property
+    def name(self) -> str:
+        return getattr(self.profile, "name", "scalar")
+
+
+@dataclass(frozen=True)
+class BatchedService:
+    """Continuous-batching service cost model (roofline-calibrated).
+
+    Per decode step the whole batch advances one token:
+
+        step_time(b) = max(t_compute_per_seq * b, t_memory)
+
+    ``t_memory`` is the weight/state streaming time (batch-independent —
+    the roofline's memory term), ``t_compute_per_seq`` the per-sequence
+    MXU time (the compute term scales with batch).  While memory-bound,
+    adding occupancy is nearly free (throughput rises ~linearly); past
+    the ridge point the step time grows linearly and per-request latency
+    pays for sharing — the sub-linear throughput curve of the real
+    engine.  Prefill costs ``t_prefill_per_token * prompt_tokens``
+    seconds, floored at one weight pass."""
+    name: str
+    t_memory: float                      # s per decode step (streaming)
+    t_compute_per_seq: float             # s per sequence per decode step
+    t_prefill_per_token: float           # s per prompt token
+    kind: str = field(default="batched", init=False)
+
+    def step_time(self, batch: int) -> float:
+        return max(self.t_compute_per_seq * max(batch, 1), self.t_memory)
+
+    def prefill_time(self, prompt_tokens: int) -> float:
+        return max(self.t_prefill_per_token * max(prompt_tokens, 1),
+                   self.t_memory)
+
+    @property
+    def ridge_batch(self) -> float:
+        """Batch size where the step flips memory- to compute-bound."""
+        return self.t_memory / self.t_compute_per_seq
+
+    def service_rate(self, batch: int) -> float:
+        """Tokens/sec the whole server sustains at occupancy ``batch``."""
+        b = max(batch, 1)
+        return b / self.step_time(b)
+
+    @classmethod
+    def from_arch(cls, arch: str, *, chips: int = 8) -> "BatchedService":
+        """Calibrate from an assigned architecture's roofline terms:
+        memory = one pass over the active parameters (2 bytes each) at
+        HBM bandwidth, compute = 2*N_active FLOPs per token at bf16 peak
+        (prefill is compute-bound at the same per-token cost), spread
+        over a ``chips``-chip serving slice."""
+        from repro.configs.base import get_config
+        from repro.launch.mesh import HBM_BW, PEAK_FLOPS_BF16
+        from repro.models import registry as R
+        cfg = get_config(arch)
+        n_active = R.count_params(cfg, active=True)
+        t_mem = 2.0 * n_active / (chips * HBM_BW)
+        t_comp = 2.0 * n_active / (chips * PEAK_FLOPS_BF16)
+        return cls(f"batched:{arch}", t_mem, t_comp, t_comp)
+
+
+def resolve_service_model(model, profile) -> "ScalarService | BatchedService":
+    """Normalize an Experiment's service model: ``None`` means the
+    scalar default wrapping the resolved profile."""
+    if model is None:
+        return ScalarService(profile)
+    return model
+
+
+# ---------------------------------------------------------------------------
+# Shared continuous-batching op sequencer
+# ---------------------------------------------------------------------------
+@dataclass(slots=True)
+class BatchItem:
+    """One request inside a ``BatchScheduler`` (key is caller-opaque:
+    a ``Request`` in the simulator, a req_id in the stub engine)."""
+    key: object
+    prompt_tokens: int
+    remaining: int                       # new tokens still to emit
+
+
+class BatchScheduler:
+    """Prefill-priority continuous batching, one op at a time.
+
+    Mirrors ``serving.engine.InferenceEngine.step()``: each op is either
+    ONE prefill (a waiting request enters a free slot; its first token is
+    emitted when the prefill finishes) or ONE batched decode step (every
+    active sequence emits one token).  Requests whose token budget is
+    exhausted complete at the end of the op that produced their last
+    token.
+
+    The class is clock-free: callers ask ``start_op`` for the next op's
+    base duration (un-scaled by server speed/noise) and later apply it
+    with ``finish_op``.  The simulator drives it from calendar-queue
+    events; ``BatchedStubEngine`` drives it from a wall/virtual clock —
+    identical dynamics by construction.
+    """
+
+    __slots__ = ("service", "max_batch", "waiting", "active", "tokens_done",
+                 "op")
+
+    def __init__(self, service: BatchedService, max_batch: int):
+        self.service = service
+        self.max_batch = max_batch
+        self.waiting: deque[BatchItem] = deque()
+        self.active: list[BatchItem] = []
+        self.tokens_done = 0
+        self.op: Optional[tuple] = None          # ("prefill", item) | ("decode",)
+
+    # ---- submission / introspection ---------------------------------------
+    def submit(self, key, prompt_tokens: int, max_new_tokens: int) -> None:
+        self.waiting.append(BatchItem(key, max(int(prompt_tokens), 1),
+                                      max(int(max_new_tokens), 1)))
+
+    def pending(self) -> int:
+        return len(self.waiting)
+
+    def occupancy(self) -> int:
+        """Sequences resident in the batch (incl. one mid-prefill)."""
+        n = len(self.active)
+        if self.op is not None and self.op[0] == "prefill":
+            n += 1
+        return n
+
+    def idle(self) -> bool:
+        return self.op is None and not self.waiting and not self.active
+
+    # ---- op lifecycle ------------------------------------------------------
+    def start_op(self, skip: Optional[Callable] = None,
+                 ready: Optional[Callable] = None) -> Optional[float]:
+        """Begin the next op; -> base duration in seconds, or None if
+        there is nothing to do.  ``skip(key) -> bool`` drops waiting
+        entries (hedge-cancelled twins) without admitting them;
+        ``ready(key) -> bool`` holds back entries that have not arrived
+        yet at the op's start instant (wall-clock replay) — a not-ready
+        FIFO head falls through to a decode op, like the real engine
+        seeing an empty queue."""
+        assert self.op is None, "previous op not finished"
+        while self.waiting and len(self.active) < self.max_batch:
+            item = self.waiting[0]
+            if skip is not None and skip(item.key):
+                self.waiting.popleft()
+                continue
+            if ready is not None and not ready(item.key):
+                break
+            self.waiting.popleft()
+            self.op = ("prefill", item)
+            return self.service.prefill_time(item.prompt_tokens)
+        if self.active:
+            self.op = ("decode", None)
+            return self.service.step_time(len(self.active))
+        return None
+
+    def finish_op(self) -> list:
+        """Apply the current op; -> keys of requests it completed."""
+        kind, item = self.op
+        self.op = None
+        done = []
+        if kind == "prefill":
+            self.tokens_done += 1
+            item.remaining -= 1
+            if item.remaining <= 0:
+                done.append(item.key)
+            else:
+                self.active.append(item)
+        else:
+            self.tokens_done += len(self.active)
+            still = []
+            for it in self.active:
+                it.remaining -= 1
+                if it.remaining <= 0:
+                    done.append(it.key)
+                else:
+                    still.append(it)
+            self.active = still
+        return done
+
+    def abort(self) -> list:
+        """Drop every resident request (server failure); -> their keys.
+        Waiting entries are the caller's to account for."""
+        keys = [it.key for it in self.active]
+        if self.op is not None and self.op[0] == "prefill":
+            keys.append(self.op[1].key)
+        self.active = []
+        self.op = None
+        return keys
 
 
 def arch_profile(arch: str, *, tokens_out: int = 64,

@@ -16,6 +16,11 @@ class Request:
     client_id: int
     created: float                  # generation time at the client
     service_demand: float           # seconds of server work (profile sample)
+    # token-size semantics (batched ServiceModels): sampled client-side
+    # from per-app length distributions so both runtime backends consume
+    # identical request sizes.  0 = unsized (scalar service path).
+    prompt_tokens: int = 0
+    max_new_tokens: int = 0
     server_id: Optional[int] = None
     enqueued: Optional[float] = None
     started: Optional[float] = None

@@ -114,9 +114,23 @@ class EngineServerHandle:
         self.accepting = True
         self.draining = False
         self.failed = False
-        self.workers = getattr(engine, "max_batch", 1)
+        # capacity semantics: an engine replica's concurrency is its batch
+        # slots, not worker threads — expose max_batch as itself and leave
+        # workers unset so telemetry resolves capacity honestly (the old
+        # ``workers = max_batch`` alias hid which model the server ran)
+        self.workers = None
+        self.max_batch = getattr(engine, "max_batch", 1)
+        # forwarded so telemetry normalizes utilization by the engine's
+        # declared scheduling semantics, not by inference from counters
+        self.serializes_ops = getattr(engine, "serializes_ops", False)
         self.outstanding: set[int] = set()     # req_ids submitted, not done
         self.total_served = 0
+
+    @property
+    def tokens_done(self):
+        """Cumulative generated tokens, when the engine counts them
+        (batched engines do; telemetry skips the gauge otherwise)."""
+        return getattr(self.engine, "tokens_done", None)
 
     @property
     def busy(self) -> int:
@@ -158,7 +172,7 @@ class EngineRuntime(Runtime):
                  vocab: int = 256, seed: int = 0, time_scale: float = 1.0,
                  interval: float = 1.0, slo: Optional[float] = None,
                  injections: Sequence = (), rep: int = 0,
-                 profile=None, stats_mode: str = "exact",
+                 profile=None, lengths=None, stats_mode: str = "exact",
                  engine_factory: Optional[Callable[[int], object]] = None,
                  clock: Callable[[], float] = time.monotonic,
                  sleep: Callable[[float], None] = time.sleep):
@@ -189,12 +203,14 @@ class EngineRuntime(Runtime):
         self._rng = np.random.default_rng(seed)
         self._rid = itertools.count()
         prof = profile if profile is not None else FixedProfile("tok", 0.0)
+        self.lengths = lengths
         # O(1) per-arrival lookups (the old loop re-scanned the client
         # list on every first-arrival: O(n_clients) per admission)
         self.client_cfgs: dict[int, ClientConfig] = {c.client_id: c
                                                      for c in clients}
         self._gens: dict[int, ClientGenerator] = {
-            c.client_id: ClientGenerator(c, prof, rng_stream=rep)
+            c.client_id: ClientGenerator(c, prof, rng_stream=rep,
+                                         lengths=lengths)
             for c in clients}
         self.assignment: dict[int, EngineServerHandle] = {}
         self._meta: dict[int, tuple] = {}       # req_id -> (cid, t_arr)
@@ -266,7 +282,8 @@ class EngineRuntime(Runtime):
                                             {"server_id": s.server_id,
                                              "workers": s.workers,
                                              "speed": s.speed,
-                                             "service_noise": s.service_noise}))
+                                             "service_noise": s.service_noise,
+                                             "max_batch": s.max_batch}))
             if s.drain_at is not None:
                 injections.append(Injection(s.drain_at, "server_drain",
                                             {"server_id": s.server_id}))
@@ -278,7 +295,7 @@ class EngineRuntime(Runtime):
                    max_new_tokens=max_new_tokens, seed=exp.seed,
                    time_scale=time_scale, slo=exp.slo, injections=injections,
                    rep=rep, profile=exp.resolved_profile(),
-                   stats_mode=exp.stats_mode,
+                   lengths=exp.resolved_lengths(), stats_mode=exp.stats_mode,
                    engine_factory=engine_factory, clock=clock, sleep=sleep)
 
     # ------------------------------------------------------------ internals
@@ -294,7 +311,8 @@ class EngineRuntime(Runtime):
         if nxt is None or nxt[0] > self.duration:
             self._client_done(cid)
             return
-        heapq.heappush(heap, (nxt[0] * self.time_scale, cid))
+        ptoks, mnew = gen.last_sizes       # sampled with the arrival
+        heapq.heappush(heap, (nxt[0] * self.time_scale, cid, ptoks, mnew))
 
     def _client_done(self, cid: int) -> None:
         handle = self.assignment.pop(cid, None)
@@ -303,10 +321,13 @@ class EngineRuntime(Runtime):
         self._gens.pop(cid, None)
         self.balancer.release(cid)
 
-    def _admit(self, cid: int, t_arr: float) -> bool:
+    def _admit(self, cid: int, t_arr: float, ptoks: int = 0,
+               mnew: int = 0) -> bool:
         """Admit one arrival; False means the client was terminated
         (connection refused — mirrors Simulator._connect semantics, where
-        a refused client never generates traffic)."""
+        a refused client never generates traffic).  ``ptoks``/``mnew``
+        are the client-sampled token sizes (0 = unsized: fall back to the
+        runtime's fixed prompt_len/max_new_tokens)."""
         gen = self._gens[cid]
         if cid not in self.assignment:
             handle = self.balancer.assign(gen, self._alive)
@@ -322,10 +343,12 @@ class EngineRuntime(Runtime):
             self.dropped += 1
             return True
         rid = next(self._rid)
-        prompt = self._rng.integers(0, self.vocab, size=self.prompt_len)
+        n_prompt = ptoks if ptoks > 0 else self.prompt_len
+        n_new = mnew if mnew > 0 else self.max_new_tokens
+        prompt = self._rng.integers(0, self.vocab, size=n_prompt)
         self._meta[rid] = (cid, t_arr)
         handle.outstanding.add(rid)
-        handle.engine.submit(prompt, self.max_new_tokens, rid)
+        handle.engine.submit(prompt, n_new, rid)
         return True
 
     def _complete(self, handle: EngineServerHandle, comp, wall: float) -> None:
@@ -424,8 +447,8 @@ class EngineRuntime(Runtime):
             self._drain_gauges(now)
             admitted = False
             while heap and heap[0][0] <= now:
-                t_arr, cid = heapq.heappop(heap)
-                if self._admit(cid, t_arr):
+                t_arr, cid, ptoks, mnew = heapq.heappop(heap)
+                if self._admit(cid, t_arr, ptoks, mnew):
                     self._push_next(heap, cid)
                 admitted = True
             # parity with the simulator's horizon: pending injections keep

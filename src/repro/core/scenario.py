@@ -83,6 +83,7 @@ class ServerJoin:
     workers: int = 1
     speed: float = 1.0
     service_noise: float = 0.0
+    max_batch: Optional[int] = None    # batch slots (batched ServiceModels)
 
 
 @dataclass(frozen=True)
@@ -139,6 +140,11 @@ class Scenario:
     slo: Optional[float] = None
     hedge_delay: Optional[float] = None
     stats_mode: str = "exact"
+    # pluggable service layer: a BatchedService switches every server to
+    # the continuous-batching serve loop; lengths gives every client a
+    # per-request token-size distribution (identical on both backends)
+    service_model: Optional[object] = None
+    lengths: Optional[object] = None
 
     # ------------------------------------------------------------- compile
     def compile(self) -> Experiment:
@@ -188,7 +194,8 @@ class Scenario:
                     raise ValueError(f"server {ev.server_id} already exists")
                 servers[ev.server_id] = ServerSpec(
                     ev.server_id, workers=ev.workers, speed=ev.speed,
-                    service_noise=ev.service_noise, join_at=ev.at)
+                    service_noise=ev.service_noise, join_at=ev.at,
+                    max_batch=ev.max_batch)
             elif isinstance(ev, ServerDrain):
                 spec = servers.get(ev.server_id)
                 if spec is None:
@@ -223,4 +230,5 @@ class Scenario:
             app=self.app, policy=self.policy, duration=self.duration,
             interval=self.interval, seed=self.seed,
             hedge_delay=self.hedge_delay, stats_mode=self.stats_mode,
-            slo=self.slo, injections=tuple(injections))
+            slo=self.slo, injections=tuple(injections),
+            service_model=self.service_model, lengths=self.lengths)

@@ -35,20 +35,36 @@ import numpy as np
 
 from repro.core.client import ClientConfig, ClientGenerator
 from repro.core.events import CalendarQueue
+from repro.core.profiles import BatchScheduler, apply_service_noise
 from repro.core.request import Request
 from repro.core.stats import LatencyRecorder, MetricsPipeline
 
 # typed event kinds (first payload slot after (t, seq))
-_EMIT, _FINISH, _CALL = 0, 1, 2
+_EMIT, _FINISH, _CALL, _BSTEP = 0, 1, 2, 3
 
 
 # ---------------------------------------------------------------------------
-# Server: G/G/c FIFO queue with a service-time profile
+# Server: G/G/c FIFO queue with a service-time profile, or a
+# continuous-batching serve loop behind a batched ServiceModel
 # ---------------------------------------------------------------------------
 class SimServer:
+    """Two service disciplines behind one surface:
+
+    * scalar (default): G/G/c FIFO — ``workers`` independent slots, each
+      request holds one for its client-sampled ``service_demand``;
+    * batched (``service_model.kind == "batched"``): a continuous-batching
+      serve loop — admit up to ``max_batch`` resident sequences, ops
+      (one prefill OR one batched decode step) are scheduled as calendar
+      events, and per-step costs come from the ``BatchedService``.  The
+      op sequencing lives in the shared ``BatchScheduler``, which the
+      wall-clock ``BatchedStubEngine`` drives too — sim and engine agree
+      on batching dynamics by construction.
+    """
+
     def __init__(self, server_id: int, workers: int = 1, speed: float = 1.0,
                  service_noise: float = 0.0,
-                 rng_seed: Optional[tuple] = None):
+                 rng_seed: Optional[tuple] = None,
+                 service_model=None, max_batch: Optional[int] = None):
         self.server_id = server_id
         self.workers = workers
         self.speed = speed
@@ -62,7 +78,7 @@ class SimServer:
         # reps, understating confidence intervals.
         self._rng = np.random.default_rng(
             (9176, server_id) if rng_seed is None else rng_seed)
-        self.queue: deque[Request] = deque()
+        self.queue: deque = deque()
         self._q_cancelled = 0          # tombstoned entries still in `queue`
         self.busy = 0
         self.connected: set[int] = set()       # client ids
@@ -71,6 +87,18 @@ class SimServer:
         self.failed = False            # fault injection: completions are lost
         self.total_served = 0
         self.busy_time = 0.0
+        self.service_model = service_model
+        self._batched = (service_model is not None
+                         and getattr(service_model, "kind", "scalar")
+                         == "batched")
+        if self._batched:
+            self.max_batch = max_batch or 8
+            self.workers = None        # capacity is batch slots, not workers
+            self.serializes_ops = True  # one op at a time: util normalizes
+                                        # per server, not per slot
+            self.batch = BatchScheduler(service_model, self.max_batch)
+            self.queue = self.batch.waiting    # shared deque: load()/fail
+            self.tokens_done = 0               # cumulative (tokens/s gauge)
 
     # -- connection management (Features 1 + 2) -----------------------------
     def connect(self, client_id: int) -> bool:
@@ -86,25 +114,84 @@ class SimServer:
     def enqueue(self, req: Request, now: float, sim: "Simulator"):
         req.server_id = self.server_id
         req.enqueued = now
+        if self._batched:
+            self.batch.submit(req, req.prompt_tokens, req.max_new_tokens)
+            if self.batch.op is None:          # engine idle: start serving
+                self._kick(now, sim)
+            return
         if self.busy < self.workers:
             self._start(req, now, sim)
         else:
             self.queue.append(req)
 
-    def _start(self, req: Request, now: float, sim: "Simulator"):
-        # hedge cancellation: starting one copy tombstones its queued twin
-        # (skipped on pop) — O(1) instead of an O(queue) scan + splice.
+    def _tombstone_twin(self, req: Request, sim: "Simulator"):
+        """Entering service tombstones the queued hedge twin — O(1),
+        skipped on pop.  Shared by the scalar and batched start paths so
+        the hedge-cancellation invariant lives in exactly one place."""
         twin = req._twin
         if twin is not None and twin.started is None and not twin.cancelled:
             twin.cancelled = True
             srv = sim.servers.get(twin.server_id)
             if srv is not None:
                 srv._q_cancelled += 1
+
+    # -- continuous-batching serve loop (batched ServiceModel) ---------------
+    def _skip_cancelled(self, req: Request) -> bool:
+        """start_op predicate: drop hedge-cancelled twins at admission."""
+        if req.cancelled:
+            self._q_cancelled -= 1
+            return True
+        return False
+
+    def _kick(self, now: float, sim: "Simulator"):
+        """Start the next batching op and schedule its finish event."""
+        dur = self.batch.start_op(skip=self._skip_cancelled)
+        if dur is None:
+            self.busy = 0
+            return
+        op = self.batch.op
+        if op[0] == "prefill":
+            req = op[1].key
+            self._tombstone_twin(req, sim)
+            req.started = now
+        dur = apply_service_noise(dur / self.speed, self.service_noise,
+                                  self._rng)
+        self.busy_time += dur
+        self.busy = self.batch.occupancy()
+        sim._push_batch_step(now + dur, self)
+
+    def _batch_step(self, t: float, sim: "Simulator"):
+        """Finish the in-flight op: complete exhausted requests, then
+        start the next op (prefill-priority, like the real engine)."""
+        if self.failed:
+            # the server died mid-op: the whole resident batch is lost
+            for req in self.batch.abort():
+                if not req.cancelled:
+                    sim._lost(req)
+                    req.cancelled = True
+            self.busy = 0
+            return
+        for req in self.batch.finish_op():
+            req.completed = t
+            self.total_served += 1
+            sim.on_completion(req)
+        self.tokens_done = self.batch.tokens_done
+        self._kick(t, sim)
+
+    def queued_requests(self) -> list:
+        """Requests waiting for service (fault-injection accounting) —
+        the scalar deque holds them directly, the batched scheduler
+        wraps them in BatchItems."""
+        if self._batched:
+            return [it.key for it in self.batch.waiting]
+        return list(self.queue)
+
+    def _start(self, req: Request, now: float, sim: "Simulator"):
+        self._tombstone_twin(req, sim)
         self.busy += 1
         req.started = now
-        dur = req.service_demand / self.speed
-        if self.service_noise > 0.0:
-            dur *= float(np.exp(self.service_noise * self._rng.standard_normal()))
+        dur = apply_service_noise(req.service_demand / self.speed,
+                                  self.service_noise, self._rng)
         self.busy_time += dur
         sim._push_finish(now + dur, self, req)
 
@@ -155,11 +242,13 @@ class SimConfig:
 
 class Simulator:
     def __init__(self, cfg: SimConfig, servers: list[SimServer], balancer,
-                 profile=None):
+                 profile=None, lengths=None, service_model=None):
         self.cfg = cfg
         self.servers = {s.server_id: s for s in servers}
         self.balancer = balancer
         self.profile = profile
+        self.lengths = lengths              # default TokenLengths for clients
+        self.service_model = service_model  # applied to injected server joins
         self.recorder = LatencyRecorder(cfg.interval, mode=cfg.stats_mode)
         self.telemetry = MetricsPipeline(self.recorder, cfg.interval,
                                          slo=cfg.slo)
@@ -200,6 +289,9 @@ class Simulator:
     def _push_finish(self, t: float, server: SimServer, req: Request):
         self._push((t, self._next_seq(), _FINISH, server, req))
 
+    def _push_batch_step(self, t: float, server: SimServer):
+        self._push((t, self._next_seq(), _BSTEP, server))
+
     def run(self):
         pop = self._queue.pop
         horizon = self.cfg.duration
@@ -215,9 +307,11 @@ class Simulator:
             self.now = t
             kind = ev[2]
             if kind == _EMIT:
-                emit(ev[3], ev[4], t)
+                emit(ev[3], ev[4], ev[5], ev[6], t)
             elif kind == _FINISH:
                 ev[3]._finish(ev[4], t, self)
+            elif kind == _BSTEP:
+                ev[3]._batch_step(t, self)
             else:
                 ev[3](t)
             n += 1
@@ -231,9 +325,11 @@ class Simulator:
         if (self.cfg.fast_clients and isinstance(ccfg.schedule, ConstantQPS)
                 and ccfg.schedule.qps > 0):
             gen = BatchedClientGenerator(ccfg, self.profile,
-                                         rng_stream=self.cfg.rep)
+                                         rng_stream=self.cfg.rep,
+                                         lengths=self.lengths)
         else:
-            gen = ClientGenerator(ccfg, self.profile, rng_stream=self.cfg.rep)
+            gen = ClientGenerator(ccfg, self.profile, rng_stream=self.cfg.rep,
+                                  lengths=self.lengths)
         self.clients[ccfg.client_id] = gen
         self.schedule(ccfg.start_time, lambda t, c=ccfg: self._connect(c, t))
 
@@ -269,10 +365,11 @@ class Simulator:
             self._client_done(cid)
             return
         t, demand = nxt
-        self._push((t, self._next_seq(), _EMIT, cid, demand))
+        ptoks, mnew = gen.last_sizes
+        self._push((t, self._next_seq(), _EMIT, cid, demand, ptoks, mnew))
 
-    def _emit(self, cid: int, demand: float, t: float):
-        req = Request(self._next_rid(), cid, t, demand)
+    def _emit(self, cid: int, demand: float, ptoks: int, mnew: int, t: float):
+        req = Request(self._next_rid(), cid, t, demand, ptoks, mnew)
         if self._legacy:
             if not self._legacy_started:
                 self._legacy_hold.append(req)  # original: server not started
@@ -307,7 +404,8 @@ class Simulator:
             return
         req.hedged = True
         clone = Request(req.req_id, req.client_id, req.created,
-                        req.service_demand, hedged=True)
+                        req.service_demand, req.prompt_tokens,
+                        req.max_new_tokens, hedged=True)
         clone._primary = req          # first completion wins
         clone._twin = req             # mutual cancellation on start
         req._twin = clone
@@ -379,7 +477,9 @@ class Simulator:
             srv.failed = True
             srv.accepting = False
             srv.draining = True
-            for req in srv.queue:
+            # queued work is lost now; a batched server's resident batch
+            # is lost when its in-flight op event fires (_batch_step)
+            for req in srv.queued_requests():
                 if not req.cancelled:
                     self._lost(req)
                     req.cancelled = True   # pending hedge timers must not
@@ -463,7 +563,9 @@ class Simulator:
                 SimServer(sid, params.get("workers", 1),
                           params.get("speed", 1.0),
                           params.get("service_noise", 0.0),
-                          rng_seed=rng_seed), at)
+                          rng_seed=rng_seed,
+                          service_model=self.service_model,
+                          max_batch=params.get("max_batch")), at)
         elif kind == "server_drain":
             self.drain_server(params["server_id"], at)
         elif kind == "set_policy":

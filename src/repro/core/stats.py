@@ -403,6 +403,13 @@ class IntervalFrame:
     # one service time otherwise
     util: dict
     qdepth: dict                    # server_id -> queued requests (sampled)
+    # server_id -> resident-batch (or busy-slot) fraction at the sample
+    # point — for batched servers this is the continuous-batching
+    # occupancy the knee depends on, distinct from the util time-average
+    occupancy: dict
+    # server_id -> generated tokens/sec over the interval; only servers
+    # that count tokens (batched ServiceModels) appear here
+    tokens_per_sec: dict
 
 
 class MetricsPipeline:
@@ -429,10 +436,11 @@ class MetricsPipeline:
         self.recorder = recorder
         self.interval = interval
         self.slo = slo
-        # ivl -> server_id -> (utilization, queue_depth), sampled at the
-        # *end* of each interval by the owning runtime
+        # ivl -> server_id -> (util, queue_depth, occupancy, tokens/sec),
+        # sampled at the *end* of each interval by the owning runtime
         self._gauges: dict[int, dict[int, tuple]] = {}
         self._busy_time: dict[int, float] = {}      # last busy_time reading
+        self._tokens: dict[int, float] = {}         # last tokens_done reading
 
     # ---- runtime-facing ----------------------------------------------------
     def sample_servers(self, t: float, servers) -> None:
@@ -448,16 +456,37 @@ class MetricsPipeline:
         ivl = int(round(t / self.interval)) - 1     # gauge closes interval t-1
         snap = {}
         for s in servers:
-            cap = getattr(s, "workers", None) or getattr(s, "max_batch", 1)
+            # capacity: ``workers`` when the server declares worker slots
+            # (0 is a real answer — zero capacity, not "ask max_batch"),
+            # else ``max_batch`` for batch-slot servers, else 1
+            cap = getattr(s, "workers", None)
+            if cap is None:
+                cap = getattr(s, "max_batch", None)
+            if cap is None:
+                cap = 1
             busy = s.busy if hasattr(s, "busy") else s.load()
+            toks = getattr(s, "tokens_done", None)
             bt = getattr(s, "busy_time", None)
-            if bt is not None and cap:
+            # servers declaring ``serializes_ops`` run one op at a time
+            # (the continuous-batching serve loop), so busy_time
+            # normalizes per server; otherwise busy_time accrues across
+            # ``cap`` parallel slots.  Declared explicitly — a token
+            # counter's presence says nothing about scheduling semantics.
+            util_cap = 1 if getattr(s, "serializes_ops", False) else cap
+            if bt is not None and util_cap:
                 delta = bt - self._busy_time.get(s.server_id, 0.0)
                 self._busy_time[s.server_id] = bt
-                util = min(max(delta / (self.interval * cap), 0.0), 1.0)
+                util = min(max(delta / (self.interval * util_cap), 0.0), 1.0)
             else:
-                util = min(busy / cap, 1.0) if cap else 0.0
-            snap[s.server_id] = (util, max(s.load() - busy, 0))
+                util = min(busy / util_cap, 1.0) if util_cap else 0.0
+            occ = min(busy / cap, 1.0) if cap else 0.0
+            if toks is None:
+                rate = None
+            else:
+                rate = (toks - self._tokens.get(s.server_id, 0.0)) \
+                    / self.interval
+                self._tokens[s.server_id] = toks
+            snap[s.server_id] = (util, max(s.load() - busy, 0), occ, rate)
         self._gauges[ivl] = snap
 
     # ---- latency accessors (bit-compatible with the recorder) --------------
@@ -508,12 +537,16 @@ class MetricsPipeline:
             gauges = self._gauges.get(ivl, {})
             util = {sid: g[0] for sid, g in gauges.items()}
             qdepth = {sid: g[1] for sid, g in gauges.items()}
+            occupancy = {sid: g[2] for sid, g in gauges.items()}
+            tokens = {sid: g[3] for sid, g in gauges.items()
+                      if g[3] is not None}
             if s is None:
                 s = Summary(0, *(float("nan"),) * 4)
             frames.append(IntervalFrame(
                 t=ivl, n=s.n, qps=s.n / self.interval, mean=s.mean,
                 p50=s.p50, p95=s.p95, p99=s.p99, slo_violation_frac=viol,
-                util=util, qdepth=qdepth))
+                util=util, qdepth=qdepth, occupancy=occupancy,
+                tokens_per_sec=tokens))
         return frames
 
     def to_rows(self) -> list[dict]:
@@ -522,11 +555,15 @@ class MetricsPipeline:
         for f in self.frames():
             mean_util = (sum(f.util.values()) / len(f.util)
                          if f.util else float("nan"))
+            mean_occ = (sum(f.occupancy.values()) / len(f.occupancy)
+                        if f.occupancy else float("nan"))
             rows.append({"t": f.t, "n": f.n, "qps": f.qps,
                          "mean_ms": f.mean * 1e3, "p50_ms": f.p50 * 1e3,
                          "p95_ms": f.p95 * 1e3, "p99_ms": f.p99 * 1e3,
                          "slo_violation_frac": f.slo_violation_frac,
                          "mean_util": mean_util,
+                         "mean_occupancy": mean_occ,
+                         "tokens_per_sec": sum(f.tokens_per_sec.values()),
                          "total_qdepth": sum(f.qdepth.values())
                                          if f.qdepth else 0})
         return rows

@@ -37,9 +37,16 @@ def run_experiment_on_real_engines(exp, *, arch: str, smoke: bool = False,
                                    time_scale: float = 1.0):
     """Run a compiled experiment wall-clock on warmed real engines and
     return the finished ``EngineRuntime`` — the single assembly path the
-    scenario CLI and ``launch/serve --scenario`` both use."""
+    scenario CLI and ``launch/serve --scenario`` both use.  When the
+    experiment samples per-request token sizes, the engines are sized for
+    the distribution's maxima so no sampled prompt overflows the cache."""
     from repro.core.runtime import EngineRuntime
 
+    lengths = exp.resolved_lengths()
+    if lengths is not None:
+        prompt_len = max(prompt_len, getattr(lengths, "prompt_max", prompt_len))
+        max_new_tokens = max(max_new_tokens,
+                             getattr(lengths, "new_max", max_new_tokens))
     n_base = sum(1 for s in exp.servers if s.join_at == 0.0)
     engines, factory, vocab = build_real_engines(
         arch, n_base, smoke=smoke, max_batch=max_batch,
@@ -53,21 +60,37 @@ def run_experiment_on_real_engines(exp, *, arch: str, smoke: bool = False,
 
 
 def build_stub_engines(exp, clock: Callable[[], float], seed: int = 0):
-    """-> (engines, factory): one profile-timed ``StubEngine`` per initial
-    server spec of the compiled experiment, honoring workers and speed."""
-    from repro.serving.engine import StubEngine
+    """-> (engines, factory): one stub replica per initial server spec of
+    the compiled experiment, honoring workers/max_batch and speed.
 
+    A scalar experiment gets profile-timed ``StubEngine`` slots; an
+    experiment with a batched ``service_model`` gets ``BatchedStubEngine``
+    replicas running the same ``BatchScheduler``/``BatchedService``
+    dynamics as the simulator's batched serve loop."""
+    from repro.serving.engine import BatchedStubEngine, StubEngine
+
+    service = exp.resolved_service()
+    batched = getattr(service, "kind", "scalar") == "batched"
     profile = exp.resolved_profile()
     specs = {s.server_id: s for s in exp.servers}
-    engines = {s.server_id: StubEngine(profile, workers=s.workers,
-                                       speed=s.speed, seed=seed + s.server_id,
-                                       clock=clock)
+
+    def make(sid: int, workers: int, speed: float, max_batch, noise: float):
+        if batched:
+            return BatchedStubEngine(service, max_batch=max_batch or 8,
+                                     speed=speed, service_noise=noise,
+                                     seed=seed + sid, clock=clock)
+        return StubEngine(profile, workers=workers, speed=speed,
+                          service_noise=noise, seed=seed + sid, clock=clock)
+
+    engines = {s.server_id: make(s.server_id, s.workers, s.speed, s.max_batch,
+                                 s.service_noise)
                for s in exp.servers if s.join_at == 0.0}
 
     def factory(sid: int):
         spec = specs.get(sid)
-        return StubEngine(profile,
-                          workers=spec.workers if spec else 1,
-                          speed=spec.speed if spec else 1.0,
-                          seed=seed + sid, clock=clock)
+        return make(sid,
+                    spec.workers if spec else 1,
+                    spec.speed if spec else 1.0,
+                    spec.max_batch if spec else None,
+                    spec.service_noise if spec else 0.0)
     return engines, factory

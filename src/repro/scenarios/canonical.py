@@ -1,4 +1,4 @@
-"""The six canonical TailBench++ scenarios.
+"""The canonical TailBench++ scenarios.
 
 Each builder returns a ``Scenario`` exercising one dynamic-cloud pattern
 the paper's harness exists to reproduce (DeathStarBench's argument:
@@ -10,10 +10,21 @@ from __future__ import annotations
 
 from repro.core.client import DiurnalQPS, PiecewiseQPS
 from repro.core.harness import ServerSpec
+from repro.core.profiles import BatchedService, TokenLengths
 from repro.core.scenario import (ClientArrival, ClientChurn, FlashCrowd,
                                  Scenario, ServerDrain, ServerFail,
                                  ServerJoin, SetHedge, SetPolicy)
 from repro.scenarios import register
+
+
+def default_batched_service() -> BatchedService:
+    """A small-model serving cost profile: 2ms weight-streaming per decode
+    step (memory term), ridge point at batch 8, prompt prefill at
+    10us/token.  Calibrate from a real architecture's roofline with
+    ``BatchedService.from_arch("phi3-mini-3.8b")`` instead."""
+    return BatchedService("batched:default", t_memory=2e-3,
+                          t_compute_per_seq=2.5e-4,
+                          t_prefill_per_token=1e-5)
 
 
 @register("steady")
@@ -106,6 +117,33 @@ def elastic_autoscale(*, duration: float = 60.0, seed: int = 0,
                 ServerJoin(24.0 * d, 2, workers=2),
                 ServerDrain(42.0 * d, 2),
                 ServerDrain(52.0 * d, 1)], **kw)
+
+
+@register("batched-serving")
+def batched_serving(*, duration: float = 30.0, seed: int = 0,
+                    policy: str = "jsq", n_clients: int = 4,
+                    qps: float = 150.0, n_servers: int = 2,
+                    max_batch: int = 8, arch: str = None,
+                    service=None, lengths=None, slo: float = None,
+                    **kw) -> Scenario:
+    """Continuous-batching inference fleet: BatchedService servers admit
+    up to max_batch token-sized requests, per-step cost = max(compute,
+    memory) from the roofline — throughput saturates sub-linearly with
+    occupancy like the real engine, and the same scenario runs on the
+    simulator, the batched stub engine, or real JAX engines."""
+    if service is None:
+        service = (BatchedService.from_arch(arch) if arch
+                   else default_batched_service())
+    if lengths is None:
+        # bounded maxima keep the real-engine backend's cache sizing
+        # (prompt_max + new_max tokens) practical
+        lengths = TokenLengths(prompt_max=512, new_max=128)
+    return Scenario(
+        name="batched-serving", duration=duration, policy=policy, seed=seed,
+        slo=slo, service_model=service, lengths=lengths,
+        servers=tuple(ServerSpec(i, max_batch=max_batch)
+                      for i in range(n_servers)),
+        events=[ClientArrival(0.0, qps / n_clients, count=n_clients)], **kw)
 
 
 @register("churn-storm")

@@ -21,6 +21,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ATTN_SWA, MAMBA, ArchConfig
+from repro.core.profiles import apply_service_noise
 from repro.models import param as P
 from repro.models import registry as R
 
@@ -56,10 +57,15 @@ class StubEngine:
     """
 
     def __init__(self, profile, *, workers: int = 1, speed: float = 1.0,
-                 seed: int = 0, clock: Callable[[], float] = time.monotonic):
+                 service_noise: float = 0.0, seed: int = 0,
+                 clock: Callable[[], float] = time.monotonic):
         self.profile = profile
         self.max_batch = workers
         self.speed = speed
+        # multiplicative log-normal execution noise, same semantics as
+        # SimServer.service_noise (a scenario configuring it gets noisy
+        # service on both backends, not just the simulator)
+        self.service_noise = service_noise
         self.clock = clock
         self._rng = np.random.default_rng((9176, 0x57AB, seed))
         self.queue: deque[tuple] = deque()      # (req_id, submitted_at)
@@ -90,13 +96,121 @@ class StubEngine:
                 self.total_served += 1
         while self.queue and len(self.active) < self.max_batch:
             rid, submit = self.queue.popleft()
-            dur = self.profile.sample(self._rng) / self.speed
+            dur = apply_service_noise(
+                self.profile.sample(self._rng) / self.speed,
+                self.service_noise, self._rng)
             self.busy_time += dur
             self.active[rid] = (now + dur, now, submit)
         if not done and self.active and hasattr(self.clock, "advance_to"):
             # mimic a blocking decode step: consume (virtual) time up to
             # the earliest in-flight completion
             self.clock.advance_to(min(f for f, _, _ in self.active.values()))
+        return done
+
+
+class BatchedStubEngine:
+    """Engine-protocol stand-in with *real* continuous-batching dynamics.
+
+    Where ``StubEngine`` times each request on an independent slot, this
+    drives the shared ``BatchScheduler`` op sequencer against a
+    ``BatchedService`` cost model — the same code the simulator's batched
+    ``SimServer`` serve loop executes in virtual time.  Per-op costs are
+    ``max(compute x batch, memory)`` for a decode step and
+    prompt-proportional for a prefill, so throughput saturates with
+    occupancy exactly like ``InferenceEngine`` — and exactly like the
+    simulator predicts, by construction.
+
+    With a clock exposing ``advance_to`` (``VirtualClock``), ``step()``
+    consumes virtual time up to the in-flight op's end the way a real
+    engine's blocking decode step consumes wall time.
+    """
+
+    serializes_ops = True        # one op at a time: util normalizes per
+                                 # engine, not per batch slot
+
+    def __init__(self, service, *, max_batch: int = 8, speed: float = 1.0,
+                 service_noise: float = 0.0, seed: int = 0,
+                 clock: Callable[[], float] = time.monotonic):
+        from repro.core.profiles import BatchScheduler
+        self.service = service
+        self.max_batch = max_batch
+        self.speed = speed
+        # per-op multiplicative log-normal noise, mirroring the batched
+        # SimServer._kick — without it a noisy scenario would silently
+        # run noise-free on the engine backend only
+        self.service_noise = service_noise
+        self.clock = clock
+        self._rng = np.random.default_rng((9176, 0xBA7C, seed))
+        self.core = BatchScheduler(service, max_batch)
+        self._submit_at: dict[int, float] = {}
+        self._prefilled: dict[int, float] = {}
+        self._op_end: Optional[float] = None
+        # the engine's own timeline: ops chain back-to-back on it even
+        # when step() polls late (e.g. a shared VirtualClock advanced by
+        # a sibling replica) — otherwise every poll gap would be billed
+        # as idle service time and the replica would lose throughput
+        self._t = clock()
+        self.total_served = 0
+        self.busy_time = 0.0                    # accrued op seconds
+
+    @property
+    def tokens_done(self) -> int:
+        return self.core.tokens_done
+
+    def submit(self, prompt, max_new_tokens: int, req_id: int) -> None:
+        self._submit_at[req_id] = self.clock()
+        self.core.submit(req_id, len(prompt), max_new_tokens)
+
+    def pending(self) -> int:
+        return self.core.pending()
+
+    def n_active(self) -> int:
+        return self.core.occupancy()
+
+    def idle(self) -> bool:
+        return self._op_end is None and self.core.idle()
+
+    def step(self) -> list[Completion]:
+        now = self.clock()
+        done: list[Completion] = []
+        # replay the engine's background execution up to ``now``: finish
+        # due ops and chain the next one at the op boundary (never at the
+        # poll instant), admitting only requests already submitted by
+        # that boundary — op timing is therefore identical to the
+        # simulator's calendar-queue serve loop
+        while True:
+            if self._op_end is not None:
+                if self._op_end > now:
+                    break
+                end = self._op_end
+                self._op_end = None
+                self._t = end
+                if self.core.op[0] == "prefill":
+                    self._prefilled[self.core.op[1].key] = end
+                for rid in self.core.finish_op():
+                    sub = self._submit_at.pop(rid)
+                    first = self._prefilled.pop(rid, end)
+                    done.append(Completion(rid, [], ttft=first - sub,
+                                           latency=end - sub))
+                    self.total_served += 1
+            t_op = self._t
+            if not self.core.active and self.core.waiting:
+                # idle engine: the next op starts when its head arrived
+                t_op = max(t_op, self._submit_at[self.core.waiting[0].key])
+            dur = self.core.start_op(
+                ready=lambda rid: self._submit_at[rid] <= t_op)
+            if dur is None:
+                break
+            dur = apply_service_noise(dur / self.speed, self.service_noise,
+                                      self._rng)
+            self.busy_time += dur
+            self._t = t_op
+            self._op_end = t_op + dur
+        if not done and self._op_end is not None \
+                and hasattr(self.clock, "advance_to"):
+            # mimic a blocking engine op: consume (virtual) time up to
+            # its end so the runtime's poll loop makes progress
+            self.clock.advance_to(self._op_end)
         return done
 
 

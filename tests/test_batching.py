@@ -1,0 +1,333 @@
+"""Batch-aware service layer: BatchedService roofline costs, the shared
+BatchScheduler dynamics, the simulator's continuous-batching serve loop,
+and sim-vs-stub-engine agreement (the measurement-fidelity property the
+refactor exists for)."""
+import math
+
+import numpy as np
+import pytest
+
+from repro.core.client import ClientConfig, ClientGenerator, ConstantQPS
+from repro.core.harness import Experiment, ServerSpec, run
+from repro.core.profiles import (BatchedService, BatchScheduler, FixedProfile,
+                                 ScalarService, TokenLengths,
+                                 resolve_service_model, tailbench_profile)
+from repro.core.runtime import EngineRuntime, VirtualClock, run_scenario
+from repro.core.scenario import ClientArrival, Scenario, ServerFail
+from repro.scenarios import get
+from repro.scenarios.backends import build_stub_engines
+from repro.scenarios.canonical import default_batched_service
+from repro.serving.engine import BatchedStubEngine
+
+
+SVC = BatchedService("toy", t_memory=1e-3, t_compute_per_seq=2e-4,
+                     t_prefill_per_token=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# ServiceModel cost shapes
+# ---------------------------------------------------------------------------
+def test_batched_service_roofline_max():
+    # memory-bound below the ridge (1e-3 / 2e-4 = batch 5), compute past it
+    assert SVC.step_time(1) == 1e-3
+    assert SVC.step_time(5) == 1e-3
+    assert SVC.step_time(8) == pytest.approx(1.6e-3)
+    assert SVC.ridge_batch == pytest.approx(5.0)
+    # prefill proportional to prompt tokens, floored at one weight pass
+    assert SVC.prefill_time(500) == pytest.approx(5e-3)
+    assert SVC.prefill_time(10) == 1e-3                  # floor
+
+
+def test_batched_service_throughput_sublinear():
+    """Tokens/sec rises with occupancy but saturates past the ridge —
+    the continuous-batching curve the scalar model cannot express."""
+    rates = [SVC.service_rate(b) for b in (1, 2, 5, 10, 20)]
+    assert all(b >= a for a, b in zip(rates, rates[1:]))  # monotone
+    assert rates[2] > rates[1] > rates[0]                # rising below ridge
+    assert rates[1] == pytest.approx(2 * rates[0])       # linear while mem-bound
+    assert rates[4] == pytest.approx(rates[3])           # flat when compute-bound
+    assert SVC.service_rate(20) < 20 * SVC.service_rate(1) / 2
+
+
+def test_scalar_service_wraps_profile():
+    prof = tailbench_profile("xapian")
+    svc = ScalarService(prof)
+    assert svc.kind == "scalar" and svc.mean == prof.mean
+    rng = np.random.default_rng(0)
+    rng2 = np.random.default_rng(0)
+    assert svc.sample(rng) == prof.sample(rng2)
+    assert resolve_service_model(None, prof).profile is prof
+    assert resolve_service_model(SVC, prof) is SVC
+
+
+# ---------------------------------------------------------------------------
+# Shared scheduler core
+# ---------------------------------------------------------------------------
+def test_batch_scheduler_prefill_priority_and_completion():
+    core = BatchScheduler(SVC, max_batch=2)
+    core.submit("a", prompt_tokens=100, max_new_tokens=2)
+    core.submit("b", prompt_tokens=100, max_new_tokens=1)
+    core.submit("c", prompt_tokens=100, max_new_tokens=3)
+    # op 1: prefill a (emits its first token)
+    assert core.start_op() == pytest.approx(1e-3)
+    assert core.occupancy() == 1
+    assert core.finish_op() == []
+    # op 2: prefill b -> its only token completes it at the op end
+    core.start_op()
+    assert core.finish_op() == ["b"]
+    # op 3: batch full? a active, b done, c waiting, slots=2 -> prefill c
+    core.start_op()
+    assert core.op[0] == "prefill"
+    assert core.finish_op() == []
+    # op 4: decode step of {a, c}: a emits token 2 of 2 -> done,
+    # c emits token 2 of 3
+    dur = core.start_op()
+    assert core.op[0] == "decode" and dur == pytest.approx(1e-3)
+    assert core.finish_op() == ["a"]
+    # one more decode emits c's last token
+    core.start_op()
+    assert core.finish_op() == ["c"]
+    assert core.idle()
+    assert core.tokens_done == 2 + 1 + 3
+
+
+def test_batch_scheduler_respects_max_batch():
+    core = BatchScheduler(SVC, max_batch=2)
+    for k in range(4):
+        core.submit(k, 10, 5)
+    core.start_op(); core.finish_op()          # prefill 0
+    core.start_op(); core.finish_op()          # prefill 1 -> batch full
+    core.start_op()
+    assert core.op[0] == "decode"              # 2 and 3 must wait
+    assert core.pending() == 2
+    assert core.occupancy() == 2
+
+
+def test_batch_scheduler_ready_predicate_holds_head():
+    core = BatchScheduler(SVC, max_batch=4)
+    core.submit("later", 10, 2)
+    core.submit("now", 10, 2)
+    # FIFO head not yet arrived at the op boundary -> no admission (and
+    # no queue-jumping by "now"), fall through to idle
+    assert core.start_op(ready=lambda k: k == "now") is None
+    assert core.start_op(ready=lambda k: True) is not None
+    assert core.op[1].key == "later"           # FIFO preserved
+
+
+# ---------------------------------------------------------------------------
+# Token-size semantics
+# ---------------------------------------------------------------------------
+def test_token_lengths_deterministic_and_bounded():
+    tl = TokenLengths(prompt_median=100, prompt_sigma=0.5, new_median=20,
+                      new_sigma=0.5, prompt_max=256, new_max=64)
+    rng = np.random.default_rng(1)
+    sizes = [tl.sample(rng) for _ in range(2000)]
+    assert all(1 <= p <= 256 and 1 <= n <= 64 for p, n in sizes)
+    med_p = np.median([p for p, _ in sizes])
+    assert 80 < med_p < 125
+    rng2 = np.random.default_rng(1)
+    assert sizes[:50] == [tl.sample(rng2) for _ in range(50)]
+
+
+def test_sizes_identical_across_backends_and_separate_stream():
+    """Both backends draw the same (arrival, demand, sizes) streams; and
+    configuring lengths must NOT perturb the arrival-time draws."""
+    prof = tailbench_profile("xapian")
+    cfg = ClientConfig(3, ConstantQPS(200), seed=17, total_requests=200)
+    tl = TokenLengths()
+
+    def drain(gen):
+        out = []
+        while True:
+            nxt = gen.next_arrival()
+            if nxt is None:
+                return out
+            out.append((nxt[0], nxt[1], gen.last_sizes))
+
+    a = drain(ClientGenerator(cfg, prof, rng_stream=0, lengths=tl))
+    b = drain(ClientGenerator(cfg, prof, rng_stream=0, lengths=tl))
+    assert a == b
+    assert len({s for _, _, s in a}) > 20          # sizes actually vary
+    unsized = drain(ClientGenerator(cfg, prof, rng_stream=0))
+    assert [(t, d) for t, d, _ in a] == [(t, d) for t, d, _ in unsized]
+    assert all(s == (0, 0) for _, _, s in unsized)
+
+
+# ---------------------------------------------------------------------------
+# Simulator batched serve loop
+# ---------------------------------------------------------------------------
+def _batched_exp(qps=60.0, duration=10.0, max_batch=8, n_servers=1,
+                 seed=5, **kw):
+    clients = [ClientConfig(i, ConstantQPS(qps / 2), seed=seed)
+               for i in range(2)]
+    return Experiment(
+        clients=clients, duration=duration, seed=seed, policy="jsq",
+        servers=tuple(ServerSpec(i, max_batch=max_batch)
+                      for i in range(n_servers)),
+        service_model=SVC, lengths=TokenLengths(new_median=16, new_max=64),
+        **kw)
+
+
+def test_sim_batched_end_to_end():
+    sim = run(_batched_exp())
+    s = sim.telemetry.overall()
+    assert s.n > 400
+    assert sim.dropped == 0
+    srv = sim.servers[0]
+    assert srv.total_served == s.n
+    assert srv.tokens_done > 16 * s.n / 2      # ~16 tokens per request
+    assert 0 < s.p50 <= s.p99
+    # latency at low load ~ new_tokens * step_time: tens of ms
+    assert 5e-3 < s.p50 < 0.2
+
+
+def test_sim_batched_occupancy_and_tokens_gauges():
+    sim = run(_batched_exp(qps=100.0))
+    frames = [f for f in sim.telemetry.frames() if 1 <= f.t <= 8]
+    assert frames
+    assert all(0.0 <= f.occupancy[0] <= 1.0 for f in frames)
+    assert any(f.occupancy[0] > 0.2 for f in frames)
+    assert all(f.tokens_per_sec[0] > 0 for f in frames)
+    # tokens/sec can never exceed the roofline service rate at full batch
+    cap = SVC.service_rate(8)
+    assert all(f.tokens_per_sec[0] <= cap * 1.05 for f in frames)
+
+
+def test_sim_batched_deterministic():
+    a = run(_batched_exp()).recorder.all
+    b = run(_batched_exp()).recorder.all
+    assert a and a == b
+
+
+def test_sim_batched_knee_moves_with_max_batch():
+    """Sub-linear but real: capacity grows with batch slots, so at a load
+    that saturates max_batch=2, max_batch=8 still serves flat."""
+    hot = run(_batched_exp(qps=120.0, max_batch=2, duration=12.0))
+    cool = run(_batched_exp(qps=120.0, max_batch=8, duration=12.0))
+    assert cool.telemetry.overall().p99 < hot.telemetry.overall().p99 / 3
+    assert hot.servers[0].load() > 20          # saturated: queue built up
+    assert cool.servers[0].load() <= 10        # stable residency, no backlog
+
+
+def test_sim_batched_server_failure_loses_batch():
+    sc = Scenario(
+        name="bfail", duration=10.0, seed=7, policy="jsq",
+        servers=(ServerSpec(0, max_batch=4), ServerSpec(1, max_batch=4)),
+        service_model=SVC, lengths=TokenLengths(),
+        events=[ClientArrival(0.0, 120.0, count=2),
+                ServerFail(5.0, 1)])
+    rt = run_scenario(sc, "sim")
+    assert rt.sim.servers[1].failed
+    assert rt.dropped > 0                      # resident batch + queue lost
+    assert rt.telemetry.overall().n > 0        # survivor keeps serving
+    late = sum(rt.telemetry.window("n", 6, 10))
+    assert late > 0
+
+
+# ---------------------------------------------------------------------------
+# Sim vs stub engine: agreement by construction
+# ---------------------------------------------------------------------------
+def _run_both(qps, max_batch=4, duration=12.0, seed=9):
+    sc = get("batched-serving", seed=seed, duration=duration, qps=qps,
+             n_clients=2, n_servers=1, max_batch=max_batch, service=SVC,
+             lengths=TokenLengths(new_median=16, new_max=64))
+    sim_rt = run_scenario(sc, "sim")
+    clock = VirtualClock()
+    exp = sc.compile()
+    engines, factory = build_stub_engines(exp, clock, seed)
+    eng_rt = EngineRuntime.from_experiment(exp, engines,
+                                           engine_factory=factory,
+                                           clock=clock, sleep=clock.sleep)
+    eng_rt.run()
+    return sim_rt.telemetry.overall(), eng_rt.telemetry.overall()
+
+
+def test_stub_fleet_is_batched_for_batched_experiments():
+    sc = get("batched-serving", seed=1, n_servers=2, service=SVC)
+    engines, factory = build_stub_engines(sc.compile(), VirtualClock(), 0)
+    assert all(isinstance(e, BatchedStubEngine) for e in engines.values())
+    assert isinstance(factory(0), BatchedStubEngine)
+
+
+@pytest.mark.parametrize("qps", [40.0, 120.0])
+def test_sim_vs_stub_engine_latency_parity(qps):
+    """Same scenario, both backends, shared BatchScheduler dynamics:
+    latency percentiles agree tightly below AND near the knee."""
+    s_sim, s_eng = _run_both(qps)
+    assert abs(s_sim.n - s_eng.n) <= max(10, 0.02 * s_sim.n)
+    assert s_eng.p50 == pytest.approx(s_sim.p50, rel=0.10)
+    assert s_eng.p99 == pytest.approx(s_sim.p99, rel=0.15)
+
+
+def test_scalar_service_model_profile_is_honored():
+    """Experiment(service_model=ScalarService(p)) must serve with p, not
+    silently fall back to the app's default profile."""
+    fixed = FixedProfile("fixed", 0.05)
+    exp = Experiment(clients=[ClientConfig(0, ConstantQPS(5), seed=2,
+                                           total_requests=20)],
+                     duration=30.0, seed=2,
+                     service_model=ScalarService(fixed))
+    assert exp.resolved_profile() is fixed
+    s = run(exp).telemetry.overall()
+    assert s.n == 20
+    assert s.p50 == pytest.approx(0.05)
+    # an explicit profile= still wins over the wrapper
+    other = FixedProfile("other", 0.01)
+    assert Experiment(clients=[], profile=other,
+                      service_model=ScalarService(fixed)
+                      ).resolved_profile() is other
+
+
+def test_batched_experiment_defaults_lengths():
+    """A batched service_model with lengths unset must not silently
+    degenerate every request to one prompt token and zero decode steps —
+    resolved_lengths falls back to the stock TokenLengths."""
+    exp = _batched_exp()
+    exp = Experiment(clients=exp.clients, duration=exp.duration,
+                     seed=exp.seed, policy=exp.policy, servers=exp.servers,
+                     service_model=SVC)          # lengths=None
+    assert isinstance(exp.resolved_lengths(), TokenLengths)
+    sim = run(exp)
+    s = sim.telemetry.overall()
+    assert s.n > 100
+    # stock TokenLengths median is 16 new tokens: multi-step decode, so
+    # latencies sit well above a single prefill+decode op pair
+    assert sim.servers[0].tokens_done > 4 * s.n
+    # scalar experiments keep lengths=None (no spurious size sampling)
+    assert Experiment(clients=exp.clients).resolved_lengths() is None
+
+
+def test_stub_engines_honor_service_noise():
+    """service_noise configured on a ServerSpec reaches the stub engines
+    (the simulator already applied it; the engine backend must too)."""
+    def total_busy(noise):
+        sc = get("batched-serving", seed=3, duration=8.0, qps=40.0,
+                 n_clients=2, n_servers=1, max_batch=4, service=SVC,
+                 lengths=TokenLengths(new_median=8, new_max=16))
+        exp = sc.compile()
+        exp = Experiment(
+            clients=exp.clients, duration=exp.duration, seed=exp.seed,
+            policy=exp.policy, service_model=exp.service_model,
+            lengths=exp.lengths,
+            servers=tuple(ServerSpec(s.server_id, max_batch=s.max_batch,
+                                     service_noise=noise)
+                          for s in exp.servers))
+        clock = VirtualClock()
+        engines, factory = build_stub_engines(exp, clock, 3)
+        assert all(e.service_noise == noise for e in engines.values())
+        rt = EngineRuntime.from_experiment(exp, engines,
+                                           engine_factory=factory,
+                                           clock=clock, sleep=clock.sleep)
+        rt.run()
+        return sum(h.busy_time for h in rt.handles.values())
+
+    quiet, noisy = total_busy(0.0), total_busy(1.0)
+    assert quiet > 0
+    assert noisy != quiet                        # noise draws actually bite
+
+
+def test_batched_scenario_runs_via_cli_entry():
+    from repro.scenarios.__main__ import main
+    assert main(["batched-serving", "--duration", "4"]) == 0
+    assert main(["batched-serving", "--duration", "4", "--backend",
+                 "engine", "--stub"]) == 0

@@ -173,8 +173,22 @@ def test_run_engine_experiment_shim_deprecated():
     with warnings.catch_warnings(record=True) as w:
         warnings.simplefilter("always")
         rec = run_engine_experiment(engines, clients, duration=5.0)
-    assert any(issubclass(x.category, DeprecationWarning) for x in w)
+    deprecations = [x for x in w
+                    if issubclass(x.category, DeprecationWarning)]
+    assert len(deprecations) == 1            # exactly once per call
+    assert "EngineRuntime" in str(deprecations[0].message)
     assert rec.overall().n == 50
+    # the replacement path serves the same workload without warning
+    clients = [ClientConfig(0, ConstantQPS(100), seed=1, total_requests=50)]
+    clock = VirtualClock()
+    rt = EngineRuntime([StubEngine(FixedProfile("svc", 2e-3), workers=2,
+                                   clock=clock)],
+                       clients, duration=5.0, clock=clock, sleep=clock.sleep)
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        rt.run()
+    assert not [x for x in w if issubclass(x.category, DeprecationWarning)]
+    assert rt.telemetry.overall().n == 50
 
 
 def test_simulator_runtime_adapter():

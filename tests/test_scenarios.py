@@ -6,8 +6,8 @@ import math
 import numpy as np
 import pytest
 
-from repro.core.client import (ClientConfig, ConstantQPS, PiecewiseQPS,
-                               TraceQPS)
+from repro.core.client import (ClientConfig, ConstantQPS, DiurnalQPS,
+                               PiecewiseQPS, TraceQPS)
 from repro.core.harness import Experiment, ServerSpec, run
 from repro.core.profiles import FixedProfile
 from repro.core.runtime import run_scenario
@@ -21,10 +21,10 @@ import repro.core.client as client_mod
 CANONICAL = names()
 
 
-def test_registry_has_the_six_canonical_scenarios():
+def test_registry_has_the_canonical_scenarios():
     assert set(CANONICAL) == {"steady", "flash-crowd", "diurnal-fleet",
                               "server-failure", "elastic-autoscale",
-                              "churn-storm"}
+                              "churn-storm", "batched-serving"}
 
 
 @pytest.mark.parametrize("name", CANONICAL)
@@ -132,6 +132,73 @@ def test_trace_next_change_skips_flat_regions():
     assert t.next_change(0.5) == 3600.0
     assert t.next_change(3600.5) == math.inf    # constant to the end
     assert TraceQPS([]).next_change(0.0) == math.inf
+
+
+def test_trace_next_change_precomputed_change_points():
+    """Change points are indexed once (bisect lookup), not rescanned from
+    the current cell — and every lookup matches a linear scan."""
+    trace = [5.0] * 10 + [0.0] * 20 + [5.0, 5.0, 7.0] + [7.0] * 5
+    t = TraceQPS(trace, dt=0.5)
+    assert t._changes == [10, 30, 32]
+
+    def linear(tq, at):
+        n = len(tq.trace)
+        i = max(min(int(at / tq.dt), n - 1), 0)
+        cur = tq.trace[i]
+        for j in range(i + 1, n):
+            if tq.trace[j] != cur:
+                return j * tq.dt
+        return math.inf
+
+    for at in [0.0, 4.9, 5.0, 7.3, 14.9, 15.0, 16.2, 17.0, 100.0]:
+        assert t.next_change(at) == linear(t, at), at
+
+
+def test_diurnal_next_change_exits_trough_exactly():
+    """amplitude >= base: the clipped sinusoid is zero over a whole
+    sub-interval; next_change must return the exact zero-exit time."""
+    d = DiurnalQPS(base=100.0, amplitude=200.0, period=40.0)
+    # rate = 0 where sin(2*pi*t/40) <= -0.5: t in (23.333.., 36.666..)
+    assert d.rate(30.0) == 0.0
+    exit_t = d.next_change(30.0)
+    assert exit_t == pytest.approx(40.0 * 11 / 12)      # 36.666..
+    assert d.rate(exit_t + 1e-6) > 0.0
+    assert d.rate(exit_t - 1e-3) == 0.0
+    # positive-rate regions vary continuously -> None (grid re-sampling)
+    assert d.next_change(5.0) is None
+    # rate never positive -> exhausted, not a spin
+    assert DiurnalQPS(base=-10.0, amplitude=5.0).next_change(0.0) == math.inf
+    # constant schedule (amplitude 0, clipped to zero) -> no change ever
+    assert DiurnalQPS(base=0.0, amplitude=0.0).next_change(1.0) == math.inf
+
+
+def test_diurnal_generator_skips_zero_rate_valley_in_few_steps():
+    """A generator walking the trough must jump it in O(1) rate lookups,
+    not spin through it on the MAX_STEP grid (~53 spins for a 13s
+    valley)."""
+    calls = {"valley": 0}
+    sched = DiurnalQPS(base=100.0, amplitude=200.0, period=40.0)
+    orig = sched.rate
+
+    def counting_rate(t):
+        if 23.4 < t < 36.6:               # strictly inside the zero region
+            calls["valley"] += 1
+        return orig(t)
+    sched.rate = counting_rate
+    gen = client_mod.ClientGenerator(
+        ClientConfig(0, sched, seed=3, end_time=40.0),
+        FixedProfile("x", 1e-3))
+    ts = []
+    while True:
+        nxt = gen.next_arrival()
+        if nxt is None:
+            break
+        ts.append(nxt[0])
+    # arrivals resume after the valley, and none fall inside it
+    assert any(t > 36.7 for t in ts)
+    assert not any(23.4 < t < 36.6 for t in ts)
+    # the valley is left in a handful of lookups, not ~53 MAX_STEP spins
+    assert calls["valley"] < 10
 
 
 def test_generator_skips_long_idle_gap_in_one_step():

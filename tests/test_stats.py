@@ -231,6 +231,91 @@ def test_pipeline_gauges_join_frames():
     assert rows[0]["mean_util"] == pytest.approx(0.25)
 
 
+class _GaugeSrv:
+    """Configurable fake server: any combination of workers / max_batch /
+    busy_time / tokens_done attribute shapes."""
+
+    def __init__(self, sid, busy=0, queued=0, **attrs):
+        self.server_id = sid
+        self.busy = busy
+        self._q = queued
+        for k, v in attrs.items():
+            setattr(self, k, v)
+
+    def load(self):
+        return self.busy + self._q
+
+
+def test_capacity_workers_zero_is_not_max_batch():
+    """Regression: `workers or max_batch` silently mapped workers=0 to
+    the max_batch fallback — a zero-capacity server must read util 0,
+    not borrow batch slots it does not have."""
+    rec = LatencyRecorder(1.0)
+    pipe = MetricsPipeline(rec, 1.0)
+    pipe.sample_servers(1.0, [_GaugeSrv(0, busy=0, queued=3, workers=0,
+                                        max_batch=4)])
+    f = pipe.frames()[0]
+    assert f.util == {0: 0.0}
+    assert f.occupancy == {0: 0.0}
+    assert f.qdepth == {0: 3}
+
+
+def test_capacity_both_attribute_shapes():
+    """workers-shaped (SimServer) and max_batch-shaped (engine handles /
+    batched servers) both resolve their own capacity."""
+    rec = LatencyRecorder(1.0)
+    pipe = MetricsPipeline(rec, 1.0)
+    pipe.sample_servers(1.0, [
+        _GaugeSrv(0, busy=2, workers=4),               # scalar: 2/4 busy
+        _GaugeSrv(1, busy=3, workers=None, max_batch=6),   # batch slots
+        _GaugeSrv(2, busy=5),                          # neither -> cap 1
+    ])
+    f = pipe.frames()[0]
+    assert f.util[0] == pytest.approx(0.5)
+    assert f.occupancy[0] == pytest.approx(0.5)
+    assert f.util[1] == pytest.approx(0.5)      # 3/6 resident
+    assert f.occupancy[1] == pytest.approx(0.5)
+    assert f.util[2] == 1.0                     # clipped at capacity 1
+
+
+def test_occupancy_and_tokens_gauges_for_batched_servers():
+    """A batched server (declares serializes_ops) gets: util normalized
+    per server, occupancy normalized by batch slots, and a tokens/sec
+    rate from the cumulative counter."""
+    rec = LatencyRecorder(1.0)
+    pipe = MetricsPipeline(rec, 1.0)
+    srv = _GaugeSrv(0, busy=4, queued=2, workers=None, max_batch=8,
+                    serializes_ops=True, busy_time=0.9, tokens_done=1200)
+    scalar = _GaugeSrv(1, busy=1, workers=2)
+    pipe.sample_servers(1.0, [srv, scalar])
+    f = pipe.frames()[0]
+    assert f.util[0] == pytest.approx(0.9)          # op-seconds / interval
+    assert f.occupancy[0] == pytest.approx(0.5)     # 4 of 8 slots resident
+    assert f.tokens_per_sec == {0: 1200.0}          # scalar servers absent
+    srv.busy_time = 1.7
+    srv.tokens_done = 1800
+    pipe.sample_servers(2.0, [srv, scalar])
+    f2 = [fr for fr in pipe.frames() if fr.t == 1][0]
+    assert f2.util[0] == pytest.approx(0.8)         # delta op-seconds
+    assert f2.tokens_per_sec[0] == pytest.approx(600.0)
+    rows = pipe.to_rows()
+    assert rows[0]["tokens_per_sec"] == pytest.approx(1200.0)
+    assert rows[0]["mean_occupancy"] == pytest.approx((0.5 + 0.5) / 2)
+
+
+def test_token_counter_alone_does_not_serialize_util():
+    """Counting tokens must not imply serialized ops: a concurrent server
+    that happens to expose tokens_done still normalizes util by its
+    capacity, not per server."""
+    rec = LatencyRecorder(1.0)
+    pipe = MetricsPipeline(rec, 1.0)
+    srv = _GaugeSrv(0, busy=2, workers=4, busy_time=2.0, tokens_done=500)
+    pipe.sample_servers(1.0, [srv])
+    f = pipe.frames()[0]
+    assert f.util[0] == pytest.approx(0.5)      # 2.0 op-seconds / 4 slots
+    assert f.tokens_per_sec == {0: 500.0}       # the counter still feeds rate
+
+
 def test_pipeline_frames_streaming_mode():
     rec = LatencyRecorder(1.0, mode="streaming")
     pipe = MetricsPipeline(rec, 1.0, slo=0.05)
