@@ -4,15 +4,23 @@ For each of the 8 apps, run both harness modes over a QPS range with 13
 repetitions each (independent seeds per mode, like independent runs on a
 real testbed), then Welch's t-test on the mean/p95/p99 distributions.
 The null hypothesis (no behavioral difference) must be retained everywhere:
-|t| < 2 and p > 0.05 — the paper's validation methodology."""
+|t| < 2 and p > 0.05 — the paper's validation methodology.
+
+Declared as a ``repro.sweep`` over explicit points (app x per-app QPS x
+harness variant, 13 repetitions each).  Per-app seeds come from a
+stable digest (``zlib.crc32``), so the run is deterministic in any
+process — the old ``hash(app)`` derivation silently depended on
+``PYTHONHASHSEED``.
+"""
 from __future__ import annotations
 
 import time
+import zlib
 
 from benchmarks.common import emit
-from repro.core.harness import run
 from repro.core.legacy import legacy_experiment, plusplus_equivalent
 from repro.core.stats import welch_ttest
+from repro.sweep import PointCtx, Sweep, run_sweep
 
 QPS_RANGE = {          # per-app load points (scaled to service time)
     "masstree": (500, 2000), "silo": (400, 1500), "xapian": (100, 400),
@@ -25,30 +33,42 @@ METRICS = ("mean", "p95", "p99")
 DURATION = {"sphinx": 150.0, "moses": 40.0}
 
 
+def app_seed(app: str, rep: int) -> int:
+    """Stable per-(app, rep) seed: crc32 digest, never ``hash()``."""
+    return 1000 * rep + zlib.crc32(app.encode()) % 997
+
+
+def _point(ctx: PointCtx):
+    app, qps = ctx.params["app"], ctx.params["qps"]
+    seed = app_seed(app, ctx.rep)
+    dur = DURATION.get(app, 12.0)
+    if ctx.params["variant"] == "legacy":
+        return legacy_experiment(3, qps / 3,
+                                 requests_per_client=int(qps * dur / 3),
+                                 app=app, duration=dur, seed=seed)
+    # the ++ harness runs as an independent testbed: independent seeds
+    return plusplus_equivalent(legacy_experiment(
+        3, qps / 3, requests_per_client=int(qps * dur / 3),
+        app=app, duration=dur, seed=seed + 500_000))
+
+
+SWEEP = Sweep(name="fig4_equivalence", factory=_point, mode="points",
+              points=tuple({"app": app, "qps": qps, "variant": variant}
+                           for app, qs in QPS_RANGE.items()
+                           for qps in qs
+                           for variant in ("legacy", "plusplus")),
+              reps=REPS, seeder="fixed", metrics=METRICS)
+
+
 def main() -> str:
     t0 = time.time()
+    frame = run_sweep(SWEEP, progress=None).raise_errors()
     rows = []
     all_retained = True
-    for app, qs in QPS_RANGE.items():
-        legacy_vals = {m: [] for m in METRICS}
-        pp_vals = {m: [] for m in METRICS}
-        for qps in qs:
-            for rep in range(REPS):
-                seed = 1000 * rep + hash(app) % 997
-                dur = DURATION.get(app, 12.0)
-                leg = legacy_experiment(3, qps / 3,
-                                        requests_per_client=int(qps * dur / 3),
-                                        app=app, duration=dur, seed=seed)
-                pp = plusplus_equivalent(legacy_experiment(
-                    3, qps / 3, requests_per_client=int(qps * dur / 3),
-                    app=app, duration=dur, seed=seed + 500_000))
-                s_l = run(leg).telemetry.overall()
-                s_p = run(pp).telemetry.overall()
-                for m in METRICS:
-                    legacy_vals[m].append(getattr(s_l, m))
-                    pp_vals[m].append(getattr(s_p, m))
+    for app in QPS_RANGE:
         for m in METRICS:
-            w = welch_ttest(legacy_vals[m], pp_vals[m])
+            w = welch_ttest(frame.values(m, app=app, variant="legacy"),
+                            frame.values(m, app=app, variant="plusplus"))
             retained = abs(w.t_stat) < 2 and w.p_value > 0.05
             all_retained &= retained
             rows.append({"app": app, "metric": m,

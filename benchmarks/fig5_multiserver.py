@@ -2,17 +2,23 @@
 
 3 clients -> 1 vs 2 servers via round-robin LVS; p95/p99 with 95% CIs over
 13 repetitions.  Expected: multi-server lowers tail latency for most apps;
-apps whose bottleneck is not the server queue benefit least."""
+apps whose bottleneck is not the server queue benefit least.
+
+Declared as a ``repro.sweep`` grid (app x server-count, the paper's 13
+repetitions) instead of the old hand-rolled repetition loop.  The custom
+seeder replays that loop's exact derivation — ``seed + 1000*(rep+1)``
+with repetition stream 0 — so the figure CSV is bit-identical to the
+pre-sweep output.  (New sweeps should prefer the default ``"spawn"``
+seeder, which cannot collide across grid points.)
+"""
 from __future__ import annotations
 
 import time
 
-import numpy as np
-
 from benchmarks.common import emit
 from repro.core.client import ClientConfig, ConstantQPS
-from repro.core.harness import Experiment, ServerSpec, run
-from repro.core.stats import confidence95
+from repro.core.harness import Experiment, ServerSpec
+from repro.sweep import Axis, PointCtx, Sweep, run_sweep
 
 # silo/specjbb run far from server saturation (the paper observes they do
 # not benefit from a second server — their bottleneck is not the queue).
@@ -21,31 +27,46 @@ LOAD = {"masstree": 1500, "silo": 300, "xapian": 450, "img-dnn": 350,
 DURATION = {"sphinx": 120.0, "moses": 40.0}
 # multi-threaded servers: one instance already absorbs the offered load
 WORKERS = {"silo": 8, "specjbb": 8}
+REPS = 13
+
+
+def _point(ctx: PointCtx) -> Experiment:
+    app, n_srv = ctx.params["app"], ctx.params["servers"]
+    qps = LOAD[app]
+    clients = [ClientConfig(i, ConstantQPS(qps / 3)) for i in range(3)]
+    w = WORKERS.get(app, 1)
+    return Experiment(clients=clients,
+                      servers=tuple(ServerSpec(i, workers=w)
+                                    for i in range(n_srv)),
+                      app=app, duration=DURATION.get(app, 12.0),
+                      policy="round_robin", seed=ctx.seed)
+
+
+def _legacy_loop_seed(base: int, index: int, rep: int) -> tuple:
+    """The pre-sweep repetition loop perturbed only the experiment seed
+    (repetition stream stayed 0)."""
+    return base + 1000 * (rep + 1), 0
+
+
+SWEEP = Sweep(name="fig5_multiserver", factory=_point,
+              axes=(Axis("app", tuple(LOAD)), Axis("servers", (1, 2))),
+              reps=REPS, base_seed=0, seeder=_legacy_loop_seed,
+              metrics=("p95", "p99"))
 
 
 def main() -> str:
     t0 = time.time()
+    frame = run_sweep(SWEEP, progress=None).raise_errors()
+    agg = {pct: {(a["params"]["app"], a["params"]["servers"]):
+                 (a["mean"], a["ci95"]) for a in frame.aggregate(pct)}
+           for pct in ("p95", "p99")}
     rows = []
     improved = 0
-    for app, qps in LOAD.items():
+    for app in LOAD:
         res = {}
         for n_srv in (1, 2):
-            clients = [ClientConfig(i, ConstantQPS(qps / 3)) for i in range(3)]
-            w = WORKERS.get(app, 1)
-            exp = Experiment(clients=clients,
-                             servers=tuple(ServerSpec(i, workers=w)
-                                           for i in range(n_srv)),
-                             app=app, duration=DURATION.get(app, 12.0),
-                             policy="round_robin")
-            from dataclasses import replace as _rp
-            vals = {"p95": [], "p99": []}
-            for rep in range(13):
-                sim = run(_rp(exp, seed=exp.seed + 1000 * (rep + 1)))
-                s_all = sim.telemetry.overall()
-                vals["p95"].append(s_all.p95)
-                vals["p99"].append(s_all.p99)
             for pct in ("p95", "p99"):
-                mean, ci = confidence95(vals[pct])
+                mean, ci = agg[pct][(app, n_srv)]
                 res[(n_srv, pct)] = (mean, ci)
                 rows.append({"app": app, "servers": n_srv, "pct": pct,
                              "latency_s": f"{mean:.6f}", "ci95": f"{ci:.6f}"})

@@ -2,7 +2,12 @@
 
 100 -> 300 -> 500 -> 600 -> 800 -> 100 QPS; per-interval mean/p95/p99.
 Expected: latency tracks load, burstiness near saturation (40-50s window),
-and the first/last intervals match (same 100 QPS)."""
+and the first/last intervals match (same 100 QPS).
+
+A one-point ``repro.sweep`` declaration with telemetry capture; window
+statistics come from the row's per-interval series (bit-identical to
+the live ``MetricsPipeline.window`` values).
+"""
 from __future__ import annotations
 
 import time
@@ -11,24 +16,32 @@ import numpy as np
 
 from benchmarks.common import emit
 from repro.core.client import ClientConfig, PiecewiseQPS
-from repro.core.harness import Experiment, ServerSpec, run
+from repro.core.harness import Experiment, ServerSpec
+from repro.sweep import PointCtx, Sweep, run_sweep, series_window
 
 TABLE5 = [(0, 100), (10, 300), (20, 500), (30, 600), (40, 800), (50, 100)]
 
 
+def _point(ctx: PointCtx) -> Experiment:
+    return Experiment(clients=[ClientConfig(0, PiecewiseQPS(TABLE5))],
+                      servers=(ServerSpec(0, workers=1),),
+                      app="xapian", duration=60.0, seed=ctx.seed)
+
+
+SWEEP = Sweep(name="fig7_dynamic_qps", factory=_point, reps=1,
+              base_seed=13, seeder="fixed", metrics=(), telemetry=True)
+
+
 def main() -> str:
     t0 = time.time()
-    exp = Experiment(clients=[ClientConfig(0, PiecewiseQPS(TABLE5))],
-                     servers=(ServerSpec(0, workers=1),),
-                     app="xapian", duration=60.0, seed=13)
-    sim = run(exp)
-    rows = []
-    for ivl, s in sim.telemetry.series().items():
-        rows.append({"t": ivl, "n": s.n, "mean_ms": f"{s.mean*1e3:.3f}",
-                     "p95_ms": f"{s.p95*1e3:.3f}", "p99_ms": f"{s.p99*1e3:.3f}"})
-    first = np.nanmean(sim.telemetry.window("p99", 2, 9))
-    last = np.nanmean(sim.telemetry.window("p99", 52, 59))
-    peak = np.nanmax(sim.telemetry.window("p99", 41, 50))
+    frame = run_sweep(SWEEP, progress=None).raise_errors()
+    series = frame.rows[0].series
+    rows = [{"t": r["t"], "n": r["n"], "mean_ms": f"{r['mean']*1e3:.3f}",
+             "p95_ms": f"{r['p95']*1e3:.3f}", "p99_ms": f"{r['p99']*1e3:.3f}"}
+            for r in series if r["cid"] == -1]
+    first = np.nanmean(series_window(series, "p99", 2, 9))
+    last = np.nanmean(series_window(series, "p99", 52, 59))
+    peak = np.nanmax(series_window(series, "p99", 41, 50))
     sym = last / first
     emit("fig7_dynamic_qps", rows, t0,
          f"first_vs_last_p99_ratio={sym:.2f};peak_p99_ms={peak*1e3:.1f}")

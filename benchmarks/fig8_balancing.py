@@ -1,6 +1,13 @@
 """Paper Fig. 8: round-robin vs load-aware balancing, 2 servers, 3 clients
 (500/200/200 QPS).  Load-aware isolates the heavy client; round-robin can
-co-locate it with another client, hurting its p99."""
+co-locate it with another client, hurting its p99.
+
+Declared as a ``repro.sweep`` grid over the policy axis with 13
+repetitions and per-client summary capture.  The ``"rep"`` seeder
+replays the historical ``for seed in range(13)`` loop (the repetition
+index IS the experiment seed and the clients derive their streams from
+it), keeping the figure CSV bit-identical to the pre-sweep output.
+"""
 from __future__ import annotations
 
 import time
@@ -9,26 +16,38 @@ import numpy as np
 
 from benchmarks.common import emit
 from repro.core.client import ClientConfig, ConstantQPS
-from repro.core.harness import Experiment, ServerSpec, run
+from repro.core.harness import Experiment, ServerSpec
+from repro.sweep import Axis, PointCtx, Sweep, run_sweep
+
+POLICIES = ("round_robin", "load_aware", "jsq", "p2c")
+
+
+def _point(ctx: PointCtx) -> Experiment:
+    seed = ctx.seed
+    clients = [ClientConfig(1, ConstantQPS(500), seed=seed),
+               ClientConfig(2, ConstantQPS(200), seed=seed + 99),
+               ClientConfig(3, ConstantQPS(200), seed=seed + 198)]
+    return Experiment(clients=clients,
+                      servers=(ServerSpec(0), ServerSpec(1)),
+                      app="xapian", duration=15.0,
+                      policy=ctx.params["policy"], seed=seed)
+
+
+SWEEP = Sweep(name="fig8_balancing", factory=_point,
+              axes=(Axis("policy", POLICIES),), reps=13,
+              base_seed=0, seeder="rep", metrics=(), per_client=True)
 
 
 def main() -> str:
     t0 = time.time()
+    frame = run_sweep(SWEEP, progress=None).raise_errors()
     rows = []
     worst = {}
-    for policy in ("round_robin", "load_aware", "jsq", "p2c"):
-        per_client = {1: [], 2: [], 3: []}
-        for seed in range(13):
-            clients = [ClientConfig(1, ConstantQPS(500), seed=seed),
-                       ClientConfig(2, ConstantQPS(200), seed=seed + 99),
-                       ClientConfig(3, ConstantQPS(200), seed=seed + 198)]
-            exp = Experiment(clients=clients,
-                             servers=(ServerSpec(0), ServerSpec(1)),
-                             app="xapian", duration=15.0, policy=policy,
-                             seed=seed)
-            sim = run(exp)
-            for c in (1, 2, 3):
-                per_client[c].append(sim.telemetry.client(c).p99)
+    for policy in POLICIES:
+        per_client = {c: [r.clients[str(c)]["p99"]
+                          for r in frame.ok_rows
+                          if r.params["policy"] == policy]
+                      for c in (1, 2, 3)}
         for c in (1, 2, 3):
             rows.append({"policy": policy, "client": c,
                          "p99_ms": f"{np.mean(per_client[c])*1e3:.3f}"})

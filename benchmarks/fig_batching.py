@@ -7,6 +7,10 @@ simulator and the wall-clock ``EngineRuntime`` driving
 ``BatchScheduler`` dynamics the real engine's scheduler follows) — and
 compare the p99-vs-QPS curves and their knees.
 
+Declared as one ``repro.sweep`` grid with the RUNTIME BACKEND as an
+axis (``runtime=sim,engine``): the executor builds the right runtime
+per point, so the sim-vs-engine A/B is just another swept dimension.
+
 The knee is the offered QPS at which p99 crosses ``KNEE_FACTOR`` x the
 low-load p99 (log-interpolated between sweep points).  The acceptance
 criterion is sim-predicted knees within 15% of the engine backend at
@@ -26,10 +30,9 @@ import time
 
 from benchmarks.common import emit
 from repro.core.profiles import TokenLengths
-from repro.core.runtime import EngineRuntime, VirtualClock, run_scenario
 from repro.scenarios import get
-from repro.scenarios.backends import build_stub_engines
 from repro.scenarios.canonical import default_batched_service
+from repro.sweep import Axis, PointCtx, Sweep, run_sweep
 
 KNEE_FACTOR = 3.0          # p99 crossing vs the lowest swept load
 MAX_BATCHES = (2, 4, 8)
@@ -49,20 +52,19 @@ def capacity_estimate(service, lengths, max_batch: int) -> float:
     return N_SERVERS / (decode_s + prefill_s)
 
 
-def run_point(backend: str, qps: float, max_batch: int,
-              duration: float, service, lengths):
-    sc = get("batched-serving", seed=SEED, duration=duration, qps=qps,
-             n_clients=N_CLIENTS, n_servers=N_SERVERS, max_batch=max_batch,
-             service=service, lengths=lengths)
-    if backend == "sim":
-        return run_scenario(sc, "sim").telemetry.overall()
-    clock = VirtualClock()
-    exp = sc.compile()
-    engines, factory = build_stub_engines(exp, clock, SEED)
-    rt = EngineRuntime.from_experiment(exp, engines, engine_factory=factory,
-                                       clock=clock, sleep=clock.sleep)
-    rt.run()
-    return rt.telemetry.overall()
+def point_qps(max_batch: int, frac: float) -> float:
+    service, lengths = default_batched_service(), TokenLengths()
+    return round(frac * capacity_estimate(service, lengths, max_batch), 1)
+
+
+def _point(ctx: PointCtx):
+    service, lengths = default_batched_service(), TokenLengths()
+    return get("batched-serving", seed=ctx.seed,
+               duration=ctx.params["duration"],
+               qps=point_qps(ctx.params["max_batch"], ctx.params["frac"]),
+               n_clients=N_CLIENTS, n_servers=N_SERVERS,
+               max_batch=ctx.params["max_batch"],
+               service=service, lengths=lengths)
 
 
 def knee_qps(points: list[tuple]) -> float:
@@ -79,28 +81,37 @@ def knee_qps(points: list[tuple]) -> float:
     return float("inf")
 
 
-def main() -> str:
-    quick = "--quick" in sys.argv[1:]
+def build_sweep(quick: bool) -> Sweep:
     duration = 8.0 if quick else 20.0
     fracs = ([0.4, 0.8, 1.0, 1.2] if quick
              else [0.3, 0.5, 0.7, 0.85, 0.95, 1.05, 1.15, 1.3])
-    service = default_batched_service()
-    lengths = TokenLengths()
+    return Sweep(name="fig_batching", factory=_point,
+                 axes=(Axis("max_batch", MAX_BATCHES),
+                       Axis("frac", tuple(fracs)),
+                       Axis("runtime", ("sim", "engine"))),
+                 fixed={"duration": duration}, reps=1,
+                 base_seed=SEED, seeder="fixed",
+                 metrics=("n", "p50", "p95", "p99"))
+
+
+def main() -> str:
+    quick = "--quick" in sys.argv[1:]
+    sweep = build_sweep(quick)
     t0 = time.time()
-    rows, ratios = [], {}
+    frame = run_sweep(sweep, progress=None).raise_errors()
+    rows, pts = [], {}
+    for r in frame.rows:
+        mb, backend = r.params["max_batch"], r.params["runtime"]
+        qps, m = point_qps(mb, r.params["frac"]), r.metrics
+        pts.setdefault((mb, backend), []).append((qps, m["p99"]))
+        rows.append({"max_batch": mb, "backend": backend,
+                     "offered_qps": qps, "n": m["n"],
+                     "p50_ms": m["p50"] * 1e3, "p95_ms": m["p95"] * 1e3,
+                     "p99_ms": m["p99"] * 1e3})
+    ratios = {}
     for mb in MAX_BATCHES:
-        cap = capacity_estimate(service, lengths, mb)
-        pts = {"sim": [], "engine": []}
-        for frac in fracs:
-            qps = round(frac * cap, 1)
-            for backend in ("sim", "engine"):
-                s = run_point(backend, qps, mb, duration, service, lengths)
-                pts[backend].append((qps, s.p99))
-                rows.append({"max_batch": mb, "backend": backend,
-                             "offered_qps": qps, "n": s.n,
-                             "p50_ms": s.p50 * 1e3, "p95_ms": s.p95 * 1e3,
-                             "p99_ms": s.p99 * 1e3})
-        k_sim, k_eng = knee_qps(pts["sim"]), knee_qps(pts["engine"])
+        cap = capacity_estimate(default_batched_service(), TokenLengths(), mb)
+        k_sim, k_eng = knee_qps(pts[(mb, "sim")]), knee_qps(pts[(mb, "engine")])
         ratios[mb] = k_sim / k_eng if k_eng not in (0.0, float("inf")) \
             else float("nan")
         print(f"max_batch={mb}: capacity~{cap:.0f} qps, "

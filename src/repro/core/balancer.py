@@ -20,6 +20,13 @@ class Balancer:
     Lifecycle: the simulator calls ``assign`` when a client connects and
     ``release`` when it finishes (or its connection attempt fails), so
     stateful policies can drop per-client bookkeeping under churn.
+
+    A request can reach ``route`` with no assignment — its client joined
+    while the fleet was empty, or its server failed and every re-home
+    attempt was refused.  That fallback goes through ``choose``, the
+    policy's own per-request pick; the old ``servers[0]`` fallback
+    silently hot-spotted the first alive server under exactly the churn
+    conditions a balancer exists for.
     """
 
     def assign(self, client, servers) -> Optional[object]:
@@ -28,8 +35,17 @@ class Balancer:
     def release(self, client_id: int) -> None:
         """Client departed — forget any per-client state.  No-op by default."""
 
+    def choose(self, req, servers):
+        """Policy choice for an unassigned request (least-loaded unless
+        the policy has a sharper criterion)."""
+        if not servers:
+            return None
+        return min(servers, key=lambda s: s.load())
+
     def route(self, req, servers, assigned):
-        return assigned if assigned is not None else (servers[0] if servers else None)
+        if assigned is not None:
+            return assigned
+        return self.choose(req, servers)
 
 
 class RoundRobin(Balancer):
@@ -39,6 +55,13 @@ class RoundRobin(Balancer):
         self._n = itertools.count()
 
     def assign(self, client, servers):
+        if not servers:
+            return None
+        return servers[next(self._n) % len(servers)]
+
+    def choose(self, req, servers):
+        """Unassigned requests keep rotating instead of pinning the
+        first alive server."""
         if not servers:
             return None
         return servers[next(self._n) % len(servers)]
@@ -74,9 +97,26 @@ class LoadAware(Balancer):
         if cur is not None:
             self.subscribed[sid] = max(0.0, cur - qps)
 
+    def choose(self, req, servers):
+        """Unassigned requests follow the least-subscribed criterion
+        (no subscription is booked — the client never connected), with
+        live queue load as the tie-break: a fresh fleet has every
+        subscription at zero, and without the tie-break min() would pin
+        the first server — the exact hot-spot this fallback replaces."""
+        if not servers:
+            return None
+        return min(servers, key=lambda s: (self.subscribed.get(s.server_id,
+                                                               0.0),
+                                           s.load()))
+
 
 class LeastConnections(Balancer):
     def assign(self, client, servers):
+        if not servers:
+            return None
+        return min(servers, key=lambda s: len(s.connected))
+
+    def choose(self, req, servers):
         if not servers:
             return None
         return min(servers, key=lambda s: len(s.connected))

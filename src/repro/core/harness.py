@@ -146,20 +146,37 @@ def run(exp: Experiment, rep: int = 0) -> Simulator:
     return sim
 
 
+def _repeated_point(exp: Experiment, ctx):
+    """Sweep factory for ``run_repeated``: replay the base experiment
+    under the derived per-repetition seed."""
+    return replace(exp, seed=ctx.seed)
+
+
 def run_repeated(exp: Experiment, reps: int = 13,
                  metric: Callable[[LatencyRecorder], float] = lambda r: r.overall().p99):
     """Paper methodology: 13 seeded repetitions -> (mean, 95% CI half-width).
 
-    Each repetition perturbs the experiment seed AND threads the
-    repetition index into every client's RNG stream — a client with an
-    explicit ``ClientConfig.seed`` still sees an independent arrival
-    process per repetition (previously all 13 reps replayed identical
-    arrivals, collapsing the confidence interval to zero width).
+    Now a thin shim over a one-point ``repro.sweep`` declaration with
+    the ``"run-repeated"`` seeder — bit-compatible with the historical
+    ``seed + 1000*(rep+1)`` derivation (which new sweeps should NOT
+    inherit: it collides across grid points; the sweep default
+    ``"spawn"`` seeder never does).  Each repetition perturbs the
+    experiment seed AND threads the repetition index into every
+    client's RNG stream, so explicitly-seeded clients still draw
+    independent arrival processes per repetition.
     """
-    vals = []
-    for rep in range(reps):
-        sim = run(replace(exp, seed=exp.seed + 1000 * (rep + 1)), rep=rep)
-        vals.append(metric(sim.recorder))
+    from functools import partial
+
+    from repro.sweep import Sweep, run_sweep
+    sweep = Sweep(name="run_repeated",
+                  factory=partial(_repeated_point, exp),
+                  reps=reps, base_seed=exp.seed, seeder="run-repeated",
+                  metrics=(("value", lambda rt: metric(rt.recorder)),))
+    # fail_fast: the old loop propagated the original exception at the
+    # first failing repetition — keep that contract
+    frame = run_sweep(sweep, executor="serial", progress=None,
+                      fail_fast=True)
+    vals = [row.metrics["value"] for row in frame.rows]
     return confidence95(vals), vals
 
 

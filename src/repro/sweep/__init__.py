@@ -1,0 +1,44 @@
+"""Declarative experiment sweeps — the TailBench++ grid layer.
+
+The paper's whole methodology is grids: every figure sweeps
+app x QPS x server-count x policy over 13 seeded repetitions.  This
+package makes that a first-class, declarative object instead of a
+hand-rolled nested loop per benchmark script:
+
+* ``repro.sweep.spec`` — the ``Sweep`` dataclass: axes over
+  ``Experiment``/``Scenario`` parameters (grid, zip, and explicit
+  list-of-points forms), repetition counts, metric selection, and
+  per-(point, rep) deterministic seed derivation via a
+  SeedSequence-style spawn (streams never collide, unlike the old
+  ``seed + 1000*(rep+1)`` arithmetic);
+* ``repro.sweep.executor`` — serial and ``ProcessPoolExecutor``
+  backends behind one ``run_sweep()`` interface, bit-identical results
+  regardless of worker count or scheduling order, with per-point
+  failure capture (a crashing point records an error row instead of
+  killing the sweep);
+* ``repro.sweep.results`` — the ``ResultFrame`` artifact: typed rows
+  (point params + metrics + optional telemetry series), exact
+  ``to_json``/``from_json`` round-trip, CSV emission, and Welch-t-test
+  compare helpers.
+
+Run named or file-declared sweeps from the command line::
+
+    PYTHONPATH=src python -m repro.sweep --list
+    PYTHONPATH=src python -m repro.sweep steady --axis qps=300,600,900 \
+        --axis n_servers=1,2 --reps 3 --executor process --workers 4
+    PYTHONPATH=src python -m repro.sweep --file my_sweep.json
+    PYTHONPATH=src python -m repro.sweep --smoke
+"""
+from __future__ import annotations
+
+from repro.sweep.executor import run_sweep
+from repro.sweep.results import ResultFrame, SweepRow, series_window
+from repro.sweep.spec import (Axis, PointCtx, SEEDERS, Sweep,
+                              experiment_factory, scenario_factory,
+                              spawn_seed)
+
+__all__ = [
+    "Axis", "PointCtx", "ResultFrame", "SEEDERS", "Sweep", "SweepRow",
+    "experiment_factory", "run_sweep", "scenario_factory", "series_window",
+    "spawn_seed",
+]

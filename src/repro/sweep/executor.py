@@ -1,0 +1,230 @@
+"""Sweep execution: serial and process-parallel behind one interface.
+
+``run_sweep(sweep)`` expands the spec into (point, repetition) tasks,
+executes each as an independent deterministic run, and assembles a
+``ResultFrame`` whose rows are ordered by (point_index, rep) — NOT by
+completion order — so the frame is bit-identical whether it ran
+serially, on 2 workers, or on 8 workers, under any OS scheduling.
+
+Every task is hermetic: it derives its own seeds from the spec (no
+shared RNG state), builds its own ``Experiment``/runtime, and extracts
+its metrics in-worker (simulators never cross process boundaries).  A
+task that raises records an error row — the sweep completes and reports
+the failure instead of dying with it.
+
+Backends:
+
+* ``"serial"`` — in-process loop (supports lambda factories/metrics);
+* ``"process"`` — ``concurrent.futures.ProcessPoolExecutor``; the
+  ``Sweep`` must pickle, i.e. factories and metric callables must be
+  module-level functions (or ``functools.partial`` of them).
+"""
+from __future__ import annotations
+
+import multiprocessing
+import sys
+from concurrent.futures import FIRST_COMPLETED, ProcessPoolExecutor, wait
+from typing import Callable, Optional
+
+from repro.sweep.results import ResultFrame, SweepRow
+from repro.sweep.spec import EXTRA_METRICS, PointCtx, SUMMARY_METRICS, Sweep
+
+
+# ---------------------------------------------------------------------------
+# One task = one (point, rep) run
+# ---------------------------------------------------------------------------
+def _build_runtime(sweep: Sweep, exp, ctx: PointCtx):
+    runtime = ctx.params.get("runtime", sweep.runtime)
+    if runtime == "sim":
+        from repro.core.runtime import SimulatorRuntime
+        rt = SimulatorRuntime(exp, rep=ctx.stream)
+        rt.run()
+        return rt
+    if runtime == "engine":
+        from repro.core.runtime import EngineRuntime, VirtualClock
+        from repro.scenarios.backends import build_stub_engines
+        clock = VirtualClock()
+        engines, factory = build_stub_engines(exp, clock, exp.seed)
+        rt = EngineRuntime.from_experiment(exp, engines,
+                                           engine_factory=factory,
+                                           rep=ctx.stream, clock=clock,
+                                           sleep=clock.sleep)
+        rt.run()
+        return rt
+    raise ValueError(f"unknown runtime: {runtime!r}")
+
+
+def _slo_frac(rt, slo) -> float:
+    """Fraction of recorded latencies above the SLO (NaN without one)."""
+    if slo is None:
+        return float("nan")
+    rec = rt.recorder
+    if rec.mode == "exact":
+        if not rec.all:
+            return float("nan")
+        return sum(1 for x in rec.all if x > slo) / len(rec.all)
+    # streaming mode: aggregate the per-interval violation fractions,
+    # weighted by interval request counts (reservoir-approximate)
+    num = den = 0.0
+    for f in rt.telemetry.frames():
+        if f.n and f.slo_violation_frac == f.slo_violation_frac:
+            num += f.slo_violation_frac * f.n
+            den += f.n
+    return num / den if den else float("nan")
+
+
+def _extract_metrics(sweep: Sweep, rt, exp) -> dict:
+    s = rt.telemetry.overall()
+    out: dict = {}
+    for m in sweep.metrics:
+        if not isinstance(m, str):          # ("name", callable) pair
+            name, fn = m
+            out[name] = fn(rt)
+        elif m in SUMMARY_METRICS:
+            out[m] = getattr(s, m)
+        elif m == "dropped":
+            out[m] = rt.dropped
+        elif m == "slo_frac":
+            out[m] = _slo_frac(rt, exp.slo)
+        else:
+            raise ValueError(f"unknown metric {m!r}; known: "
+                             f"{SUMMARY_METRICS + EXTRA_METRICS} or a "
+                             f"(name, callable) pair")
+    return out
+
+
+def _series_rows(rt, cid: Optional[int]) -> list:
+    key = -1 if cid is None else cid
+    return [{"cid": key, "t": t, "n": s.n, "mean": s.mean,
+             "p50": s.p50, "p95": s.p95, "p99": s.p99}
+            for t, s in rt.telemetry.series(cid).items()]
+
+
+def run_task(sweep: Sweep, index: int, params: dict, rep: int,
+             capture: bool = True) -> SweepRow:
+    """Execute one (point, rep) task; exceptions become error rows
+    (``capture=False`` lets them propagate for fail-fast callers)."""
+    seed, stream = sweep.seed_for(index, rep)
+    ctx = PointCtx(params=params, index=index, rep=rep, seed=seed,
+                   stream=stream)
+    try:
+        obj = sweep.factory(ctx)
+        exp = obj.compile() if hasattr(obj, "compile") else obj
+        rt = _build_runtime(sweep, exp, ctx)
+        metrics = _extract_metrics(sweep, rt, exp)
+        clients = None
+        if sweep.per_client:
+            clients = {str(cid): vars(rt.telemetry.client(cid))
+                       for cid in rt.telemetry.clients()}
+        series = None
+        if sweep.telemetry:
+            series = _series_rows(rt, None)
+            if sweep.per_client:
+                for cid in rt.telemetry.clients():
+                    series.extend(_series_rows(rt, cid))
+        return SweepRow(index=index, params=params, rep=rep,
+                        seed=getattr(exp, "seed", seed), stream=stream,
+                        metrics=metrics, clients=clients, series=series)
+    except Exception as e:  # noqa: BLE001 — failure capture is the contract
+        if not capture:
+            raise
+        return SweepRow(index=index, params=params, rep=rep, seed=seed,
+                        stream=stream, error=f"{type(e).__name__}: {e}")
+
+
+# ---------------------------------------------------------------------------
+# Executors
+# ---------------------------------------------------------------------------
+def _log(msg: str) -> None:
+    print(msg, file=sys.stderr, flush=True)
+
+
+def mp_context():
+    """Start-method for sweep workers.
+
+    The platform default (``fork`` on Linux) is the fast path: workers
+    inherit the parent's imports for free.  But forking after JAX/XLA
+    has started its thread pools is a documented deadlock, so once
+    ``jax`` is loaded in this process the workers come from a
+    ``forkserver`` instead — forked from a clean helper that never
+    inherited those threads (falling back to ``spawn`` where the
+    forkserver is unavailable).  Sweep results are start-method
+    independent either way; only startup cost differs."""
+    if "jax" not in sys.modules:
+        return multiprocessing.get_context()
+    for method in ("forkserver", "spawn"):
+        try:
+            return multiprocessing.get_context(method)
+        except ValueError:
+            continue
+    return multiprocessing.get_context()
+
+
+def run_sweep(sweep: Sweep, executor: str = "serial",
+              workers: Optional[int] = None,
+              progress: Optional[Callable[[str], None]] = _log,
+              fail_fast: bool = False) -> ResultFrame:
+    """Execute a ``Sweep`` and return its ``ResultFrame``.
+
+    ``executor="serial"`` runs in-process; ``"process"`` fans the tasks
+    out over a ``ProcessPoolExecutor`` with ``workers`` processes.  Rows
+    are assembled in (point, rep) declaration order either way, so the
+    two backends produce identical frames.  ``progress`` (default:
+    stderr) receives one line per completed task; pass ``None`` to
+    silence it.  ``fail_fast=True`` re-raises a task's ORIGINAL
+    exception at the first failure instead of recording an error row —
+    for shims like ``run_repeated`` whose callers expect the historical
+    propagation semantics.
+    """
+    tasks = sweep.tasks()
+    total = len(tasks)
+    rows: list = [None] * total
+
+    def note(done: int, row: SweepRow) -> None:
+        if progress is None:
+            return
+        status = "ok" if row.ok else f"ERROR ({row.error})"
+        progress(f"sweep[{sweep.name}] {done}/{total} "
+                 f"point={row.params} rep={row.rep}: {status}")
+
+    if executor == "serial":
+        for k, (i, params, rep) in enumerate(tasks):
+            rows[k] = run_task(sweep, i, params, rep,
+                               capture=not fail_fast)
+            note(k + 1, rows[k])
+    elif executor == "process":
+        with ProcessPoolExecutor(max_workers=workers,
+                                 mp_context=mp_context()) as pool:
+            futs = {pool.submit(run_task, sweep, i, params, rep,
+                                not fail_fast): k
+                    for k, (i, params, rep) in enumerate(tasks)}
+            done = 0
+            pending = set(futs)
+            while pending:
+                finished, pending = wait(pending,
+                                         return_when=FIRST_COMPLETED)
+                for fut in finished:
+                    k = futs[fut]
+                    i, params, rep = tasks[k]
+                    try:
+                        rows[k] = fut.result()
+                    except Exception as e:  # worker died, or a fail-fast
+                        # task re-raised its original exception
+                        if fail_fast:
+                            for p in pending:
+                                p.cancel()
+                            raise
+                        # record the death, don't kill the sweep
+                        seed, stream = sweep.seed_for(i, rep)
+                        rows[k] = SweepRow(index=i, params=params, rep=rep,
+                                           seed=seed, stream=stream,
+                                           error=f"worker: "
+                                                 f"{type(e).__name__}: {e}")
+                    done += 1
+                    note(done, rows[k])
+    else:
+        raise ValueError(f"unknown executor {executor!r} "
+                         f"(serial | process)")
+    return ResultFrame(name=sweep.name, spec={**sweep.describe(),
+                                              "executor": executor},
+                       rows=rows)

@@ -1,0 +1,231 @@
+"""ResultFrame: the sweep artifact — typed rows, round-trip, compare.
+
+One ``SweepRow`` per (point, repetition): the point's parameters, the
+derived seed/stream, the extracted metrics, and (optionally) per-client
+summaries and per-interval telemetry series.  ``ResultFrame`` holds the
+rows plus the sweep's spec metadata and provides:
+
+* ``aggregate(metric)`` — per-point mean and 95% CI across repetitions
+  (the paper's error bars, via ``confidence95``);
+* ``compare(other, metric)`` — Welch's t-test between two frames over
+  the filter-matching rows (the paper's Table-4 equivalence
+  methodology, reusable for any A/B sweep);
+* ``to_json``/``from_json`` — exact round-trip (floats survive
+  bit-for-bit through ``repr``-based JSON encoding, NaN included);
+* ``to_csv`` — flat per-row or aggregated CSV, the benchmark artifact
+  format the figure scripts and CI emit.
+"""
+from __future__ import annotations
+
+import csv
+import json
+import math
+import os
+from dataclasses import dataclass, field
+from typing import Optional
+
+from repro.core.stats import confidence95, welch_ttest
+
+
+@dataclass
+class SweepRow:
+    """One (point, repetition) outcome."""
+    index: int                          # point index in declaration order
+    params: dict
+    rep: int
+    seed: int                           # experiment seed actually used
+    stream: int                         # repetition RNG stream
+    metrics: dict = field(default_factory=dict)
+    clients: Optional[dict] = None      # cid(str) -> summary dict
+    series: Optional[list] = None       # per-interval rows (cid -1 = overall)
+    error: Optional[str] = None         # failure capture: row kept, run lost
+
+    @property
+    def ok(self) -> bool:
+        return self.error is None
+
+    def to_dict(self) -> dict:
+        d = {"index": self.index, "params": self.params, "rep": self.rep,
+             "seed": self.seed, "stream": self.stream,
+             "metrics": self.metrics}
+        if self.clients is not None:
+            d["clients"] = self.clients
+        if self.series is not None:
+            d["series"] = self.series
+        if self.error is not None:
+            d["error"] = self.error
+        return d
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "SweepRow":
+        return cls(index=d["index"], params=d["params"], rep=d["rep"],
+                   seed=d["seed"], stream=d["stream"],
+                   metrics=d.get("metrics", {}),
+                   clients=d.get("clients"), series=d.get("series"),
+                   error=d.get("error"))
+
+
+def series_window(series: list, metric: str, lo: int = 0,
+                  hi: Optional[int] = None, cid: int = -1) -> list:
+    """Per-interval ``metric`` values over ``[lo, hi)`` for one client
+    (``-1`` = overall) from a row's captured telemetry series — the same
+    windowing ``MetricsPipeline.window`` provides on a live run."""
+    return [r[metric] for r in (series or ())
+            if r["cid"] == cid and r["t"] >= lo
+            and (hi is None or r["t"] < hi)]
+
+
+@dataclass
+class ResultFrame:
+    """The result store for one executed sweep."""
+    name: str
+    spec: dict = field(default_factory=dict)   # Sweep.describe() metadata
+    rows: list = field(default_factory=list)   # SweepRow, (index, rep) order
+
+    # ---------------------------------------------------------- selection
+    @property
+    def ok_rows(self) -> list:
+        return [r for r in self.rows if r.ok]
+
+    @property
+    def errors(self) -> list:
+        return [r for r in self.rows if not r.ok]
+
+    def raise_errors(self) -> "ResultFrame":
+        """Raise if any row failed, carrying the captured error text —
+        for consumers (the figure scripts) that need every point and
+        would otherwise crash on an empty ``metrics`` dict with the real
+        failure message sitting unread in ``row.error``."""
+        if self.errors:
+            detail = "; ".join(f"point={r.params} rep={r.rep}: {r.error}"
+                               for r in self.errors[:5])
+            more = len(self.errors) - 5
+            if more > 0:
+                detail += f" (+{more} more)"
+            raise RuntimeError(f"sweep {self.name!r}: "
+                               f"{len(self.errors)} failed rows — {detail}")
+        return self
+
+    def point_rows(self, index: int) -> list:
+        return [r for r in self.rows if r.index == index]
+
+    def values(self, metric: str, **filters) -> list:
+        """Metric values (row order) over rows matching all ``filters``
+        (matched against point params)."""
+        return [r.metrics[metric] for r in self.ok_rows
+                if all(r.params.get(k) == v for k, v in filters.items())]
+
+    # --------------------------------------------------------- aggregation
+    def points(self) -> list[tuple]:
+        """Distinct (index, params) in declaration order."""
+        seen: dict[int, dict] = {}
+        for r in self.rows:
+            seen.setdefault(r.index, r.params)
+        return sorted(seen.items())
+
+    def aggregate(self, metric: str) -> list[dict]:
+        """Per-point mean + 95% CI half-width across repetitions.
+
+        Failed repetitions are excluded from the aggregate (their count
+        shows up as ``n_failed``); a fully-failed point aggregates to
+        NaN rather than vanishing."""
+        by_index: dict[int, list] = {}          # one pass, not O(points x rows)
+        for r in self.rows:
+            by_index.setdefault(r.index, []).append(r)
+        out = []
+        for index, params in self.points():
+            rows = by_index.get(index, [])
+            vals = [r.metrics[metric] for r in rows if r.ok]
+            mean, ci = confidence95(vals)
+            out.append({"index": index, "params": params, "metric": metric,
+                        "mean": mean, "ci95": ci, "n_reps": len(vals),
+                        "n_failed": sum(1 for r in rows if not r.ok),
+                        "vals": vals})
+        return out
+
+    def compare(self, other: "ResultFrame", metric: str,
+                **filters) -> "WelchCompare":
+        """Welch's t-test of ``metric`` between this frame and another,
+        POOLING every row that matches the param ``filters`` on each
+        side — pin the filters to one grid point for a per-point test
+        (unfiltered, between-point variance enters the pooled samples).
+        Retained H0 (|t| < 2, p > 0.05) means the two sides are
+        statistically indistinguishable, the paper's equivalence
+        criterion."""
+        a = self.values(metric, **filters)
+        b = other.values(metric, **filters)
+        w = welch_ttest(a, b)
+        return WelchCompare(metric=metric, t_stat=w.t_stat,
+                            p_value=w.p_value, n_a=len(a), n_b=len(b),
+                            retained=bool(abs(w.t_stat) < 2
+                                          and w.p_value > 0.05)
+                            if not math.isnan(w.t_stat) else False)
+
+    # --------------------------------------------------------- round-trip
+    def to_dict(self) -> dict:
+        return {"name": self.name, "spec": self.spec,
+                "rows": [r.to_dict() for r in self.rows]}
+
+    def to_json(self, path: Optional[str] = None, indent: int = 1) -> str:
+        """Serialize (and optionally write) the frame.  Python's JSON
+        encoder emits ``repr``-exact floats (and NaN/Infinity literals),
+        so ``from_json(to_json(frame))`` reproduces every value
+        bit-for-bit."""
+        text = json.dumps(self.to_dict(), indent=indent)
+        if path is not None:
+            os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+            with open(path, "w") as f:
+                f.write(text)
+        return text
+
+    @classmethod
+    def from_json(cls, text_or_path: str) -> "ResultFrame":
+        if "\n" not in text_or_path and os.path.exists(text_or_path):
+            with open(text_or_path) as f:
+                text = f.read()
+        else:
+            text = text_or_path
+        d = json.loads(text)
+        return cls(name=d["name"], spec=d.get("spec", {}),
+                   rows=[SweepRow.from_dict(r) for r in d.get("rows", [])])
+
+    # --------------------------------------------------------------- CSV
+    def to_csv(self, path: str, aggregated: Optional[str] = None) -> str:
+        """Write the frame as CSV.  Default: one row per (point, rep)
+        with params and metrics flattened.  ``aggregated=<metric>``
+        writes the per-point mean/ci95 table for that metric instead."""
+        if aggregated is not None:
+            rows = [{**a["params"], "metric": aggregated, "mean": a["mean"],
+                     "ci95": a["ci95"], "n_reps": a["n_reps"],
+                     "n_failed": a["n_failed"]}
+                    for a in self.aggregate(aggregated)]
+        else:
+            rows = []
+            for r in self.rows:
+                rows.append({**r.params, "rep": r.rep, "seed": r.seed,
+                             **r.metrics,
+                             "error": r.error if r.error else ""})
+        os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+        cols: list = []
+        for r in rows:
+            for c in r:
+                if c not in cols:
+                    cols.append(c)
+        # csv.writer, not ','.join: error rows carry free-form exception
+        # text that needs real quoting
+        with open(path, "w", newline="") as f:
+            w = csv.writer(f)
+            w.writerow(cols)
+            for r in rows:
+                w.writerow([r.get(c, "") for c in cols])
+        return path
+
+
+@dataclass(frozen=True)
+class WelchCompare:
+    metric: str
+    t_stat: float
+    p_value: float
+    n_a: int
+    n_b: int
+    retained: bool

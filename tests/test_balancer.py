@@ -1,0 +1,88 @@
+"""Balancer routing: the unassigned-request fallback goes through the
+policy's own choice, never a silent servers[0] hot-spot."""
+from dataclasses import dataclass, field
+
+from repro.core.balancer import (Balancer, LeastConnections, LoadAware,
+                                 RoundRobin)
+from repro.core.client import ClientConfig, ConstantQPS
+from repro.core.harness import Experiment, ServerSpec, run
+from repro.core.scenario import Injection
+
+
+@dataclass
+class FakeServer:
+    server_id: int
+    queued: int = 0
+    connected: set = field(default_factory=set)
+
+    def load(self) -> int:
+        return self.queued
+
+
+def test_base_fallback_picks_least_loaded():
+    servers = [FakeServer(0, queued=5), FakeServer(1, queued=1),
+               FakeServer(2, queued=3)]
+    b = Balancer()
+    assert b.route(None, servers, None).server_id == 1
+    assert b.route(None, [], None) is None
+    # an existing assignment is still honored verbatim
+    assert b.route(None, servers, servers[0]).server_id == 0
+
+
+def test_round_robin_fallback_rotates():
+    servers = [FakeServer(i) for i in range(3)]
+    b = RoundRobin()
+    picks = [b.route(None, servers, None).server_id for _ in range(6)]
+    assert picks == [0, 1, 2, 0, 1, 2]          # not [0, 0, 0, ...]
+
+
+def test_load_aware_fallback_follows_subscriptions():
+    servers = [FakeServer(0), FakeServer(1)]
+    b = LoadAware()
+    b.subscribed = {0: 500.0, 1: 100.0}
+    assert b.route(None, servers, None).server_id == 1
+
+
+def test_load_aware_fallback_fresh_fleet_uses_live_load():
+    """A fleet with no subscriptions (every server at 0.0) must not
+    degenerate to min()'s first-element pick — live queue load breaks
+    the tie, so the fallback cannot re-create the servers[0] hot-spot."""
+    servers = [FakeServer(0, queued=7), FakeServer(1, queued=2),
+               FakeServer(2, queued=4)]
+    b = LoadAware()
+    assert b.route(None, servers, None).server_id == 1
+    # subscriptions, once present, dominate the live load: server 1 is
+    # now the least loaded but carries 300 QPS of subscribed rate
+    b.subscribed = {1: 300.0}
+    assert b.route(None, servers, None).server_id == 2
+
+
+def test_least_connections_fallback():
+    servers = [FakeServer(0, connected={1, 2}), FakeServer(1, connected={3})]
+    b = LeastConnections()
+    assert b.route(None, servers, None).server_id == 1
+
+
+def test_unassigned_client_spreads_over_late_joining_fleet():
+    """Churn-storm regression: the fleet a client knew dies and a fresh
+    one joins while the client is unassigned.  Its requests must spread
+    through the policy's choice — the old fallback pinned ALL of them on
+    the first alive server."""
+    exp = Experiment(
+        clients=[ClientConfig(0, ConstantQPS(300), seed=3)],
+        servers=(ServerSpec(0),
+                 ServerSpec(1, join_at=4.0),
+                 ServerSpec(2, join_at=4.0),
+                 ServerSpec(3, join_at=4.0)),
+        app="masstree", duration=12.0, policy="round_robin", seed=3,
+        injections=(Injection(2.0, "server_fail", {"server_id": 0}),))
+    sim = run(exp)
+    served = {sid: sim.servers[sid].total_served for sid in (1, 2, 3)}
+    total = sum(served.values())
+    assert total > 0
+    # every late joiner serves a substantial share (round-robin spreads
+    # ~evenly; the servers[0] hot-spot gave servers 2 and 3 zero)
+    for sid, n in served.items():
+        assert n > 0.2 * total, (sid, served)
+    # requests emitted in the empty-fleet window [2, 4) are dropped
+    assert sim.dropped > 0
