@@ -1,0 +1,35 @@
+"""Shared benchmark-record plumbing.
+
+Every bench follows the same convention: a FULL run writes the
+committed record at the repo root (``BENCH_<name>.json`` — the numbers
+the README/acceptance cite), while a ``--smoke`` run writes a
+gitignored sibling (``BENCH_<name>.smoke.json``) that CI uploads as a
+workflow artifact — a CI-scale run must never clobber the committed
+full-scale record.  This module is that convention in one place
+(``bench_simulator``/``bench_sweep``/``bench_vector`` all write
+through it).
+"""
+from __future__ import annotations
+
+import json
+import os
+
+REPO = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+
+
+def record_paths(name: str) -> tuple[str, str]:
+    """-> (committed full-run path, gitignored smoke path)."""
+    return (os.path.join(REPO, f"BENCH_{name}.json"),
+            os.path.join(REPO, f"BENCH_{name}.smoke.json"))
+
+
+def write_record(name: str, payload: dict, smoke: bool,
+                 indent: int = 1) -> str:
+    """Write the record to the path the run class owns; -> the path."""
+    full, smoke_path = record_paths(name)
+    path = smoke_path if smoke else full
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=indent)
+        f.write("\n")
+    print(f"wrote {path}")
+    return path

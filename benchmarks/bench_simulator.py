@@ -46,10 +46,10 @@ import sys
 import time
 
 REPO = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
-OUT = os.path.join(REPO, "BENCH_simulator.json")
-OUT_SMOKE = os.path.join(REPO, "BENCH_simulator.smoke.json")
 if REPO not in sys.path:          # `import benchmarks...` from a subprocess
     sys.path.insert(0, REPO)
+
+from benchmarks._record import write_record  # noqa: E402
 
 DURATION = 90.0           # sim horizon (virtual seconds)
 TARGET_SPAN = 55.0        # virtual seconds the offered load is spread over
@@ -266,13 +266,7 @@ def main(argv: list[str]) -> int:
                        "batched_rel_floor": BATCHED_REL_FLOOR},
         "equivalence_check": equiv,
     }
-    # smoke runs write a sibling JSON (CI uploads it as a workflow
-    # artifact) — never the root record, whose full-scale rows back the
-    # README/acceptance numbers and must not be clobbered by a CI-scale run
-    path = OUT_SMOKE if smoke else OUT
-    with open(path, "w") as f:
-        json.dump(out, f, indent=1)
-    print(f"wrote {path}")
+    write_record("simulator", out, smoke)
     print(json.dumps(out["acceptance"], indent=1))
     print(f"speedup vs seed engine: {speedup}")
     if check is not None:

@@ -42,11 +42,12 @@ import sys
 import time
 
 REPO = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
-OUT = os.path.join(REPO, "BENCH_sweep.json")
-OUT_SMOKE = os.path.join(REPO, "BENCH_sweep.smoke.json")
 
 sys.path.insert(0, os.path.join(REPO, "src"))
+if REPO not in sys.path:
+    sys.path.insert(0, REPO)
 
+from benchmarks._record import write_record  # noqa: E402
 from repro.sweep import Axis, Sweep, run_sweep, scenario_factory  # noqa: E402
 
 
@@ -170,11 +171,7 @@ def main(argv=None) -> int:
                      "scheduler actually provides)"),
         },
     }
-    path = OUT_SMOKE if args.smoke else OUT
-    with open(path, "w") as f:
-        json.dump(out, f, indent=1)
-        f.write("\n")
-    print(f"wrote {path}")
+    write_record("sweep", out, args.smoke)
     print(json.dumps({k: out[k] for k in ("cpu_count", "workers", "speedup",
                                           "fraction_of_achievable",
                                           "rows_bit_identical")}))

@@ -27,6 +27,14 @@ class QPSSchedule:
     def rate(self, t: float) -> float:
         raise NotImplementedError
 
+    def rate_array(self, ts) -> np.ndarray:
+        """Vectorized ``rate`` over an array of times — the same law
+        evaluated as one array op, so the vector runtime can lay a whole
+        sweep grid's arrival rates out structure-of-arrays.  Subclasses
+        override with closed-form array math; this fallback loops."""
+        return np.asarray([self.rate(float(t)) for t in np.asarray(ts)],
+                          float)
+
     def next_change(self, t: float) -> Optional[float]:
         """Earliest time > t at which the rate may change.
 
@@ -44,6 +52,9 @@ class ConstantQPS(QPSSchedule):
 
     def rate(self, t: float) -> float:
         return self.qps
+
+    def rate_array(self, ts) -> np.ndarray:
+        return np.full(np.shape(ts), float(self.qps))
 
     def next_change(self, t: float) -> float:
         return math.inf
@@ -68,6 +79,12 @@ class PiecewiseQPS(QPSSchedule):
         i = bisect_right(self._ts, t) - 1
         return self._qs[i] if i >= 0 else 0.0
 
+    def rate_array(self, ts) -> np.ndarray:
+        idx = np.searchsorted(self._ts, np.asarray(ts, float),
+                              side="right") - 1
+        qs = np.concatenate([[0.0], self._qs])      # idx -1 -> rate 0
+        return qs[idx + 1]
+
     def next_change(self, t: float) -> float:
         i = bisect_right(self._ts, t)
         return self._ts[i] if i < len(self._ts) else math.inf
@@ -84,6 +101,11 @@ class DiurnalQPS(QPSSchedule):
     def rate(self, t: float) -> float:
         return max(0.0, self.base + self.amplitude
                    * math.sin(2 * math.pi * (t + self.phase) / self.period))
+
+    def rate_array(self, ts) -> np.ndarray:
+        ts = np.asarray(ts, float)
+        return np.maximum(0.0, self.base + self.amplitude * np.sin(
+            2 * np.pi * (ts + self.phase) / self.period))
 
     def next_change(self, t: float) -> Optional[float]:
         """When ``amplitude >= base`` the clipped sinusoid bottoms out at
@@ -138,6 +160,14 @@ class TraceQPS(QPSSchedule):
             return float("nan")
         i = min(int(t / self.dt), len(self.trace) - 1)
         return float(self.trace[max(i, 0)])
+
+    def rate_array(self, ts) -> np.ndarray:
+        ts = np.asarray(ts, float)
+        if len(self.trace) == 0:
+            return np.full(ts.shape, float("nan"))
+        idx = np.clip((ts / self.dt).astype(np.int64), 0,
+                      len(self.trace) - 1)
+        return np.asarray(self.trace, float)[idx]
 
     def next_change(self, t: float) -> float:
         """Start time of the next cell whose rate differs from rate(t) —

@@ -43,6 +43,11 @@ from typing import Callable, Optional
 import numpy as np
 
 
+def _phi(x: float) -> float:
+    """Standard normal CDF."""
+    return 0.5 * (1.0 + math.erf(x / math.sqrt(2.0)))
+
+
 @dataclass(frozen=True)
 class LogNormalProfile:
     """Median service time + heavy right tail (sigma in log space)."""
@@ -60,6 +65,19 @@ class LogNormalProfile:
         x = self.median * np.exp(self.sigma * rng.standard_normal(n))
         return np.minimum(x, self.median * self.max_factor)
 
+    def moments(self) -> tuple[float, float]:
+        """Exact (mean, variance) of the truncated law ``min(X, M)`` —
+        closed form via the normal CDF, no Monte Carlo.  The vector
+        runtime feeds these into its CLT per-slot work aggregation."""
+        m, s, M = self.median, self.sigma, self.median * self.max_factor
+        if s == 0.0:
+            return min(m, M), 0.0
+        a = math.log(M / m) / s
+        e1 = m * math.exp(s * s / 2.0) * _phi(a - s) + M * (1.0 - _phi(a))
+        e2 = (m * m * math.exp(2.0 * s * s) * _phi(a - 2.0 * s)
+              + M * M * (1.0 - _phi(a)))
+        return e1, max(e2 - e1 * e1, 0.0)
+
     @property
     def mean(self) -> float:
         return self.median * math.exp(self.sigma ** 2 / 2)
@@ -75,6 +93,9 @@ class FixedProfile:
 
     def sample_batch(self, rng, n: int) -> np.ndarray:
         return np.full(n, self.value)
+
+    def moments(self) -> tuple[float, float]:
+        return float(self.value), 0.0
 
     @property
     def mean(self) -> float:
@@ -135,6 +156,50 @@ class TokenLengths:
         return (max(1, min(int(p), self.prompt_max)),
                 max(1, min(int(n), self.new_max)))
 
+    def sample_batch(self, rng: np.random.Generator,
+                     n: int) -> tuple[np.ndarray, np.ndarray]:
+        """Vectorized size draws: same clipped-integer law as ``sample``
+        (``max(1, min(int(x), max))`` == clip of the floored draw)."""
+        z = rng.standard_normal((2, n))
+        p = self.prompt_median * np.exp(self.prompt_sigma * z[0])
+        m = self.new_median * np.exp(self.new_sigma * z[1])
+        return (np.clip(p.astype(np.int64), 1, self.prompt_max),
+                np.clip(m.astype(np.int64), 1, self.new_max))
+
+    @staticmethod
+    def int_pmf(median: float, sigma: float,
+                vmax: int) -> tuple[np.ndarray, np.ndarray]:
+        """(support [1..vmax], pmf) of ``max(1, min(int(X), vmax))``
+        for log-normal X, from CDF differences (``vmax`` <= a few
+        thousand, evaluated once per compile).  ``sigma == 0`` is a
+        point mass — the log-argument division is never taken."""
+        ks = np.arange(1, vmax + 1, dtype=float)
+        pmf = np.zeros(vmax)
+        if sigma == 0.0:
+            pmf[max(1, min(int(median), vmax)) - 1] = 1.0
+            return ks, pmf
+        # P(result <= k) = P(X < k+1) for k < vmax, 1 at vmax
+        upper = np.array([_phi(math.log((k + 1.0) / median) / sigma)
+                          for k in ks[:-1]] + [1.0])
+        return ks, np.diff(np.concatenate([[0.0], upper]))
+
+    @staticmethod
+    def _int_moments(median: float, sigma: float,
+                     vmax: int) -> tuple[float, float]:
+        """Exact (mean, var) of the clipped integer law."""
+        ks, pmf = TokenLengths.int_pmf(median, sigma, vmax)
+        mean = float(pmf @ ks)
+        return mean, max(float(pmf @ (ks * ks)) - mean * mean, 0.0)
+
+    def moments(self) -> tuple[tuple[float, float], tuple[float, float]]:
+        """((prompt mean, var), (new-token mean, var)) of the clipped
+        integer laws — what the vector runtime's fluid token backlog
+        uses."""
+        return (self._int_moments(self.prompt_median, self.prompt_sigma,
+                                  self.prompt_max),
+                self._int_moments(self.new_median, self.new_sigma,
+                                  self.new_max))
+
     @property
     def mean_new_tokens(self) -> float:
         return self.new_median * math.exp(self.new_sigma ** 2 / 2)
@@ -171,6 +236,9 @@ class ScalarService:
 
     def sample_batch(self, rng, n: int):
         return self.profile.sample_batch(rng, n)
+
+    def moments(self) -> tuple[float, float]:
+        return self.profile.moments()
 
     @property
     def mean(self) -> float:
@@ -209,6 +277,17 @@ class BatchedService:
     def prefill_time(self, prompt_tokens: int) -> float:
         return max(self.t_prefill_per_token * max(prompt_tokens, 1),
                    self.t_memory)
+
+    def step_time_array(self, batch):
+        """``step_time`` as an array op — the roofline step law the
+        vector runtime applies per time slot."""
+        return np.maximum(self.t_compute_per_seq * np.maximum(batch, 1),
+                          self.t_memory)
+
+    def prefill_time_array(self, prompt_tokens):
+        return np.maximum(
+            self.t_prefill_per_token * np.maximum(prompt_tokens, 1),
+            self.t_memory)
 
     @property
     def ridge_batch(self) -> float:

@@ -514,12 +514,17 @@ def run_scenario(scenario, backend: str = "sim", *, rep: int = 0,
     """Compile a ``Scenario`` and execute it on the chosen backend.
 
     ``backend="sim"`` runs the deterministic virtual-time simulator;
-    ``backend="engine"`` drives the supplied engines wall-clock.  Returns
-    the finished ``Runtime`` (telemetry under ``.telemetry``).
+    ``backend="engine"`` drives the supplied engines wall-clock;
+    ``backend="vector"`` runs the batched array backend (statistically
+    equivalent to ``sim``, not bit-identical — see ``repro.vector``).
+    Returns the finished ``Runtime`` (telemetry under ``.telemetry``).
     """
     exp = scenario.compile()
     if backend == "sim":
         rt: Runtime = SimulatorRuntime(exp, rep=rep)
+    elif backend == "vector":
+        from repro.vector import VectorRuntime
+        rt = VectorRuntime(exp, rep=rep)
     elif backend == "engine":
         if engines is None:
             raise ValueError("backend='engine' needs engines=")

@@ -243,23 +243,66 @@ class StreamingStat:
 
     def summary(self) -> "Summary":
         if self.n == 0:
-            return Summary(0, *(float("nan"),) * 4)
+            return Summary.empty()
         mean = self.total / self.n
         if self.p2 is not None and self.n > self.res.k:
             return Summary(self.n, mean, self.p2[0].value(),
                            self.p2[1].value(), self.p2[2].value())
         xs = np.asarray(self.res.data, float)
-        p50, p95, p99 = (float(np.percentile(xs, q)) for q in (50, 95, 99))
-        return Summary(self.n, mean, p50, p95, p99)
+        p50, p95, p99 = np.percentile(xs, (50, 95, 99))
+        return Summary(self.n, mean, float(p50), float(p95), float(p99))
 
 
 # ---------------------------------------------------------------------------
 # Latency recorder
 # ---------------------------------------------------------------------------
+def _as_float_array(xs) -> np.ndarray:
+    """Float ndarray view of a sample collection.  ndarrays (and lists)
+    convert directly; only opaque iterables pay the materializing copy."""
+    if not isinstance(xs, (np.ndarray, list, tuple)):
+        xs = list(xs)
+    return np.asarray(xs, float)
+
+
 def pctl(xs, q: float) -> float:
     if len(xs) == 0:
         return float("nan")
-    return float(np.percentile(np.asarray(xs, float), q))
+    return float(np.percentile(_as_float_array(xs), q))
+
+
+def quantiles_partition(xs, qs) -> np.ndarray:
+    """``np.percentile``-style linear-interpolation quantiles via ONE
+    ``np.partition`` pass: partially sorts only the floor/ceil order
+    statistics of every requested quantile — O(n) instead of the full
+    O(n log n) sort, and one pass for all quantiles.  This is the
+    vector-runtime extraction path (one call per grid cell)."""
+    xs = np.asarray(xs, float)
+    qs = np.asarray(qs, float)
+    n = xs.size
+    if n == 0:
+        return np.full(qs.shape, float("nan"))
+    pos = qs / 100.0 * (n - 1)
+    lo = np.floor(pos).astype(np.intp)
+    hi = np.ceil(pos).astype(np.intp)
+    part = np.partition(xs, np.unique(np.concatenate([lo, hi])))
+    t = pos - lo
+    a, b = part[lo], part[hi]
+    # numpy's lerp: anchor on the nearer endpoint for t >= 0.5
+    out = a + (b - a) * t
+    flip = t >= 0.5
+    out[flip] = b[flip] - (b[flip] - a[flip]) * (1.0 - t[flip])
+    return out
+
+
+def slo_violation_frac(xs, slo: Optional[float]) -> float:
+    """Fraction of latencies above ``slo``.  The empty contract is the
+    same as ``Summary.of``/``pctl``: no SLO or no samples -> NaN (one
+    code path — ``IntervalFrame`` math must not special-case emptiness
+    on its own)."""
+    if slo is None or len(xs) == 0:
+        return float("nan")
+    xs = _as_float_array(xs)
+    return float(np.count_nonzero(xs > slo)) / xs.size
 
 
 @dataclass
@@ -271,12 +314,20 @@ class Summary:
     p99: float
 
     @classmethod
+    def empty(cls) -> "Summary":
+        """The one empty-input summary every code path shares."""
+        return cls(0, *(float("nan"),) * 4)
+
+    @classmethod
     def of(cls, xs) -> "Summary":
-        xs = np.asarray(list(xs), float)
-        if len(xs) == 0:
-            return cls(0, *(float("nan"),) * 4)
-        return cls(len(xs), float(xs.mean()), *(float(np.percentile(xs, q))
-                                                for q in (50, 95, 99)))
+        xs = _as_float_array(xs)
+        if xs.size == 0:
+            return cls.empty()
+        # all three quantiles in one vectorized call — this sits on the
+        # per-interval hot path of every figure sweep
+        p50, p95, p99 = np.percentile(xs, (50, 95, 99))
+        return cls(int(xs.size), float(xs.mean()),
+                   float(p50), float(p95), float(p99))
 
 
 class LatencyRecorder:
@@ -441,6 +492,20 @@ class MetricsPipeline:
         self._gauges: dict[int, dict[int, tuple]] = {}
         self._busy_time: dict[int, float] = {}      # last busy_time reading
         self._tokens: dict[int, float] = {}         # last tokens_done reading
+        # memoization: frames()/series()/window() rebuild the full
+        # interval aggregation; windowed consumers (fig6/7-style sweeps)
+        # call them once per window.  Caches are keyed on a revision —
+        # recorded-sample count plus a gauge version — so any record()
+        # or sample_servers() invalidates them without touching the
+        # recorder's hot path (counts are O(1) reads, not write hooks).
+        self._gauge_ver = 0
+        self._series_cache: dict = {}               # cid -> (rev, series)
+        self._frames_cache: Optional[tuple] = None  # (rev, frames)
+
+    def _rev(self) -> tuple:
+        rec = self.recorder
+        n = len(rec.all) if rec.mode == "exact" else rec._all.n
+        return n, self._gauge_ver
 
     # ---- runtime-facing ----------------------------------------------------
     def sample_servers(self, t: float, servers) -> None:
@@ -488,6 +553,7 @@ class MetricsPipeline:
                 self._tokens[s.server_id] = toks
             snap[s.server_id] = (util, max(s.load() - busy, 0), occ, rate)
         self._gauges[ivl] = snap
+        self._gauge_ver += 1
 
     # ---- latency accessors (bit-compatible with the recorder) --------------
     def overall(self) -> Summary:
@@ -500,8 +566,15 @@ class MetricsPipeline:
         return self.recorder.clients()
 
     def series(self, cid: Optional[int] = None) -> dict:
-        """Per-interval latency summaries (delegates to the recorder)."""
-        return self.recorder.intervals(cid)
+        """Per-interval latency summaries (delegates to the recorder;
+        memoized until the next recorded sample)."""
+        rev = self._rev()[0]
+        hit = self._series_cache.get(cid)
+        if hit is not None and hit[0] == rev:
+            return hit[1]
+        out = self.recorder.intervals(cid)
+        self._series_cache[cid] = (rev, out)
+        return out
 
     def window(self, metric: str, lo: int = 0, hi: Optional[int] = None,
                cid: Optional[int] = None) -> list:
@@ -523,6 +596,9 @@ class MetricsPipeline:
         return out
 
     def frames(self) -> list[IntervalFrame]:
+        rev = self._rev()
+        if self._frames_cache is not None and self._frames_cache[0] == rev:
+            return self._frames_cache[1]
         samples = self._interval_samples()
         series = self.series()
         ivls = sorted(set(series) | set(self._gauges))
@@ -530,10 +606,7 @@ class MetricsPipeline:
         for ivl in ivls:
             s = series.get(ivl)
             xs = samples.get(ivl, [])
-            if self.slo is not None and xs:
-                viol = sum(1 for x in xs if x > self.slo) / len(xs)
-            else:
-                viol = float("nan")
+            viol = slo_violation_frac(xs, self.slo)
             gauges = self._gauges.get(ivl, {})
             util = {sid: g[0] for sid, g in gauges.items()}
             qdepth = {sid: g[1] for sid, g in gauges.items()}
@@ -541,12 +614,13 @@ class MetricsPipeline:
             tokens = {sid: g[3] for sid, g in gauges.items()
                       if g[3] is not None}
             if s is None:
-                s = Summary(0, *(float("nan"),) * 4)
+                s = Summary.empty()
             frames.append(IntervalFrame(
                 t=ivl, n=s.n, qps=s.n / self.interval, mean=s.mean,
                 p50=s.p50, p95=s.p95, p99=s.p99, slo_violation_frac=viol,
                 util=util, qdepth=qdepth, occupancy=occupancy,
                 tokens_per_sec=tokens))
+        self._frames_cache = (rev, frames)
         return frames
 
     def to_rows(self) -> list[dict]:

@@ -9,7 +9,9 @@
 ``--backend sim`` (default) runs virtual-time; ``--backend engine``
 drives the wall-clock runtime — against ``StubEngine`` replicas in
 accelerated virtual time (``--stub``, the default) or against real JAX
-``InferenceEngine`` replicas (``--arch ...``).
+``InferenceEngine`` replicas (``--arch ...``); ``--backend vector``
+runs the batched array backend (statistically equivalent fast lane —
+exact mode is ``sim``).
 """
 from __future__ import annotations
 
@@ -57,7 +59,8 @@ def main(argv=None) -> int:
                                  description=__doc__)
     ap.add_argument("name", nargs="?", help="scenario name (see --list)")
     ap.add_argument("--list", action="store_true")
-    ap.add_argument("--backend", default="sim", choices=["sim", "engine"])
+    ap.add_argument("--backend", default="sim",
+                    choices=["sim", "engine", "vector"])
     ap.add_argument("--duration", type=float, default=None)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--app", default=None)
@@ -94,8 +97,8 @@ def main(argv=None) -> int:
                                    ("slo", args.slo)) if v is not None}
     sc = scenarios.get(args.name, seed=args.seed, **overrides)
 
-    if args.backend == "sim":
-        rt = run_scenario(sc, "sim")
+    if args.backend in ("sim", "vector"):
+        rt = run_scenario(sc, args.backend)
     else:
         from repro.scenarios.backends import (build_stub_engines,
                                               run_experiment_on_real_engines)

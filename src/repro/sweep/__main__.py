@@ -7,6 +7,8 @@
         --executor process --workers 4 --telemetry
     PYTHONPATH=src python -m repro.sweep batched-serving \
         --axis max_batch=2,4,8 --axis runtime=sim,engine --reps 1
+    PYTHONPATH=src python -m repro.sweep steady --axis qps=300,600,900 \
+        --runtime vector --reps 13          # whole grid as one array program
     PYTHONPATH=src python -m repro.sweep --file my_sweep.json
     PYTHONPATH=src python -m repro.sweep --smoke --executor process
 
@@ -147,8 +149,11 @@ def main(argv=None) -> int:
                     help="capture per-interval series per repetition")
     ap.add_argument("--per-client", action="store_true",
                     help="capture per-client summaries per repetition")
-    ap.add_argument("--runtime", default="sim", choices=["sim", "engine"],
-                    help="default runtime backend (axis 'runtime' overrides)")
+    ap.add_argument("--runtime", default="sim",
+                    choices=["sim", "engine", "vector"],
+                    help="default runtime backend (axis 'runtime' overrides; "
+                         "'vector' batches the whole grid into one array "
+                         "program)")
     ap.add_argument("--executor", default="serial",
                     choices=["serial", "process"])
     ap.add_argument("--workers", type=int, default=None)

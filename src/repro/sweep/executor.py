@@ -18,6 +18,11 @@ Backends:
 * ``"process"`` — ``concurrent.futures.ProcessPoolExecutor``; the
   ``Sweep`` must pickle, i.e. factories and metric callables must be
   module-level functions (or ``functools.partial`` of them).
+
+Tasks whose runtime is ``"vector"`` bypass both: they are batched into
+ONE in-process array program (``run_vector_tasks``) — the grid is the
+unit of execution there, and the resulting rows are bit-identical to
+per-task runs under any executor/worker count by construction.
 """
 from __future__ import annotations
 
@@ -51,6 +56,14 @@ def _build_runtime(sweep: Sweep, exp, ctx: PointCtx):
                                            sleep=clock.sleep)
         rt.run()
         return rt
+    if runtime == "vector":
+        # single-cell fallback (the grid path in run_sweep batches all
+        # vector tasks into one array program; per-cell RNG derivation
+        # makes the two paths bit-identical)
+        from repro.vector import VectorRuntime
+        rt = VectorRuntime(exp, rep=ctx.stream)
+        rt.run()
+        return rt
     raise ValueError(f"unknown runtime: {runtime!r}")
 
 
@@ -59,10 +72,11 @@ def _slo_frac(rt, slo) -> float:
     if slo is None:
         return float("nan")
     rec = rt.recorder
+    if rec is None:                 # vector backend: sampled latencies
+        return rt.telemetry.slo_frac()
     if rec.mode == "exact":
-        if not rec.all:
-            return float("nan")
-        return sum(1 for x in rec.all if x > slo) / len(rec.all)
+        from repro.core.stats import slo_violation_frac
+        return slo_violation_frac(rec.all, slo)
     # streaming mode: aggregate the per-interval violation fractions,
     # weighted by interval request counts (reservoir-approximate)
     num = den = 0.0
@@ -133,6 +147,84 @@ def run_task(sweep: Sweep, index: int, params: dict, rep: int,
 
 
 # ---------------------------------------------------------------------------
+# Vector grid path: every vector task of the sweep as ONE array program
+# ---------------------------------------------------------------------------
+class _VectorCellView:
+    """Runtime-shaped view of one grid cell (what ``_extract_metrics``
+    and the telemetry capture consume)."""
+
+    recorder = None
+
+    def __init__(self, telemetry, dropped: int):
+        self.telemetry = telemetry
+        self.dropped = dropped
+
+
+def run_vector_tasks(sweep: Sweep, vec_tasks: list,
+                     fail_fast: bool = False, config=None) -> dict:
+    """Execute ``[(k, index, params, rep), ...]`` on the vector backend
+    as one batched grid (the whole point of the backend: the grid — not
+    the cell — is the unit of execution).  Returns ``{k: SweepRow}``.
+    Results are bit-identical to running each task alone through
+    ``run_task`` because every cell derives its own RNG from
+    (experiment seed, repetition stream)."""
+    from repro.vector import (VectorConfig, VectorTelemetry,
+                              compile_experiment, run_cells)
+    cfg = config if config is not None else VectorConfig()
+    rows: dict = {}
+    progs, seeds, metas = [], [], []
+    for k, i, params, rep in vec_tasks:
+        seed, stream = sweep.seed_for(i, rep)
+        ctx = PointCtx(params=params, index=i, rep=rep, seed=seed,
+                       stream=stream)
+        try:
+            obj = sweep.factory(ctx)
+            exp = obj.compile() if hasattr(obj, "compile") else obj
+            progs.append(compile_experiment(exp, dt=cfg.dt))
+        except Exception as e:  # noqa: BLE001 — error-row contract
+            if fail_fast:
+                raise
+            rows[k] = SweepRow(index=i, params=params, rep=rep, seed=seed,
+                               stream=stream,
+                               error=f"{type(e).__name__}: {e}")
+            continue
+        seeds.append((exp.seed, stream))
+        metas.append((k, i, params, rep, exp, stream))
+    try:
+        results = run_cells(progs, seeds, cfg)
+    except Exception as e:  # noqa: BLE001 — a failing grid must not kill
+        if fail_fast:       # the sim/engine tasks sharing the sweep
+            raise
+        for k, i, params, rep, exp, stream in metas:
+            rows[k] = SweepRow(index=i, params=params, rep=rep,
+                               seed=exp.seed, stream=stream,
+                               error=f"vector grid: "
+                                     f"{type(e).__name__}: {e}")
+        return rows
+    for (k, i, params, rep, exp, stream), res in zip(metas, results):
+        try:
+            view = _VectorCellView(VectorTelemetry(res), res.dropped)
+            metrics = _extract_metrics(sweep, view, exp)
+            clients = None
+            if sweep.per_client:
+                clients = {}            # per-client views: not tracked
+            series = None
+            if sweep.telemetry:
+                series = _series_rows(view, None)
+            rows[k] = SweepRow(index=i, params=params, rep=rep,
+                               seed=exp.seed, stream=stream,
+                               metrics=metrics, clients=clients,
+                               series=series)
+        except Exception as e:  # noqa: BLE001
+            if fail_fast:
+                raise
+            rows[k] = SweepRow(index=i, params=params, rep=rep,
+                               seed=exp.seed, stream=stream,
+                               error=f"{type(e).__name__}: {e}")
+    return rows
+
+
+# ---------------------------------------------------------------------------
 # Executors
 # ---------------------------------------------------------------------------
 def _log(msg: str) -> None:
@@ -187,18 +279,36 @@ def run_sweep(sweep: Sweep, executor: str = "serial",
         progress(f"sweep[{sweep.name}] {done}/{total} "
                  f"point={row.params} rep={row.rep}: {status}")
 
+    # vector tasks always run the in-process grid path, whatever the
+    # executor: the batched array program IS the parallelism, and the
+    # rows are bit-identical to per-task execution by construction —
+    # worker counts and executor choice cannot change vector results
+    vec_tasks = [(k, i, params, rep)
+                 for k, (i, params, rep) in enumerate(tasks)
+                 if params.get("runtime", sweep.runtime) == "vector"]
+    done = 0
+    if vec_tasks:
+        for k, row in run_vector_tasks(sweep, vec_tasks,
+                                       fail_fast=fail_fast).items():
+            rows[k] = row
+            done += 1
+            note(done, row)
+    tasks_left = [(k, i, params, rep)
+                  for k, (i, params, rep) in enumerate(tasks)
+                  if rows[k] is None]
+
     if executor == "serial":
-        for k, (i, params, rep) in enumerate(tasks):
+        for k, i, params, rep in tasks_left:
             rows[k] = run_task(sweep, i, params, rep,
                                capture=not fail_fast)
-            note(k + 1, rows[k])
+            done += 1
+            note(done, rows[k])
     elif executor == "process":
         with ProcessPoolExecutor(max_workers=workers,
                                  mp_context=mp_context()) as pool:
             futs = {pool.submit(run_task, sweep, i, params, rep,
                                 not fail_fast): k
-                    for k, (i, params, rep) in enumerate(tasks)}
-            done = 0
+                    for k, i, params, rep in tasks_left}
             pending = set(futs)
             while pending:
                 finished, pending = wait(pending,

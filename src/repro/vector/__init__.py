@@ -1,0 +1,31 @@
+"""Vector runtime: whole sweep grids as batched array programs.
+
+The third execution backend.  Where the event engine replays every
+(point, repetition) cell through a scalar Python loop, the vector
+runtime lays the ENTIRE grid out structure-of-arrays — axes
+``(cell, time_slot, server)`` with ``cell = point x repetition`` — and
+advances fixed-step queueing dynamics for every cell simultaneously
+under ``jax.jit`` + ``lax.scan`` (pure-NumPy fallback when jax is
+absent).  Arrival counts come from the same ``QPSSchedule`` laws
+evaluated as arrays, service costs from the same
+``ScalarService``/``BatchedService`` laws (roofline step law applied
+per slot), balancer policies become batched water-fill/rotation
+updates, and p50/p95/p99 are extracted in one ``np.partition`` pass
+per cell.
+
+It is the *statistically equivalent* fast lane, not a bit-identical
+one: results match the exact event engine under CI-overlap/Welch gates
+(see ``benchmarks/bench_vector.py``), which is the sound trade for
+affording more repetitions ("Sampling in Cloud Benchmarking") — exact
+mode stays the default and bit-identical.
+"""
+from repro.vector.compile import VectorCompileError, VectorProgram, compile_experiment
+from repro.vector.runtime import (VectorConfig, VectorResult, VectorRuntime,
+                                  has_jax, run_cells)
+from repro.vector.telemetry import VectorTelemetry
+
+__all__ = [
+    "VectorCompileError", "VectorProgram", "compile_experiment",
+    "VectorConfig", "VectorResult", "VectorRuntime", "VectorTelemetry",
+    "has_jax", "run_cells",
+]

@@ -1,0 +1,683 @@
+"""The vector execution engine: fixed-step queueing dynamics for every
+grid cell at once.
+
+One ``lax.scan`` (or NumPy slot loop) advances the whole grid's state
+``(backlog, queue length, load EMA)`` with axes ``[cell, server]``
+through ``n_slots`` fixed steps of width ``dt``:
+
+* per-slot Poisson arrival counts and CLT-aggregated service work are
+  pre-drawn per cell from its own seeded ``Generator`` (so a cell's
+  numbers do not depend on which grid it runs in);
+* connection-routed work lands on its replayed server; request-routed
+  work (jsq/p2c) is water-filled onto the least-backlogged accepting
+  servers — the fluid limit of join-shortest-queue;
+* waiting follows the unfinished-work law: an arrival that must queue
+  waits ``backlog / (c * speed)``; the probability it queues blends the
+  Erlang-C delay probability at the smoothed offered load with a
+  backlog-memory term (exact for c=1 by PASTA);
+* batched cells advance the roofline step law per slot: occupancy
+  ``b = clip(L, 1, max_batch)``, decode throughput ``b / step_time(b)``
+  tokens/sec, prefill seconds served with priority — the same
+  ``BatchedService`` cost model the event engine executes op by op.
+
+Latency percentiles come from per-request samples (slot drawn from the
+realized arrival weights, own service drawn from the exact law, wait
+from the slot's state), censored at the horizon and at server-failure
+instants exactly like the event engine's recorder, and extracted in
+one ``np.partition`` pass per cell.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Optional, Sequence
+
+import numpy as np
+
+from repro.vector.compile import VectorProgram, compile_experiment
+
+_BIG = 1e18
+_EPS = 1e-12
+#: offered load above which the stationary wait is diffusion-bounded
+_NEAR_CRITICAL = 0.9
+
+
+def has_jax() -> bool:
+    try:
+        import jax  # noqa: F401
+        return True
+    except Exception:
+        return False
+
+
+@dataclass
+class VectorConfig:
+    dt: float = 0.005               # slot width (seconds)
+    samples: int = 32768            # latency-sample budget per cell
+    backend: str = "auto"           # auto | jax | numpy
+    jit: bool = True                # wrap the jax scan in jax.jit
+    max_slot_elems: int = 64_000_000   # chunk cells when T*C*S exceeds this
+
+    def resolve_backend(self) -> str:
+        if self.backend == "auto":
+            return "jax" if has_jax() else "numpy"
+        if self.backend == "jax" and not has_jax():
+            raise RuntimeError("backend='jax' requested but jax is not "
+                               "importable (use 'numpy' or 'auto')")
+        return self.backend
+
+
+# ---------------------------------------------------------------------------
+# Per-cell result
+# ---------------------------------------------------------------------------
+@dataclass
+class VectorResult:
+    """Extracted results for one (point, rep) cell."""
+    n: int
+    mean: float
+    p50: float
+    p95: float
+    p99: float
+    dropped: int
+    interval: float
+    slo: Optional[float]
+    server_ids: list
+    samples: np.ndarray             # kept latency samples (uniform over
+                                    # completed requests)
+    sample_ivl: np.ndarray          # completion interval per kept sample
+    n_ivl: np.ndarray               # [n_ivls] completions per interval
+    util_ivl: np.ndarray            # [n_ivls, S] utilization
+    occ_ivl: np.ndarray             # [n_ivls, S] occupancy
+    qdepth_ivl: np.ndarray          # [n_ivls, S] queue depth at boundary
+    tokens_ivl: Optional[np.ndarray] = None   # [n_ivls, S] tokens/sec
+
+
+# ---------------------------------------------------------------------------
+# The scan step (shared math, numpy or jax namespace)
+# ---------------------------------------------------------------------------
+def _waterfill(xp, U_eff, total):
+    """Distribute ``total`` [C] of work over the least-loaded lanes of
+    ``U_eff`` [C, S] (masked lanes carry ``_BIG``): fill to a common
+    level.  -> per-lane fill amounts [C, S]."""
+    S = U_eff.shape[-1]
+    sortU = xp.sort(U_eff, axis=-1)
+    prefix = xp.cumsum(sortU, axis=-1)
+    js = xp.arange(1, S + 1)
+    level = (total[..., None] + prefix) / js
+    # valid j: level within [sortU[j-1], sortU[j]] (last j open above)
+    upper = xp.concatenate([sortU[..., 1:],
+                            xp.full(sortU[..., :1].shape, _BIG)], axis=-1)
+    valid = (level >= sortU - 1e-9) & (level <= upper + 1e-9)
+    idx = xp.argmax(valid, axis=-1)
+    L = xp.take_along_axis(level, idx[..., None], axis=-1)
+    return xp.clip(L - U_eff, 0.0, None)
+
+
+def _lgamma(c: np.ndarray) -> np.ndarray:
+    """lgamma(c + 1) for small-integer capacity arrays via a lookup
+    table (np.vectorize(math.lgamma) over a [slots, cells] array costs
+    more than the scan itself)."""
+    hi = int(np.max(c)) + 1 if c.size else 1
+    table = np.array([math.lgamma(k + 1.0) for k in range(hi + 1)])
+    return table[np.clip(c.astype(np.int64), 0, hi)]
+
+
+def _erlang_c(c, lgamma_c, rho, cmax: int):
+    """Erlang-C delay probability (P(arrival must queue) in M/M/c),
+    vectorized with per-server integer capacity ``c`` <= cmax.
+    Precomputed in numpy from the deterministic per-slot offered load —
+    it never enters the scan."""
+    rho = np.clip(rho, 1e-9, 0.999)
+    a = c * rho
+    top = np.exp(c * np.log(a) - lgamma_c)
+    term = np.ones_like(a)
+    ssum = np.zeros_like(a)
+    for k in range(cmax):
+        ssum = ssum + np.where(k < c, term, 0.0)
+        term = term * a / (k + 1.0)
+    denom = (1.0 - rho) * ssum + top
+    return top / np.maximum(denom, _EPS)
+
+
+def _episode_age(rho: np.ndarray, t_idx: np.ndarray, dt: float,
+                 band: float = _NEAR_CRITICAL) -> np.ndarray:
+    """Seconds since each lane's offered load last sat below ``band``
+    — the age of the current near-critical episode (>= dt).  Lanes hot
+    from t=0 age from the run start."""
+    idx = t_idx.reshape((-1,) + (1,) * (rho.ndim - 1)).astype(float)
+    last_low = np.maximum.accumulate(np.where(rho < band, idx, -1.0),
+                                     axis=0)
+    return np.maximum(idx - last_low, 1.0) * dt
+
+
+def _scalar_step(xp, consts):
+    c = consts["c"]
+    fail_slot = consts["fail_slot"]
+    dt = consts["dt"]
+
+    def step(carry, xs):
+        U, Q, drops = carry
+        t, Nc, Wc, Nf, Wf, act, acc, spd = xs
+        # failure instant: the resident queue and in-flight work vanish
+        is_fail = (t == fail_slot)
+        drops = drops + xp.sum(xp.where(is_fail, Q, 0.0), axis=-1)
+        U = xp.where(is_fail, 0.0, U)
+        Q = xp.where(is_fail, 0.0, Q)
+        # request-routed work: water-fill the accepting servers
+        n_acc = xp.sum(acc, axis=-1)
+        ok = n_acc > 0
+        drops = drops + xp.where(ok, 0.0, Nf)
+        Wf = xp.where(ok, Wf, 0.0)
+        Nf = xp.where(ok, Nf, 0.0)
+        U_eff = xp.where(acc > 0, U, _BIG)
+        w_free = _waterfill(xp, U_eff, Wf)
+        share = w_free / xp.maximum(
+            xp.sum(w_free, axis=-1, keepdims=True), _EPS)
+        n_free = Nf[..., None] * share
+        W_arr = Wc + w_free
+        N_arr = Nc + n_free
+        # backlog wait an arrival inherits (transients and overload; the
+        # stationary within-slot term is added analytically outside);
+        # request-routed arrivals land at the water-fill level: they
+        # inherit the LEAST backlog any accepting server offers
+        wait_U = U / xp.maximum(c * spd, _EPS)
+        wait_free = xp.min(xp.where(acc > 0, wait_U, _BIG), axis=-1)
+        # serve
+        cw = c * spd * act * dt
+        drained = xp.minimum(U + W_arr, cw)
+        wpr = (U + W_arr) / xp.maximum(Q + N_arr, _EPS)   # work per request
+        n_served = xp.minimum(Q + N_arr, drained / xp.maximum(wpr, _EPS))
+        U = U + W_arr - drained
+        Q = Q + N_arr - n_served
+        return (U, Q, drops), (wait_U, wait_free, n_served, drained, Q)
+    return step
+
+
+def _batched_step(xp, consts):
+    B = consts["c"]                      # batch slots
+    fail_slot = consts["fail_slot"]; dt = consts["dt"]
+    tm = consts["tm"]; tc = consts["tc"]
+    new_mean = consts["new_mean"]
+
+    def step(carry, xs):
+        P, T, L, drops = carry           # prefill s, tokens, requests
+        t, Nc, Wpc, Wtc, Nf, Wpf, Wtf, act, acc, spd = xs
+        is_fail = (t == fail_slot)
+        drops = drops + xp.sum(xp.where(is_fail, L, 0.0), axis=-1)
+        P = xp.where(is_fail, 0.0, P)
+        T = xp.where(is_fail, 0.0, T)
+        L = xp.where(is_fail, 0.0, L)
+        # free arrivals: water-fill by queue length (jsq over load())
+        n_acc = xp.sum(acc, axis=-1)
+        ok = n_acc > 0
+        drops = drops + xp.where(ok, 0.0, Nf)
+        Nf = xp.where(ok, Nf, 0.0)
+        L_eff = xp.where(acc > 0, L, _BIG)
+        n_free = _waterfill(xp, L_eff, Nf)
+        share = n_free / xp.maximum(
+            xp.sum(n_free, axis=-1, keepdims=True), _EPS)
+        Wp_arr = Wpc + Wpf[..., None] * share
+        Wt_arr = Wtc + Wtf[..., None] * share
+        N_arr = Nc + n_free
+        # roofline step law at the slot's occupancy
+        b = xp.clip(L, 1.0, B)
+        st = xp.maximum(tc * b, tm)
+        tok_rate = b / st
+        avail = act * spd * dt
+        p_served = xp.minimum(P + Wp_arr, avail)
+        rem = avail - p_served
+        tok_served = xp.minimum(T + Wt_arr, rem * tok_rate)
+        dec_used = tok_served / xp.maximum(tok_rate, _EPS)
+        busy_used = p_served + dec_used
+        n_served = xp.minimum(L + N_arr, tok_served / new_mean)
+        P = P + Wp_arr - p_served
+        T = T + Wt_arr - tok_served
+        L = L + N_arr - n_served
+        # admission wait: drain-time share ahead of a new arrival
+        D = (P + T * st / xp.maximum(b, 1.0)) / xp.maximum(spd, _EPS)
+        wait_adm = D * xp.clip((L - B) / xp.maximum(L, 1.0), 0.0, 1.0)
+        b_hat = xp.clip(L + 1.0, 1.0, B)
+        st_hat = xp.maximum(tc * b_hat, tm)
+        return (P, T, L, drops), (wait_adm, st_hat, N_arr, n_served,
+                                  busy_used, L, tok_served)
+    return step
+
+
+# ---------------------------------------------------------------------------
+# Scan drivers
+# ---------------------------------------------------------------------------
+def _scan_numpy(step, carry, xs_seq, n_slots: int):
+    outs = None
+    for t in range(n_slots):
+        xs = tuple(x[t] for x in xs_seq)
+        carry, ys = step(carry, xs)
+        if outs is None:
+            outs = tuple(np.empty((n_slots,) + np.shape(y), dtype=float)
+                         for y in ys)
+        for buf, y in zip(outs, ys):
+            buf[t] = y
+    return carry, outs
+
+
+#: (step_builder, jit_flag) -> compiled runner; consts enter as traced
+#: pytree arguments, so one trace serves every grid of the same shape
+#: signature — repeated sweeps and same-shape chunks pay the jit
+#: compile once per process, not once per call
+_JIT_CACHE: dict = {}
+
+
+def _jax_runner(step_builder, jit: bool):
+    key = (step_builder, jit)
+    fn = _JIT_CACHE.get(key)
+    if fn is None:
+        import jax
+        import jax.numpy as jnp
+
+        def run(consts, carry, xs):
+            return jax.lax.scan(step_builder(jnp, consts), carry, xs)
+
+        fn = _JIT_CACHE[key] = jax.jit(run) if jit else run
+    return fn
+
+
+def _scan_jax(step_builder, consts, carry, xs_seq, jit: bool):
+    import jax.numpy as jnp
+
+    consts_j = {k: (jnp.asarray(v, jnp.float32)
+                    if isinstance(v, np.ndarray) else v)
+                for k, v in consts.items()}
+    # fail_slot compares against integer slot indices
+    consts_j["fail_slot"] = jnp.asarray(consts["fail_slot"], jnp.int32)
+    carry_j = tuple(jnp.asarray(c, jnp.float32) for c in carry)
+    xs_j = tuple(jnp.asarray(x, jnp.int32 if i == 0 else jnp.float32)
+                 for i, x in enumerate(xs_seq))
+    out_carry, outs = _jax_runner(step_builder, jit)(consts_j, carry_j,
+                                                     xs_j)
+    return (tuple(np.asarray(c, np.float64) for c in out_carry),
+            tuple(np.asarray(o, np.float64) for o in outs))
+
+
+# ---------------------------------------------------------------------------
+# Grid execution
+# ---------------------------------------------------------------------------
+def _cell_rng(seed: int, stream: int) -> np.random.Generator:
+    """The cell's private RNG: seeded by the sweep-derived (seed,
+    stream), domain-separated from every scalar-path stream."""
+    return np.random.default_rng((0x7EC7, int(seed), int(stream)))
+
+
+def _draw_cell(prog: VectorProgram, rng: np.random.Generator) -> dict:
+    """Pre-scan draws for one cell, in a FIXED order (the same numbers
+    whether the cell runs alone or inside any grid)."""
+    dt = prog.dt
+    Nc = rng.poisson(prog.rate_conn * dt).astype(float)
+    Nf = rng.poisson(prog.rate_free * dt).astype(float)
+    if not prog.batched:
+        # the scalar backlog is a pure fluid: expected work per slot.
+        # Stochastic queueing below saturation is carried entirely by
+        # the analytic stationary term (Erlang-C x exponential) — work
+        # or count noise here would double-count it — so the fluid
+        # captures exactly what the stationary law cannot: transient
+        # buildup and overload growth.  Poisson counts still drive the
+        # sampling weights and the completion counts.
+        m = prog.work_mean                            # [S]
+        return {"Nc": Nc, "Wc": prog.rate_conn * dt * m, "Nf": Nf,
+                "Wf": prog.rate_free * dt * float(m.mean())}
+    zc = rng.standard_normal(Nc.shape)
+    zf = rng.standard_normal(Nf.shape)
+    zc2 = rng.standard_normal(Nc.shape)
+    zf2 = rng.standard_normal(Nf.shape)
+    pm, pv = prog.prefill_mean, prog.prefill_var
+    nm, nv = prog.new_mean, prog.new_var
+    Wpc = np.maximum(Nc * pm + np.sqrt(Nc * pv) * zc, 0.05 * Nc * pm)
+    Wtc = np.maximum(Nc * nm + np.sqrt(Nc * nv) * zc2, 0.05 * Nc * nm)
+    Wpf = np.maximum(Nf * pm + np.sqrt(Nf * pv) * zf, 0.05 * Nf * pm)
+    Wtf = np.maximum(Nf * nm + np.sqrt(Nf * nv) * zf2, 0.05 * Nf * nm)
+    return {"Nc": Nc, "Wpc": Wpc, "Wtc": Wtc, "Nf": Nf,
+            "Wpf": Wpf, "Wtf": Wtf}
+
+
+def _pad(a: np.ndarray, T: int, S: int) -> np.ndarray:
+    """Zero-pad a per-cell [T_i(, S_i)] array to the group shape."""
+    if a.ndim == 1:
+        out = np.zeros(T)
+        out[:a.shape[0]] = a
+        return out
+    out = np.zeros((T, S))
+    out[:a.shape[0], :a.shape[1]] = a
+    return out
+
+
+def run_cells(programs: Sequence[VectorProgram],
+              seeds: Sequence[tuple],
+              config: Optional[VectorConfig] = None) -> list[VectorResult]:
+    """Execute one cell per (program, (seed, stream)) pair — the whole
+    grid as one batched array program per family (scalar / batched),
+    chunked to bound scan memory."""
+    cfg = config or VectorConfig()
+    backend = cfg.resolve_backend()
+    results: list[Optional[VectorResult]] = [None] * len(programs)
+    for batched in (False, True):
+        idxs = [i for i, p in enumerate(programs) if p.batched == batched]
+        if not idxs:
+            continue
+        # chunk cells so T*C*S stays within the memory budget
+        T = max(programs[i].n_slots for i in idxs)
+        S = max(programs[i].n_servers for i in idxs)
+        per_cell = max(T * S, 1)
+        chunk = max(1, cfg.max_slot_elems // per_cell)
+        for lo in range(0, len(idxs), chunk):
+            part = idxs[lo:lo + chunk]
+            for i, res in zip(part, _run_family(
+                    [programs[i] for i in part],
+                    [seeds[i] for i in part], batched, backend, cfg)):
+                results[i] = res
+    return results  # type: ignore[return-value]
+
+
+def _run_family(progs: list, seeds: list, batched: bool, backend: str,
+                cfg: VectorConfig) -> list[VectorResult]:
+    C = len(progs)
+    T = max(p.n_slots for p in progs)
+    S = max(p.n_servers for p in progs)
+    dt = progs[0].dt
+    rngs = [_cell_rng(s, st) for s, st in seeds]
+    draws = [_draw_cell(p, r) for p, r in zip(progs, rngs)]
+
+    def stack(key: str) -> np.ndarray:
+        return np.stack([_pad(d[key], T, S) for d in draws], axis=1)
+
+    def stackp(attr: str) -> np.ndarray:
+        return np.stack([_pad(getattr(p, attr), T, S) for p in progs],
+                        axis=1)
+
+    act = stackp("active")
+    acc = stackp("accepting")
+    spd = stackp("speed")
+    c = np.stack([np.pad(p.workers, (0, S - p.n_servers)) for p in progs])
+    fail = np.stack([np.pad(p.fail_slot, (0, S - p.n_servers),
+                            constant_values=-1) for p in progs])
+    t_idx = np.arange(T, dtype=np.int64)
+
+    aux = {}
+    if not batched:
+        m_w = np.stack([np.pad(p.work_mean, (0, S - p.n_servers),
+                               constant_values=1.0) for p in progs])
+        v_w = np.stack([np.pad(p.work_var, (0, S - p.n_servers))
+                        for p in progs])
+        consts = {"c": c, "fail_slot": fail, "dt": dt}
+        xs = (t_idx, stack("Nc"), stack("Wc"), stack("Nf"), stack("Wf"),
+              act, acc, spd)
+        carry = tuple(np.zeros((C, S)) for _ in range(2)) + (np.zeros(C),)
+        builder = _scalar_step
+        # ---- analytic stationary wait (outside the scan) ----------------
+        # deterministic per-slot offered load, with request-routed rate
+        # spread capacity-proportionally over the accepting servers
+        rate_c = np.stack([_pad(p.rate_conn, T, S) for p in progs], axis=1)
+        rate_f = np.stack([_pad(p.rate_free, T, S) for p in progs], axis=1)
+        cap_share = acc * (c * spd)
+        share = cap_share / np.maximum(
+            cap_share.sum(axis=-1, keepdims=True), _EPS)
+        lam_w = (rate_c + rate_f[..., None] * share) * m_w[None]
+        rho_det = np.where(act > 0,
+                           lam_w / np.maximum(c * spd, _EPS), 0.0)
+        lgamma_c = _lgamma(c)
+        cmax = int(c.max()) if c.size else 1
+        aux["pC"] = _erlang_c(c[None], lgamma_c[None], rho_det, cmax)
+        # conditional wait given queueing: residual service work over
+        # the free capacity (exact Pollaczek-Khinchine mean for c=1),
+        # bounded near/above criticality by the diffusion growth law
+        # E[U(t)] ~ sigma * sqrt(2 t / pi) — a finite run at rho -> 1
+        # only builds the queue the random walk had time to build
+        e2 = v_w + m_w * m_w
+        resid = e2 / np.maximum(2.0 * m_w, _EPS)
+        w_stat = resid[None] / np.maximum(
+            c[None] * spd * (1.0 - np.clip(rho_det, 0.0, 0.999)), _EPS)
+        lam_srv = rho_det * c[None] * spd / np.maximum(m_w[None], _EPS)
+        # the diffusion clock runs from the start of the CURRENT
+        # near-critical episode, not the run: cyclic loads (diurnal)
+        # cross criticality many times, and each crossing only has its
+        # own age of random walk behind it
+        t_since = _episode_age(rho_det, t_idx, dt)
+        growth = np.sqrt(2.0 / math.pi * lam_srv * e2[None] * t_since) \
+            / np.maximum(c[None] * spd, _EPS)
+        # the diffusion bound only exists near/above criticality —
+        # below the band the stationary law stands alone
+        aux["w_cond"] = np.where(rho_det < _NEAR_CRITICAL, w_stat,
+                                 np.minimum(w_stat, growth))
+        # ---- pooled law for request-routed arrivals ---------------------
+        # jsq/p2c pool the fleet: an arrival queues only when EVERY
+        # accepting server is busy — Erlang-C over the pooled capacity,
+        # not independent per-server queues
+        m_bar = np.array([float(p.work_mean.mean()) for p in progs])
+        e2_bar = np.array([float((p.work_var + p.work_mean ** 2).mean())
+                           for p in progs])
+        resid_bar = e2_bar / np.maximum(2.0 * m_bar, _EPS)
+        cap_pool = (acc * c[None] * spd).sum(axis=-1)          # [T, C]
+        work_rate = (rate_c * m_w[None]).sum(axis=-1) \
+            + rate_f * m_bar[None]
+        rho_pool = np.where(cap_pool > 0,
+                            work_rate / np.maximum(cap_pool, _EPS), 0.0)
+        c_pool = np.minimum(np.maximum((acc * c[None]).sum(axis=-1), 1.0),
+                            64.0)
+        aux["pC_free"] = _erlang_c(c_pool, _lgamma(c_pool), rho_pool,
+                                   int(c_pool.max()))
+        w_stat_f = resid_bar[None] / np.maximum(
+            cap_pool * (1.0 - np.clip(rho_pool, 0.0, 0.999)), _EPS)
+        lam_pool = rho_pool * cap_pool / np.maximum(m_bar[None], _EPS)
+        t_since_f = _episode_age(rho_pool, t_idx, dt)
+        growth_f = np.sqrt(2.0 / math.pi * lam_pool * e2_bar[None]
+                           * t_since_f) / np.maximum(cap_pool, _EPS)
+        aux["w_cond_free"] = np.where(rho_pool < _NEAR_CRITICAL, w_stat_f,
+                                      np.minimum(w_stat_f, growth_f))
+        aux["free_ok"] = (acc.sum(axis=-1) > 0).astype(float)
+        aux["spd_free"] = np.where(
+            acc.sum(axis=-1) > 0,
+            (acc * c[None] * spd).sum(axis=-1)
+            / np.maximum((acc * c[None]).sum(axis=-1), _EPS), 1.0)
+    else:
+        tm = np.array([p.service.t_memory for p in progs])[:, None]
+        tc = np.array([p.service.t_compute_per_seq for p in progs])[:, None]
+        nm = np.array([p.new_mean for p in progs])[:, None]
+        consts = {"c": c, "fail_slot": fail, "dt": dt, "tm": tm, "tc": tc,
+                  "new_mean": nm}
+        # a resident's wall-clock pace per own token stretches by the
+        # prefill ops interleaved with decode (the engine serializes one
+        # op at a time) — deterministic expected prefill time-share
+        rate_c = np.stack([_pad(p.rate_conn, T, S) for p in progs], axis=1)
+        rate_f = np.stack([_pad(p.rate_free, T, S) for p in progs], axis=1)
+        share_even = acc / np.maximum(acc.sum(axis=-1, keepdims=True),
+                                      _EPS)
+        pf_mean = np.array([p.prefill_mean for p in progs])
+        pf_share = np.clip((rate_c + rate_f[..., None] * share_even)
+                           * pf_mean[None, :, None]
+                           / np.maximum(spd, _EPS), 0.0, 0.8)
+        aux["stretch"] = 1.0 / (1.0 - pf_share)
+        xs = (t_idx, stack("Nc"), stack("Wpc"), stack("Wtc"), stack("Nf"),
+              stack("Wpf"), stack("Wtf"), act, acc, spd)
+        carry = tuple(np.zeros((C, S)) for _ in range(3)) + (np.zeros(C),)
+        builder = _batched_step
+
+    if backend == "jax":
+        carry, outs = _scan_jax(builder, consts, carry, xs, cfg.jit)
+    else:
+        step = builder(np, dict(consts))
+        carry, outs = _scan_numpy(step, carry, xs, T)
+
+    return [_extract(progs[i], rngs[i], i, batched, carry, outs, aux,
+                     draws[i], cfg)
+            for i in range(C)]
+
+
+# ---------------------------------------------------------------------------
+# Per-cell extraction: sampling, censoring, one-partition percentiles
+# ---------------------------------------------------------------------------
+def _extract(prog: VectorProgram, rng: np.random.Generator, i: int,
+             batched: bool, carry, outs, aux: dict, draws: dict,
+             cfg: VectorConfig) -> VectorResult:
+    from repro.core.stats import quantiles_partition
+
+    T, S = prog.n_slots, prog.n_servers
+    dt = prog.dt
+    if not batched:
+        wait_U = outs[0][:T, i, :S]
+        wait_free = outs[1][:T, i]
+        n_served = outs[2][:T, i, :S]
+        drained = outs[3][:T, i, :S]
+        Qs = outs[4][:T, i, :S]
+        pC = aux["pC"][:T, i, :S]
+        w_cond = aux["w_cond"][:T, i, :S]
+        pC_f = aux["pC_free"][:T, i]
+        w_cond_f = aux["w_cond_free"][:T, i]
+        free_ok = aux["free_ok"][:T, i]
+        spd_f = aux["spd_free"][:T, i]
+    else:
+        wait_adm, st_hat, N_arr, n_served, drained, Qs, tok_served = \
+            (o[:T, i, :S] for o in outs)
+    drops = float(carry[-1][i])
+
+    centers = (np.arange(T) + 0.5) * dt
+    speed = prog.speed
+
+    # ---- request sampling (uniform over realized arrivals) -----------------
+    # scalar cells keep connection-routed and request-routed arrivals in
+    # separate weight blocks: conn samples see their server's stationary
+    # law, free samples the POOLED fleet law (jsq pools the servers)
+    if not batched:
+        w = np.concatenate([draws["Nc"].ravel(), draws["Nf"] * free_ok])
+    else:
+        w = N_arr.ravel()
+    total = w.sum()
+    K = int(min(cfg.samples, math.ceil(total))) if total > 0 else 0
+    if K > 0:
+        cum = np.cumsum(w)
+        u = rng.random(K) * cum[-1]
+        flat = np.searchsorted(cum, u, side="right")
+        flat = np.minimum(flat, w.size - 1)
+        if not batched:
+            is_free = flat >= T * S
+            ts = np.where(is_free, flat - T * S, flat // S)
+            ss = np.where(is_free, 0, flat % S)
+            demand = prog.profile.sample_batch(rng, K)
+            if prog.noise_sigma.any():
+                sig = np.where(is_free, float(prog.noise_sigma.mean()),
+                               prog.noise_sigma[ss])
+                demand = demand * np.exp(sig * rng.standard_normal(K))
+            spd_i = np.where(is_free, spd_f[ts], speed[ts, ss])
+            svc = demand / np.maximum(spd_i, _EPS)
+            # wait = inherited backlog (always, PASTA) + the stationary
+            # within-slot queue: Bernoulli(Erlang-C) x Exp(conditional)
+            queued = rng.random(K) < np.where(is_free, pC_f[ts],
+                                              pC[ts, ss])
+            station = queued * rng.standard_exponential(K) \
+                * np.where(is_free, w_cond_f[ts], w_cond[ts, ss])
+            lat = np.where(is_free, wait_free[ts], wait_U[ts, ss]) \
+                + station + svc
+            # request-routed arrivals never target a dead server; conn
+            # arrivals caught by their server's failure are lost
+            fail_t = np.where(is_free | (prog.fail_slot[ss] < 0), np.inf,
+                              prog.fail_slot[ss] * dt)
+        else:
+            ts, ss = np.divmod(flat, S)
+            spd_i = speed[ts, ss]
+            ptoks, ntoks = prog.lengths.sample_batch(rng, K)
+            pf = prog.service.prefill_time_array(ptoks)
+            stretch = aux["stretch"][:T, i, :S][ts, ss]
+            lat = wait_adm[ts, ss] + \
+                (pf + ntoks * st_hat[ts, ss] * stretch) \
+                / np.maximum(spd_i, _EPS)
+            fail_t = np.where(prog.fail_slot[ss] >= 0,
+                              prog.fail_slot[ss] * dt, np.inf)
+        completion = centers[ts] + lat
+        # censor like the event engine's recorder: completions past the
+        # horizon are never recorded, and a request caught on a failing
+        # server (arrived in its fail slot, or completing after the fail
+        # instant) is lost
+        keep = (completion <= prog.duration) & (centers[ts] < fail_t) \
+            & (completion <= fail_t)
+        lat = lat[keep]
+        completion = completion[keep]
+    else:
+        lat = np.empty(0)
+        completion = np.empty(0)
+
+    n = int(round(float(n_served.sum())))
+    if lat.size:
+        p50, p95, p99 = quantiles_partition(lat, (50.0, 95.0, 99.0))
+        mean = float(lat.mean())
+    else:
+        p50 = p95 = p99 = mean = float("nan")
+
+    # ---- interval series ---------------------------------------------------
+    spi = max(1, int(round(prog.interval / dt)))     # slots per interval
+    n_ivls = int(math.ceil(T / spi))
+    pad_to = n_ivls * spi
+    def ivl_sum(a):                                   # [T, S] -> [n_ivls, S]
+        buf = np.zeros((pad_to, a.shape[1]))
+        buf[:T] = a
+        return buf.reshape(n_ivls, spi, a.shape[1]).sum(axis=1)
+
+    n_ivl = ivl_sum(n_served).sum(axis=1)
+    busy_seconds = (drained / np.maximum(speed, _EPS)) if not batched \
+        else drained
+    util_cap = prog.workers[None, :] * prog.interval if not batched \
+        else np.full((1, S), prog.interval)
+    util_ivl = np.minimum(ivl_sum(busy_seconds) / np.maximum(util_cap,
+                                                             _EPS), 1.0)
+    # queue depth / occupancy at interval boundaries (last slot of each)
+    ends = np.minimum(np.arange(1, n_ivls + 1) * spi - 1, T - 1)
+    qdepth_ivl = Qs[ends]
+    if batched:
+        occ_ivl = np.minimum(Qs[ends] / np.maximum(prog.workers[None, :],
+                                                   1.0), 1.0)
+        tokens_ivl = ivl_sum(tok_served) / prog.interval
+    else:
+        occ_ivl = util_ivl
+        tokens_ivl = None
+    sample_ivl = np.minimum(completion / prog.interval,
+                            n_ivls - 1 + 1e-9).astype(np.int64) \
+        if completion.size else np.empty(0, np.int64)
+
+    return VectorResult(
+        n=n, mean=mean, p50=float(p50), p95=float(p95), p99=float(p99),
+        dropped=int(round(drops)) + prog.refused_clients,
+        interval=prog.interval, slo=prog.slo, server_ids=prog.server_ids,
+        samples=lat, sample_ivl=sample_ivl, n_ivl=n_ivl,
+        util_ivl=util_ivl, occ_ivl=occ_ivl, qdepth_ivl=qdepth_ivl,
+        tokens_ivl=tokens_ivl)
+
+
+# ---------------------------------------------------------------------------
+# Runtime adapter (single cell — scenario CLI / run_task parity)
+# ---------------------------------------------------------------------------
+class VectorRuntime:
+    """``Runtime``-shaped adapter over one (experiment, rep) cell.
+
+    Produces exactly the numbers the grid path produces for the same
+    (seed, stream): per-cell RNG derivation makes a cell's results
+    independent of the grid it runs in.
+    """
+
+    recorder = None                     # no raw-sample recorder: sampled
+
+    def __init__(self, experiment, rep: int = 0,
+                 config: Optional[VectorConfig] = None):
+        from repro.vector.telemetry import VectorTelemetry
+        self.experiment = experiment
+        self.config = config or VectorConfig()
+        self.program = compile_experiment(experiment, dt=self.config.dt)
+        self.seed = (experiment.seed, rep)
+        self.unsupported = self.program.unsupported
+        self.telemetry: Optional[VectorTelemetry] = None
+        self.result: Optional[VectorResult] = None
+
+    @property
+    def dropped(self) -> int:
+        return self.result.dropped if self.result is not None else 0
+
+    def run(self):
+        from repro.vector.telemetry import VectorTelemetry
+        self.result = run_cells([self.program], [self.seed],
+                                self.config)[0]
+        self.telemetry = VectorTelemetry(self.result)
+        return self.telemetry

@@ -331,3 +331,85 @@ def test_pipeline_frames_streaming_mode():
     assert full
     for f in full:
         assert 0.05 < f.slo_violation_frac < 0.2
+
+
+# ---------------------------------------------------------------------------
+# Summary hot path + empty-summary unification + memoization
+# ---------------------------------------------------------------------------
+def test_summary_of_single_call_matches_three_calls():
+    """One vectorized np.percentile call must be bit-identical to the
+    historical three separate calls, for list and ndarray inputs."""
+    rng = np.random.default_rng(3)
+    xs = rng.lognormal(-6, 0.5, 4001)
+    for inp in (xs, list(xs), iter(list(xs))):
+        s = Summary.of(inp)
+        assert s.n == len(xs)
+        assert s.mean == float(xs.mean())
+        for name, q in (("p50", 50), ("p95", 95), ("p99", 99)):
+            assert getattr(s, name) == float(np.percentile(xs, q))
+
+
+def test_empty_summary_single_code_path():
+    """Every empty-input consumer shares Summary.empty(): NaN-filled,
+    n=0 — and the SLO math follows the same contract."""
+    from repro.core.stats import pctl, slo_violation_frac
+    empties = [Summary.of([]), Summary.of(np.empty(0)), Summary.empty(),
+               StreamingStat().summary()]
+    for s in empties:
+        assert s.n == 0
+        assert all(math.isnan(v) for v in (s.mean, s.p50, s.p95, s.p99))
+    assert math.isnan(pctl([], 99))
+    assert math.isnan(slo_violation_frac([], 0.1))
+    assert math.isnan(slo_violation_frac([1.0, 2.0], None))
+    assert slo_violation_frac([1.0, 2.0, 3.0, 4.0], 2.5) == 0.5
+    # an interval with gauges but no latency samples renders the same
+    # empty summary inside frames() — no bespoke emptiness branch
+    rec = LatencyRecorder(1.0)
+    pipe = MetricsPipeline(rec, 1.0, slo=0.05)
+    pipe.sample_servers(1.0, [])
+    rec.record(_fake_req(0, 0, 1.2, 1.25))       # interval 1 only
+    frames = {f.t: f for f in pipe.frames()}
+    assert frames[0].n == 0
+    assert math.isnan(frames[0].p99)
+    assert math.isnan(frames[0].slo_violation_frac)
+    assert frames[1].n == 1
+
+
+def test_quantiles_partition_matches_percentile():
+    from repro.core.stats import quantiles_partition
+    rng = np.random.default_rng(5)
+    for n in (1, 2, 7, 100, 9999):
+        xs = rng.lognormal(0, 1, n)
+        got = quantiles_partition(xs, (50.0, 95.0, 99.0))
+        want = np.percentile(xs, (50, 95, 99))
+        assert np.allclose(got, want, rtol=0, atol=0) or \
+            np.array_equal(got, want)
+    assert np.isnan(quantiles_partition(np.empty(0), (50.0,))).all()
+
+
+def test_pipeline_memoizes_until_dirty():
+    """frames()/series() are rebuilt only when a new sample or gauge
+    lands — repeated windowed reads hit the cache."""
+    rec = LatencyRecorder(1.0)
+    pipe = MetricsPipeline(rec, 1.0)
+    for i in range(50):
+        rec.record(_fake_req(i, 0, 0.1 * i, 0.1 * i + 0.02))
+    f1 = pipe.frames()
+    assert pipe.frames() is f1                   # cache hit
+    s1 = pipe.series()
+    assert pipe.series() is s1
+    assert pipe.window("p99") == [s.p99 for s in s1.values()]
+    rec.record(_fake_req(99, 0, 1.0, 1.5))       # new sample -> dirty
+    f2 = pipe.frames()
+    assert f2 is not f1
+    assert sum(f.n for f in f2) == 51
+    pipe.sample_servers(1.0, [])                 # gauge write -> dirty
+    assert pipe.frames() is not f2
+    # streaming mode uses the recorder's O(1) counters the same way
+    rec2 = LatencyRecorder(1.0, mode="streaming")
+    pipe2 = MetricsPipeline(rec2, 1.0)
+    rec2.record(_fake_req(0, 0, 0.5, 0.52))
+    g1 = pipe2.frames()
+    assert pipe2.frames() is g1
+    rec2.record(_fake_req(1, 0, 0.6, 0.62))
+    assert pipe2.frames() is not g1

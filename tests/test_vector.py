@@ -1,0 +1,203 @@
+"""Vector backend: statistical equivalence vs the event engine on the
+dynamic edge cases, and the seeded-determinism contract.
+
+Equivalence assertions follow the repo's fig4 methodology — repeated
+seeded runs per backend, then 95%-CI-overlap (plus relative-error
+guard-rails) on the pooled summary metrics.  Everything is a
+deterministic function of the fixed seeds below, so these tests are
+exact regressions, not flaky statistical coin flips.
+"""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+from repro.core.client import ClientConfig, ConstantQPS, DiurnalQPS
+from repro.core.harness import Experiment, ServerSpec
+from repro.core.runtime import SimulatorRuntime, run_scenario
+from repro.core.stats import confidence95
+from repro.scenarios import get
+from repro.sweep import Axis, Sweep, run_sweep, scenario_factory
+from repro.sweep.spec import spawn_seed
+from repro.vector import (VectorCompileError, VectorConfig, VectorRuntime,
+                          compile_experiment, has_jax, run_cells)
+
+REPS = 5
+
+
+def _repeat(exp_builder, backend: str, metric=("p50", "p95")):
+    """metric means + CI over REPS seeded repetitions on one backend."""
+    vals: dict[str, list] = {m: [] for m in metric}
+    for rep in range(REPS):
+        exp = exp_builder(spawn_seed(11, 0, rep))
+        if backend == "sim":
+            rt = SimulatorRuntime(exp, rep=rep)
+        else:
+            rt = VectorRuntime(exp, rep=rep)
+        rt.run()
+        s = rt.telemetry.overall()
+        for m in metric:
+            vals[m].append(getattr(s, m))
+    return {m: confidence95(v) for m, v in vals.items()}
+
+
+def _assert_ci_overlap(sim_stats, vec_stats, rel_slack: float = 0.10):
+    """The fig4-style gate: per metric, the 95% CIs overlap (with a
+    small relative slack so a razor-thin CI pair cannot flake)."""
+    for m, (ms, cs) in sim_stats.items():
+        mv, cv = vec_stats[m]
+        gap = abs(ms - mv)
+        allowed = (0.0 if np.isnan(cs) else cs) + \
+            (0.0 if np.isnan(cv) else cv) + rel_slack * ms
+        assert gap <= allowed, \
+            f"{m}: sim {ms:.6g}+-{cs:.2g} vs vector {mv:.6g}+-{cv:.2g}"
+
+
+# ---------------------------------------------------------------------------
+# Equivalence edge cases
+# ---------------------------------------------------------------------------
+def test_diurnal_trough_zero_rate_gaps():
+    """amplitude >= base clips the sinusoid to zero for whole
+    sub-intervals: both backends must go quiet there and agree on the
+    overall latency law."""
+    def build(seed):
+        sched = DiurnalQPS(300.0, 500.0, period=10.0)   # deep trough
+        return Experiment(
+            clients=[ClientConfig(i, sched, seed=0) for i in range(2)],
+            servers=(ServerSpec(0), ServerSpec(1)),
+            app="xapian", duration=20.0, seed=seed)
+    _assert_ci_overlap(_repeat(build, "sim"), _repeat(build, "vector"))
+    # the trough intervals really are dead air on the vector backend
+    exp = build(7)
+    v = VectorRuntime(exp, rep=0)
+    v.run()
+    series = v.telemetry.series()
+    trough = [series[t].n for t in series
+              if (t % 10) in (6, 7, 8)]       # clipped phase of each period
+    peak = [series[t].n for t in series if (t % 10) in (1, 2, 3)]
+    assert sum(trough) < 0.02 * sum(peak)
+
+
+def test_flash_crowd_step():
+    """A 3x offered-load step mid-run: the burst window's latency jump
+    must match the event engine within CI overlap."""
+    def build(seed):
+        return get("flash-crowd", seed=seed, duration=24.0).compile()
+    _assert_ci_overlap(_repeat(build, "sim"), _repeat(build, "vector"))
+    # the step itself is visible: burst intervals are markedly slower
+    v = VectorRuntime(build(3), rep=0)
+    v.run()
+    series = v.telemetry.series()
+    pre = np.mean([series[t].p95 for t in range(3, 7)])
+    burst = np.mean([series[t].p95 for t in range(9, 13)])
+    assert burst > 1.4 * pre
+
+
+def test_server_failure_mid_run():
+    """One of three servers dies mid-run: queued work is lost, load
+    re-homes, and the post-failure latency regime matches the sim."""
+    def build(seed):
+        return get("server-failure", seed=seed, duration=30.0).compile()
+    _assert_ci_overlap(_repeat(build, "sim"), _repeat(build, "vector"))
+    v = VectorRuntime(build(5), rep=0)
+    v.run()
+    series = v.telemetry.series()
+    calm = np.mean([series[t].p95 for t in range(3, 9)])
+    degraded = np.mean([series[t].p95 for t in range(11, 19)])
+    assert degraded > 1.3 * calm
+    # failed server's gauges go dark after the failure instant
+    fail_ivl = 12
+    frames = v.telemetry.frames()
+    assert frames[fail_ivl + 2].util[2] == 0.0
+
+
+def test_batched_service_equivalence():
+    """Continuous-batching cells: the roofline step law per slot must
+    reproduce the event engine's batched latency scale."""
+    def build(seed):
+        return get("batched-serving", seed=seed, duration=15.0).compile()
+    _assert_ci_overlap(_repeat(build, "sim"), _repeat(build, "vector"),
+                       rel_slack=0.20)
+
+
+def test_legacy_mode_rejected():
+    exp = Experiment(clients=(ClientConfig(0, ConstantQPS(10.0)),),
+                     legacy_mode=True, duration=1.0)
+    with pytest.raises(VectorCompileError):
+        compile_experiment(exp)
+
+
+def test_hedge_surfaced_as_unsupported():
+    exp = Experiment(clients=(ClientConfig(0, ConstantQPS(50.0)),),
+                     duration=2.0, hedge_delay=0.02)
+    rt = VectorRuntime(exp)
+    assert any(i.kind == "set_hedge" for i in rt.unsupported)
+
+
+# ---------------------------------------------------------------------------
+# Seeded determinism
+# ---------------------------------------------------------------------------
+def _grid():
+    progs, seeds = [], []
+    for pi, qps in enumerate((300.0, 900.0)):
+        exp = get("steady", seed=1, duration=6.0, qps=qps).compile()
+        prog = compile_experiment(exp)
+        for rep in range(3):
+            progs.append(prog)
+            seeds.append((spawn_seed(1, pi, rep), rep))
+    return progs, seeds
+
+
+def _fingerprint(results):
+    return [(r.n, r.mean, r.p50, r.p95, r.p99, r.dropped,
+             r.samples.tobytes()) for r in results]
+
+
+def test_bit_identical_across_jit_and_nojit():
+    if not has_jax():
+        pytest.skip("jax not importable")
+    progs, seeds = _grid()
+    a = run_cells(progs, seeds, VectorConfig(backend="jax", jit=True))
+    b = run_cells(progs, seeds, VectorConfig(backend="jax", jit=False))
+    assert _fingerprint(a) == _fingerprint(b)
+
+
+def test_grid_cell_independent_of_grid_shape():
+    """A (point, rep) cell returns bit-identical results whether it
+    runs alone or inside any grid — per-cell RNG derivation."""
+    progs, seeds = _grid()
+    grid = run_cells(progs, seeds, VectorConfig())
+    alone = run_cells([progs[4]], [seeds[4]], VectorConfig())[0]
+    assert _fingerprint([grid[4]]) == _fingerprint([alone])
+
+
+def test_rows_identical_across_executors_and_workers():
+    """runtime=vector sweep rows cannot depend on executor choice or
+    worker count (the grid path runs in-process either way)."""
+    sweep = Sweep(name="vec-det", factory=scenario_factory("steady"),
+                  axes=(Axis("qps", (200.0, 500.0)),),
+                  fixed={"duration": 4.0}, reps=2, base_seed=3,
+                  runtime="vector",
+                  metrics=("n", "mean", "p50", "p95", "p99"))
+    serial = run_sweep(sweep, executor="serial", progress=None)
+    procs = run_sweep(sweep, executor="process", workers=2, progress=None)
+    assert [r.to_dict() for r in serial.rows] == \
+        [r.to_dict() for r in procs.rows]
+    # and the grid path equals the per-task path bit-for-bit
+    from repro.sweep.executor import run_task
+    single = run_task(sweep, 1, {"qps": 500.0, "duration": 4.0}, 1)
+    match = [r for r in serial.rows
+             if r.index == 1 and r.rep == 1][0]
+    assert single.to_dict() == match.to_dict()
+
+
+def test_scenario_cli_vector_backend(capsys):
+    from repro.scenarios.__main__ import main
+    assert main(["steady", "--backend", "vector", "--duration", "4"]) == 0
+    out = capsys.readouterr().out
+    assert "backend=vector" in out
+
+
+def test_run_scenario_vector_entry():
+    rt = run_scenario(get("steady", seed=2, duration=4.0), "vector")
+    assert rt.telemetry.overall().n > 0
