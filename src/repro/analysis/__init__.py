@@ -1,0 +1,31 @@
+"""Static analysis for the repro codebase: determinism lint + spec checks.
+
+Two layers, one CLI (``python -m repro.analysis``):
+
+``repro.analysis.lint``
+    An AST rule engine over the repo's own source.  Each rule targets a
+    bug class this project has actually shipped and later fixed by hand
+    (process-dependent ``hash()`` seeding, collapsed per-repetition RNG
+    streams, wall-clock reads inside simulated time, stripped
+    ``assert`` invariants, silent broad excepts, jax purity hazards in
+    traced bodies).  Findings are suppressible inline with
+    ``# repro: noqa[RULE]``.
+
+``repro.analysis.check``
+    Static validators over ``Scenario``/``Sweep``/``Experiment``
+    declarations: a backend capability matrix (unsupported injections
+    fail at check time, not mid-run), seed-collision detection across
+    sweep axes, and schedule sanity (offered load, horizon coverage).
+"""
+from repro.analysis.check import (  # noqa: F401
+    CheckFinding,
+    check_scenario,
+    check_sweep,
+)
+from repro.analysis.lint.engine import (  # noqa: F401
+    Finding,
+    Rule,
+    SourceFile,
+    lint_paths,
+    lint_text,
+)

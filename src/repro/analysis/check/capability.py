@@ -1,0 +1,92 @@
+"""Backend capability matrix for experiment features.
+
+One place that states which backend supports which feature, derived
+from the runtimes themselves: the simulator applies every injection
+kind (``Simulator.apply_injection``), the engine runtime whitelists
+``_ENGINE_INJECTIONS`` and has no hedging or legacy path, and the
+vector compiler lowers speed/fail/drain/policy but surfaces hedging
+and injection-time joins through ``VectorProgram.unsupported`` and
+refuses ``legacy_mode`` outright.  ``python -m repro.analysis check``
+uses this to reject a declaration at check time instead of mid-run
+(PR 5 only got this to a runtime warning).
+
+Features are strings: ``injection:<kind>`` for each injection kind,
+plus ``hedge_delay`` and ``legacy_mode`` experiment flags.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+BACKENDS = ("sim", "engine", "vector")
+
+INJECTION_KINDS = ("server_fail", "server_speed", "server_join",
+                   "server_drain", "set_policy", "set_hedge")
+
+_ALL = frozenset([f"injection:{k}" for k in INJECTION_KINDS] +
+                 ["hedge_delay", "legacy_mode"])
+
+#: feature -> backends supporting it (mirrors the runtime contracts)
+CAPABILITIES = {
+    "sim": frozenset(_ALL),
+    # core/runtime.py _ENGINE_INJECTIONS: join/drain/fail/policy only
+    "engine": frozenset({"injection:server_join",
+                         "injection:server_drain",
+                         "injection:server_fail",
+                         "injection:set_policy"}),
+    # vector/compile.py: hedging + injection-time joins -> unsupported,
+    # legacy_mode -> VectorCompileError; joins lower via ServerSpec
+    "vector": frozenset({"injection:server_fail",
+                         "injection:server_speed",
+                         "injection:server_drain",
+                         "injection:set_policy"}),
+}
+
+
+def required_features(exp) -> list:
+    """-> [(feature, human detail)] the experiment needs at runtime."""
+    feats = []
+    if getattr(exp, "legacy_mode", False):
+        feats.append(("legacy_mode", "legacy_mode=True"))
+    if getattr(exp, "hedge_delay", None) is not None:
+        feats.append(("hedge_delay",
+                      f"hedge_delay={exp.hedge_delay:g}s"))
+    for inj in getattr(exp, "injections", ()):
+        feats.append((f"injection:{inj.kind}",
+                      f"{inj.kind}@{inj.at:g}s"))
+    return feats
+
+
+def unsupported_on(exp, backend: str) -> list:
+    """-> [(feature, detail)] the named backend cannot honor."""
+    if backend not in CAPABILITIES:
+        raise ValueError(f"unknown backend {backend!r}; "
+                         f"known: {', '.join(BACKENDS)}")
+    caps = CAPABILITIES[backend]
+    return [(f, d) for f, d in required_features(exp) if f not in caps]
+
+
+def support_matrix(exp) -> dict:
+    """-> {backend: [(feature, detail) it cannot honor]}."""
+    return {b: unsupported_on(exp, b) for b in BACKENDS}
+
+
+def format_matrix(exp, features: Optional[list] = None) -> str:
+    """Render the capability matrix for the experiment's features."""
+    feats = features if features is not None else \
+        [f for f, _ in required_features(exp)]
+    seen: list = []
+    for f in feats:
+        if f not in seen:
+            seen.append(f)
+    if not seen:
+        return "  (no backend-gated features)"
+    width = max(len(f) for f in seen)
+    lines = ["  capability matrix (x = supported):",
+             f"    {'feature':<{width}}  " +
+             "  ".join(f"{b:>6}" for b in BACKENDS)]
+    for f in seen:
+        marks = "  ".join(
+            f"{'x' if f in CAPABILITIES[b] else '.':>6}"
+            for b in BACKENDS)
+        lines.append(f"    {f:<{width}}  {marks}")
+    return "\n".join(lines)

@@ -1,0 +1,9 @@
+"""AST determinism/purity linter: engine + rule catalogue."""
+from repro.analysis.lint.engine import (  # noqa: F401
+    Finding,
+    Rule,
+    SourceFile,
+    default_rules,
+    lint_paths,
+    lint_text,
+)

@@ -392,7 +392,8 @@ class BatchScheduler:
         yet at the op's start instant (wall-clock replay) — a not-ready
         FIFO head falls through to a decode op, like the real engine
         seeing an empty queue."""
-        assert self.op is None, "previous op not finished"
+        if self.op is not None:       # survives python -O, unlike assert
+            raise RuntimeError("previous op not finished")
         while self.waiting and len(self.active) < self.max_batch:
             item = self.waiting[0]
             if skip is not None and skip(item.key):

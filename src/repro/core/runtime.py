@@ -195,7 +195,8 @@ class EngineRuntime(Runtime):
         # (time_scale != 1) the recorder's bucket width scales with them so
         # interval indices stay in *virtual* time, aligned with the gauge
         # samples and the scenario's QPS schedule
-        self.recorder = LatencyRecorder(interval * time_scale, mode=stats_mode)
+        self.recorder = LatencyRecorder(interval * time_scale,
+                                        mode=stats_mode, seed=seed, rep=rep)
         self.telemetry = MetricsPipeline(self.recorder, interval, slo=slo)
         self.dropped = 0
         self._clock = clock

@@ -249,7 +249,8 @@ class Simulator:
         self.profile = profile
         self.lengths = lengths              # default TokenLengths for clients
         self.service_model = service_model  # applied to injected server joins
-        self.recorder = LatencyRecorder(cfg.interval, mode=cfg.stats_mode)
+        self.recorder = LatencyRecorder(cfg.interval, mode=cfg.stats_mode,
+                                        seed=cfg.seed, rep=cfg.rep)
         self.telemetry = MetricsPipeline(self.recorder, cfg.interval,
                                          slo=cfg.slo)
         self._queue = CalendarQueue(cfg.duration)

@@ -22,7 +22,6 @@ Two recorder modes:
 from __future__ import annotations
 
 import math
-import random
 from collections import defaultdict
 from dataclasses import dataclass
 from typing import Iterable, Optional
@@ -195,9 +194,12 @@ class ReservoirSample:
     """Vitter's Algorithm R: uniform fixed-size sample of an unbounded
     stream.  Exact (holds everything) while n <= k.
 
-    ``rand`` lets many reservoirs share one RNG: a private Mersenne
-    Twister per reservoir costs ~2.5 KB of state, which dominates memory
-    when a recorder holds one reservoir per (client, interval) cell."""
+    ``rand`` lets many reservoirs share one RNG: a private generator per
+    reservoir carries its own state block, which dominates memory when a
+    recorder holds one reservoir per (client, interval) cell.  The
+    default stream is a seeded ``np.random.Generator`` keyed by a
+    domain tag so it can never collide with the simulation's own
+    ``(seed, entity_id, rep)`` streams."""
 
     __slots__ = ("k", "n", "data", "_rand")
 
@@ -205,7 +207,8 @@ class ReservoirSample:
         self.k = k
         self.n = 0
         self.data: list[float] = []
-        self._rand = rand if rand is not None else random.Random(seed).random
+        self._rand = rand if rand is not None else \
+            np.random.default_rng((0x512E, int(seed))).random
 
     def add(self, x: float) -> None:
         n = self.n = self.n + 1
@@ -334,11 +337,14 @@ class LatencyRecorder:
     """Streams completed requests into per-client / per-interval buckets.
 
     ``mode="exact"`` keeps raw samples (bit-compatible with the figure
-    scripts); ``mode="streaming"`` keeps bounded P²/reservoir state only.
+    scripts — no RNG is ever constructed or drawn in this mode);
+    ``mode="streaming"`` keeps bounded P²/reservoir state only, with the
+    reservoir RNG keyed by ``(0x5EED, seed, rep)`` so repetitions
+    subsample independently instead of replaying one stream.
     """
 
     def __init__(self, interval: float = 1.0, mode: str = "exact",
-                 reservoir_k: int = 256):
+                 reservoir_k: int = 256, seed: int = 0, rep: int = 0):
         if mode not in ("exact", "streaming"):
             raise ValueError(f"unknown recorder mode: {mode!r}")
         self.interval = interval
@@ -352,8 +358,10 @@ class LatencyRecorder:
             self.queue_times: list[float] = []
             self.service_times: list[float] = []
         if mode == "streaming":
-            # one shared RNG for every reservoir this recorder owns
-            self._rand = random.Random(0x5EED).random
+            # one shared RNG for every reservoir this recorder owns,
+            # domain-tagged and keyed by (seed, rep)
+            self._rand = np.random.default_rng(
+                (0x5EED, int(seed), int(rep))).random
             self._all = StreamingStat(reservoir_k=4096, use_p2=True,
                                       rand=self._rand)
             self._by_client: dict[int, StreamingStat] = {}

@@ -249,7 +249,8 @@ class InferenceEngine:
         enc_len = 64 if cfg.enc_dec else None
         self.cache = P.init_tree(
             R.cache_specs(cfg, max_batch, max_len, enc_len=enc_len),
-            jax.random.PRNGKey(0))
+            jax.random.PRNGKey(0))  # repro: noqa[seed-convention] —
+        # fixed key: cache init allocates zeroed buffers, never samples
         self.positions = jnp.zeros((max_batch,), jnp.int32)
         self.tokens = jnp.zeros((max_batch,), jnp.int32)
         self.active: list[Optional[Request]] = [None] * max_batch

@@ -139,7 +139,7 @@ def run_task(sweep: Sweep, index: int, params: dict, rep: int,
         return SweepRow(index=index, params=params, rep=rep,
                         seed=getattr(exp, "seed", seed), stream=stream,
                         metrics=metrics, clients=clients, series=series)
-    except Exception as e:  # noqa: BLE001 — failure capture is the contract
+    except Exception as e:  # repro: noqa[broad-except] — error-row contract
         if not capture:
             raise
         return SweepRow(index=index, params=params, rep=rep, seed=seed,
@@ -181,7 +181,7 @@ def run_vector_tasks(sweep: Sweep, vec_tasks: list,
             obj = sweep.factory(ctx)
             exp = obj.compile() if hasattr(obj, "compile") else obj
             progs.append(compile_experiment(exp, dt=cfg.dt))
-        except Exception as e:  # noqa: BLE001 — error-row contract
+        except Exception as e:  # repro: noqa[broad-except] — error-row contract
             if fail_fast:
                 raise
             rows[k] = SweepRow(index=i, params=params, rep=rep, seed=seed,
@@ -192,7 +192,7 @@ def run_vector_tasks(sweep: Sweep, vec_tasks: list,
         metas.append((k, i, params, rep, exp, stream))
     try:
         results = run_cells(progs, seeds, cfg)
-    except Exception as e:  # noqa: BLE001 — a failing grid must not kill
+    except Exception as e:  # repro: noqa[broad-except] — a failing grid
         if fail_fast:       # the sim/engine tasks sharing the sweep
             raise
         for k, i, params, rep, exp, stream in metas:
@@ -215,7 +215,7 @@ def run_vector_tasks(sweep: Sweep, vec_tasks: list,
                                seed=exp.seed, stream=stream,
                                metrics=metrics, clients=clients,
                                series=series)
-        except Exception as e:  # noqa: BLE001
+        except Exception as e:  # repro: noqa[broad-except] — error-row contract
             if fail_fast:
                 raise
             rows[k] = SweepRow(index=i, params=params, rep=rep,
@@ -318,8 +318,9 @@ def run_sweep(sweep: Sweep, executor: str = "serial",
                     i, params, rep = tasks[k]
                     try:
                         rows[k] = fut.result()
-                    except Exception as e:  # worker died, or a fail-fast
-                        # task re-raised its original exception
+                    except Exception as e:  # repro: noqa[broad-except]
+                        # worker died, or a fail-fast task re-raised
+                        # its original exception
                         if fail_fast:
                             for p in pending:
                                 p.cancel()

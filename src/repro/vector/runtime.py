@@ -46,7 +46,9 @@ def has_jax() -> bool:
     try:
         import jax  # noqa: F401
         return True
-    except Exception:
+    except ImportError:
+        # ONLY an absent jax means "fall back to numpy" — a broken
+        # install must raise, not silently switch backends
         return False
 
 

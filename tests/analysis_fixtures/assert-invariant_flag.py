@@ -1,0 +1,6 @@
+# lint-path: core/fix_assert.py
+
+
+def start_op(state):
+    assert state.op is None, "previous op not done"  # F: assert-invariant
+    state.op = object()

@@ -1,0 +1,7 @@
+# lint-path: core/fix_assert_ok.py
+
+
+def start_op(state):
+    if state.op is not None:
+        raise RuntimeError("previous op not finished")
+    state.op = object()

@@ -1,0 +1,10 @@
+# lint-path: sweep/fix_broad_except_ok.py
+
+
+def run_task(task):
+    try:
+        return task()
+    except (ValueError, KeyError):
+        return None
+    except Exception as e:  # repro: noqa[broad-except] — error-row demo
+        return e

@@ -1,0 +1,12 @@
+# lint-path: vector/fix_jit_mutation.py
+
+TRACE_LOG = []
+
+
+def make_step(xp, scratch):
+    def step(carry, xs):
+        TRACE_LOG.append(xs)  # F: jit-captured-mutation
+        scratch[0] = carry  # F: jit-captured-mutation
+        return carry + xs, carry
+
+    return step

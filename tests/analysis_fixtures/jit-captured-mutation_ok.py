@@ -1,0 +1,12 @@
+# lint-path: vector/fix_jit_mutation_ok.py
+
+
+def make_step(xp):
+    def step(carry, xs):
+        depth, log = carry
+        log = log + xs  # state threads through the carry
+        local = [depth]
+        local.append(xs)
+        return (depth, log), log
+
+    return step

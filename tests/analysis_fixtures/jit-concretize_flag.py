@@ -1,0 +1,11 @@
+# lint-path: vector/fix_jit_concretize.py
+
+
+def make_step(xp):
+    def step(carry, xs):
+        total = carry + xs
+        host = total.item()  # F: jit-concretize
+        frac = float(xs)  # F: jit-concretize
+        return total, (host, frac)
+
+    return step

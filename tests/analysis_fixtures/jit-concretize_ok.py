@@ -1,0 +1,13 @@
+# lint-path: vector/fix_jit_concretize_ok.py
+
+
+def make_step(xp):
+    def step(carry, xs):
+        total = carry + xs
+        return total, xp.asarray(xs)
+
+    return step
+
+
+def summarize(result):
+    return float(result.p99)  # outside the traced body: fine

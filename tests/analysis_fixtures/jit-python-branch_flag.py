@@ -1,0 +1,13 @@
+# lint-path: vector/fix_jit_branch.py
+
+
+def make_step(xp, dt):
+    def step(carry, xs):
+        depth, done = carry
+        rate, cap = xs
+        if depth > cap:  # F: jit-python-branch
+            depth = cap
+        flag = 1.0 if done else 0.0  # F: jit-python-branch
+        return (depth + rate * dt, done), flag
+
+    return step

@@ -1,0 +1,18 @@
+# lint-path: vector/fix_jit_branch_ok.py
+
+
+def make_step(xp, dt):
+    def step(carry, xs):
+        depth, done = carry
+        rate, cap = xs
+        depth = xp.minimum(depth, cap)
+        flag = xp.where(done, 1.0, 0.0)
+        return (depth + rate * dt, done), flag
+
+    return step
+
+
+def python_helper(depth, cap):
+    if depth > cap:  # not a traced body: plain Python is fine
+        depth = cap
+    return depth

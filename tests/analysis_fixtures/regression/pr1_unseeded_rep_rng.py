@@ -1,0 +1,15 @@
+# lint-path: core/regress_pr1.py
+# The PR-1 bug, reintroduced in shape: each repetition drew a fresh
+# OS-entropy generator instead of threading (seed, entity_id, rep),
+# so the 13 "independent" repetitions had no reproducible seed and
+# the per-rep arithmetic variant collided across sweep points.
+import numpy as np
+
+
+def run_repeated(build, seed, reps=13):
+    out = []
+    for rep in range(reps):
+        rng = np.random.default_rng()  # F: unseeded-rng
+        alt = np.random.default_rng(seed + 1000 * rep)  # F: seed-convention
+        out.append(build(rng, alt))
+    return out

@@ -1,0 +1,9 @@
+# lint-path: core/regress_pr4.py
+# The PR-4 bug, reintroduced in shape: client seeds derived from
+# hash(app) differ across processes (PYTHONHASHSEED), so "seeded"
+# runs were silently unreproducible until a reviewer caught it.
+import numpy as np
+
+
+def client_rng(app):
+    return np.random.default_rng(hash(app))  # F: seed-from-hash

@@ -1,0 +1,8 @@
+# lint-path: core/fix_seed_convention.py
+import numpy as np
+
+
+def rep_rng(seed, rep):
+    a = np.random.default_rng(seed + 1000 * (rep + 1))  # F: seed-convention
+    b = np.random.default_rng(12345)  # F: seed-convention
+    return a, b

@@ -1,0 +1,13 @@
+# lint-path: core/fix_seed_convention_ok.py
+import numpy as np
+
+
+def rep_rng(seed, server_id, rep):
+    a = np.random.default_rng((9176, seed, server_id, rep))
+    b = np.random.default_rng(spawn_seed(seed, server_id, rep))
+    return a, b
+
+
+def spawn_seed(base, index, rep):
+    ss = np.random.SeedSequence(base, spawn_key=(index, rep))
+    return int(ss.generate_state(1)[0])

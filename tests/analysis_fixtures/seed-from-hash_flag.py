@@ -1,0 +1,16 @@
+# lint-path: core/fix_seed_from_hash.py
+import numpy as np
+
+
+def client_rng(app):
+    rng = np.random.default_rng(hash(app))  # F: seed-from-hash
+    base_seed = id(app)  # F: seed-from-hash
+    return rng, base_seed
+
+
+def spawn(app):
+    return derive_seed(hash(app), 3)  # F: seed-from-hash
+
+
+def derive_seed(a, b):
+    return (a, b)

@@ -1,0 +1,13 @@
+# lint-path: core/fix_seed_from_hash_ok.py
+import zlib
+
+import numpy as np
+
+
+def client_rng(app, seed):
+    tag = zlib.crc32(app.encode())
+    return np.random.default_rng((tag, seed, 0))
+
+
+def unrelated(app):
+    return hash(app)  # hashing outside seed derivation is fine

@@ -1,0 +1,7 @@
+# lint-path: core/fix_stdlib_random.py
+import random  # F: stdlib-random
+from random import choice  # F: stdlib-random
+
+
+def pick(xs):
+    return choice(xs) or random.random()

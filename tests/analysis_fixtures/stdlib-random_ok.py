@@ -1,0 +1,6 @@
+# lint-path: figures/fix_stdlib_random_ok.py
+import random  # outside the measurement packages: not flagged
+
+
+def jitter(x):
+    return x + random.random()

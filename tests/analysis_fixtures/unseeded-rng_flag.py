@@ -1,0 +1,10 @@
+# lint-path: core/fix_unseeded_rng.py
+import numpy as np
+
+
+def per_rep_stat():
+    rng = np.random.default_rng()  # F: unseeded-rng
+    np.random.seed(0)  # F: unseeded-rng
+    noise = np.random.normal(size=3)  # F: unseeded-rng
+    ss = np.random.SeedSequence()  # F: unseeded-rng
+    return rng, noise, ss

@@ -1,0 +1,8 @@
+# lint-path: core/fix_unseeded_rng_ok.py
+import numpy as np
+
+
+def per_rep_stat(seed, rep):
+    rng = np.random.default_rng((0xC4, seed, 0, rep))
+    child = np.random.SeedSequence(seed, spawn_key=(rep,))
+    return rng.normal(size=3), child

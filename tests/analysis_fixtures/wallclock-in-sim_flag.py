@@ -1,0 +1,8 @@
+# lint-path: core/fix_wallclock.py
+import time
+
+
+def sample_interval(recorder):
+    now = time.time()  # F: wallclock-in-sim
+    t0 = time.monotonic()  # F: wallclock-in-sim
+    return recorder.flush(now - t0)

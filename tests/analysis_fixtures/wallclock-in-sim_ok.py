@@ -1,0 +1,7 @@
+# lint-path: core/fix_wallclock_ok.py
+import time
+
+
+def sample_interval(recorder, clock=time.monotonic):
+    now = clock()  # injectable clock: the reference is fine, calls are not
+    return recorder.flush(now)

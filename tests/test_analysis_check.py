@@ -1,0 +1,164 @@
+"""Spec-validator tests: capability matrix, seed collisions, schedule."""
+from __future__ import annotations
+
+from dataclasses import replace
+
+import pytest
+
+from repro import scenarios
+from repro.analysis.check import (
+    CAPABILITIES,
+    check_scenario,
+    check_sweep,
+    format_matrix,
+    has_errors,
+    required_features,
+    unsupported_on,
+)
+from repro.analysis.check.schedule import check_schedule, offered_rho
+from repro.analysis.check.seeds import check_sweep_seeds
+from repro.core.scenario import Injection
+from repro.sweep.spec import Sweep, scenario_factory
+from repro.vector.compile import compile_experiment
+
+
+# ---------------------------------------------------------------------------
+# Capability matrix
+# ---------------------------------------------------------------------------
+def test_every_canonical_scenario_passes_without_backend():
+    for name in scenarios.names():
+        findings = check_scenario(scenarios.get(name))
+        assert not has_errors(findings), \
+            "\n".join(f.format() for f in findings)
+
+
+def test_set_hedge_rejected_on_vector_and_engine():
+    scn = scenarios.get("churn-storm")
+    for backend in ("vector", "engine"):
+        findings = check_scenario(scn, backend=backend)
+        cap = [f for f in findings if f.rule == "capability"]
+        assert cap and cap[0].severity == "error"
+        assert "set_hedge" in cap[0].message
+        assert "capability matrix" in cap[0].message
+    assert not has_errors(check_scenario(scn, backend="sim"))
+
+
+def test_capability_matrix_mirrors_runtime_contracts():
+    exp = scenarios.get("churn-storm").compile()
+    feats = dict(required_features(exp))
+    assert "injection:set_hedge" in feats
+    assert unsupported_on(exp, "sim") == []
+    assert any(f == "injection:set_hedge"
+               for f, _ in unsupported_on(exp, "vector"))
+    # speed scaling: sim+vector yes, engine no
+    assert "injection:server_speed" in CAPABILITIES["sim"]
+    assert "injection:server_speed" in CAPABILITIES["vector"]
+    assert "injection:server_speed" not in CAPABILITIES["engine"]
+    with pytest.raises(ValueError):
+        unsupported_on(exp, "warp-drive")
+    assert "set_hedge" in format_matrix(exp)
+
+
+# ---------------------------------------------------------------------------
+# Seed collisions
+# ---------------------------------------------------------------------------
+def _sweep(seeder, points=3, reps=3):
+    return Sweep(name="t", factory=scenario_factory("steady"),
+                 axes=[("qps", [100.0 * (i + 1) for i in range(points)])],
+                 fixed={"duration": 2.0}, reps=reps, seeder=seeder)
+
+
+def test_spawn_seeder_is_collision_free():
+    assert check_sweep_seeds(_sweep("spawn")) == []
+
+
+def test_run_repeated_seeder_collides_across_points():
+    findings = check_sweep_seeds(_sweep("run-repeated"))
+    assert findings and all(f.severity == "error" for f in findings)
+    assert "correlated" in findings[0].message
+
+
+def test_fixed_seeder_exempt_by_contract():
+    assert check_sweep_seeds(_sweep("fixed")) == []
+
+
+def test_check_sweep_validates_points_and_backend():
+    sweep = _sweep("spawn")
+    assert not has_errors(check_sweep(sweep))
+    hedged = Sweep(name="h", factory=scenario_factory("churn-storm"),
+                   axes=[("client_qps", [50.0, 100.0])],
+                   fixed={"duration": 4.0}, reps=2, runtime="vector")
+    findings = check_sweep(hedged)
+    cap = [f for f in findings if f.rule == "capability"]
+    assert cap and all(f.severity == "error" for f in cap)
+    assert "[0]" in cap[0].target
+
+
+# ---------------------------------------------------------------------------
+# Schedule sanity
+# ---------------------------------------------------------------------------
+def test_overload_draws_rho_warning():
+    exp = scenarios.get("steady", qps=100000.0, n_servers=1,
+                        duration=5.0).compile()
+    findings = check_schedule(exp, "steady")
+    assert any("rho>=1" in f.message for f in findings
+               if f.rule == "schedule")
+    rho, offered, capacity = offered_rho(compile_experiment(exp, dt=0.05))
+    assert float(rho.max()) >= 1.0
+
+
+def test_sane_schedule_is_quiet():
+    exp = scenarios.get("steady", duration=5.0).compile()
+    assert check_schedule(exp, "steady") == []
+
+
+def test_injection_after_horizon_warns():
+    exp = scenarios.get("steady", duration=5.0).compile()
+    late = replace(exp, injections=list(exp.injections) +
+                   [Injection(99.0, "set_policy", {"policy": "jsq"})])
+    findings = check_schedule(late, "late")
+    assert any("never happens" in f.message for f in findings)
+
+
+def test_zero_duration_is_an_error():
+    exp = replace(scenarios.get("steady", duration=5.0).compile(),
+                  duration=0.0)
+    findings = check_schedule(exp, "zero")
+    assert has_errors(findings)
+
+
+def test_batched_overload_uses_token_law():
+    exp = scenarios.get("batched-serving", qps=100000.0,
+                        duration=5.0).compile()
+    prog = compile_experiment(exp, dt=0.05)
+    assert prog.batched
+    rho, _, _ = offered_rho(prog)
+    assert float(rho.max()) >= 1.0
+
+
+# ---------------------------------------------------------------------------
+# CLI
+# ---------------------------------------------------------------------------
+def test_cli_check_default_is_clean(capsys):
+    from repro.analysis.__main__ import main
+    assert main(["check"]) == 0
+    out = capsys.readouterr().out
+    assert "0 error(s)" in out
+
+
+def test_cli_check_rejects_vector_hedge(capsys):
+    from repro.analysis.__main__ import main
+    rc = main(["check", "--scenario", "churn-storm",
+               "--backend", "vector"])
+    assert rc == 1
+    out = capsys.readouterr().out
+    assert "capability matrix" in out
+    assert "set_hedge" in out
+
+
+def test_cli_check_json(capsys):
+    import json
+    from repro.analysis.__main__ import main
+    assert main(["check", "--scenario", "steady", "--json"]) == 0
+    doc = json.loads(capsys.readouterr().out)
+    assert doc["summary"]["errors"] == 0

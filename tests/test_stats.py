@@ -413,3 +413,58 @@ def test_pipeline_memoizes_until_dirty():
     assert pipe2.frames() is g1
     rec2.record(_fake_req(1, 0, 0.6, 0.62))
     assert pipe2.frames() is not g1
+
+
+# ---------------------------------------------------------------------------
+# stdlib-random -> np.random.Generator migration (PR 6 regression capture)
+# ---------------------------------------------------------------------------
+def test_exact_mode_constructs_no_rng():
+    # exact mode is the bit-compatibility contract: the migration must
+    # not touch it, and it never owns an RNG at all
+    rec = LatencyRecorder(1.0, mode="exact")
+    assert not hasattr(rec, "_rand")
+
+
+def test_exact_mode_outputs_are_pure_arithmetic():
+    # regression capture: exact-mode summaries are a deterministic
+    # function of the recorded samples alone (no sampling anywhere)
+    rec = LatencyRecorder(1.0, mode="exact")
+    lats = []
+    for i in range(200):
+        t0 = 0.01 * i
+        lat = 0.001 * ((i * 37) % 100 + 1)
+        rec.record(_fake_req(i % 4, 0, t0, t0 + lat))
+        lats.append(lat)
+    s = rec.overall()
+    assert s.n == 200
+    assert s.mean == pytest.approx(float(np.mean(lats)))
+    assert s.p50 == pytest.approx(float(np.percentile(lats, 50)))
+    assert s.p99 == pytest.approx(float(np.percentile(lats, 99)))
+
+
+def test_streaming_reservoir_keyed_by_seed_and_rep():
+    def fill(seed, rep):
+        rec = LatencyRecorder(1.0, mode="streaming", seed=seed, rep=rep)
+        for i in range(5000):
+            t0 = 0.01 * i
+            rec.record(_fake_req(0, 0, t0, t0 + 0.001 * (i % 97)))
+        return rec
+
+    a, b = fill(7, 0), fill(7, 0)
+    assert a._all.res.data == b._all.res.data    # same key -> same sample
+    c = fill(7, 1)
+    assert a._all.res.data != c._all.res.data    # rep threads the stream
+    assert a.overall().n == c.overall().n == 5000
+    d = fill(8, 0)
+    assert a._all.res.data != d._all.res.data    # seed threads it too
+
+
+def test_reservoir_default_stream_is_deterministic():
+    r1, r2 = ReservoirSample(k=8, seed=3), ReservoirSample(k=8, seed=3)
+    r3 = ReservoirSample(k=8, seed=4)
+    for x in range(2000):
+        r1.add(float(x))
+        r2.add(float(x))
+        r3.add(float(x))
+    assert r1.data == r2.data
+    assert r1.data != r3.data
