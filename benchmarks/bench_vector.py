@@ -56,6 +56,9 @@ METRICS = ("p50", "p95", "p99")
 #: relative slack on the CI-overlap test (razor-thin CI pairs must not
 #: turn realization noise into a gate failure)
 REL_SLACK = 0.10
+#: committed full-grid warm points/sec of the jax path before the
+#: kernelized dispatch landed — the refactor must not fall below it
+JAX_BASELINE_PPS = 52.36
 
 
 def _fig1_point(ctx: PointCtx) -> Experiment:
@@ -92,7 +95,45 @@ def time_grid(sweep: Sweep, config=None) -> tuple:
     return frame, wall
 
 
-def grid_rows(smoke: bool) -> dict:
+def bucket_histogram(sweep: Sweep, cfg: VectorConfig) -> dict:
+    """Cells per (family, padded (T, S) bucket) — the shapes the jit
+    cache actually compiles for."""
+    from repro.vector import compile_experiment
+    from repro.vector.runtime import _plan_groups
+    progs = []
+    for i, params, rep in sweep.tasks():
+        seed, stream = sweep.seed_for(i, rep)
+        ctx = PointCtx(params=params, index=i, rep=rep, seed=seed,
+                       stream=stream)
+        obj = sweep.factory(ctx)
+        exp = obj.compile() if hasattr(obj, "compile") else obj
+        progs.append(compile_experiment(exp, dt=cfg.dt))
+    return {f"{'batched' if batched else 'scalar'}:{T}x{S}": len(idxs)
+            for batched, (T, S), idxs in _plan_groups(progs, cfg)}
+
+
+def _vector_row(label: str, cfg: VectorConfig, sweep: Sweep, n_tasks: int,
+                sim_wall: float) -> dict:
+    print(f"  vector backend ({label}) ...", file=sys.stderr, flush=True)
+    _, cold = time_grid(sweep, config=cfg)
+    frame, warm = time_grid(sweep, config=cfg)
+    warm = min(cold, warm)
+    print(f"    cold {cold:.2f}s warm {warm:.2f}s", file=sys.stderr)
+    row = {
+        "cold_wall_s": round(cold, 3),      # includes jit compile
+        "warm_wall_s": round(warm, 3),
+        "points_per_sec": round(n_tasks / warm, 2),
+        "speedup_vs_sim": round(sim_wall / warm, 2),
+        "cold_speedup_vs_sim": round(sim_wall / cold, 2),
+        "errors": len(frame.errors)}
+    if cfg.resolve_backend() == "jax":
+        row["impl"] = cfg.resolve_impl()
+        row["n_devices"] = cfg.resolve_devices()
+        row["bucket_hist"] = bucket_histogram(sweep, cfg)
+    return row
+
+
+def grid_rows(smoke: bool, impl: str = "auto") -> dict:
     n_tasks = len(build_grid(smoke, "sim").tasks())
     print(f"  serial event engine ({n_tasks} cells) ...", file=sys.stderr,
           flush=True)
@@ -102,36 +143,35 @@ def grid_rows(smoke: bool) -> dict:
            "sim": {"wall_s": round(sim_wall, 3),
                    "points_per_sec": round(n_tasks / sim_wall, 2),
                    "errors": len(sim_frame.errors)}}
-    backends = [("numpy", VectorConfig(backend="numpy"))]
+    rows = [("numpy", VectorConfig(backend="numpy"))]
     if has_jax():
-        backends.append(("jax", VectorConfig(backend="jax")))
+        jax_cfg = VectorConfig(backend="jax", impl=impl)
+        rows.append(("jax", jax_cfg))
+        if jax_cfg.resolve_impl() != "pallas":
+            # off-TPU the auto path runs the jnp reference; also record
+            # the interpret-mode Pallas row (the kernel bodies compiled
+            # through the interpreter — bit-identical, slower)
+            rows.append(("jax_pallas",
+                         VectorConfig(backend="jax", impl="pallas")))
     sweep = build_grid(smoke, "vector")
-    for label, cfg in backends:
-        print(f"  vector backend ({label}) ...", file=sys.stderr, flush=True)
-        _, cold = time_grid(sweep, config=cfg)
-        frame, warm = time_grid(sweep, config=cfg)
-        warm = min(cold, warm)
-        print(f"    cold {cold:.2f}s warm {warm:.2f}s", file=sys.stderr)
-        out[f"vector_{label}"] = {
-            "cold_wall_s": round(cold, 3),      # includes jit compile
-            "warm_wall_s": round(warm, 3),
-            "points_per_sec": round(n_tasks / warm, 2),
-            "speedup_vs_sim": round(sim_wall / warm, 2),
-            "cold_speedup_vs_sim": round(sim_wall / cold, 2),
-            "errors": len(frame.errors)}
+    for label, cfg in rows:
+        out[f"vector_{label}"] = _vector_row(label, cfg, sweep, n_tasks,
+                                             sim_wall)
     return out
 
 
 # ---------------------------------------------------------------------------
 # Equivalence gate (fig4 methodology: repeated seeded runs per backend)
 # ---------------------------------------------------------------------------
-def _run_reps(name: str, backend: str, reps: int, duration=None) -> dict:
+def _run_reps(name: str, backend: str, reps: int, duration=None,
+              impl: str = "auto") -> dict:
     vals: dict[str, list] = {m: [] for m in METRICS}
     kw = {} if duration is None else {"duration": duration}
+    cfg = VectorConfig(impl=impl)
     for rep in range(reps):
         exp = get(name, seed=spawn_seed(0x6A7E, 0, rep), **kw).compile()
         rt = SimulatorRuntime(exp, rep=rep) if backend == "sim" \
-            else VectorRuntime(exp, rep=rep)
+            else VectorRuntime(exp, rep=rep, config=cfg)
         rt.run()
         s = rt.telemetry.overall()
         for m in METRICS:
@@ -139,7 +179,7 @@ def _run_reps(name: str, backend: str, reps: int, duration=None) -> dict:
     return vals
 
 
-def equivalence_gate(smoke: bool) -> dict:
+def equivalence_gate(smoke: bool, impl: str = "auto") -> dict:
     reps = 5 if smoke else 13
     rows = []
     all_pass = True
@@ -151,7 +191,7 @@ def equivalence_gate(smoke: bool) -> dict:
         print(f"  equivalence: {name} ({reps} reps x 2 backends) ...",
               file=sys.stderr, flush=True)
         sim_vals = _run_reps(name, "sim", reps, duration)
-        vec_vals = _run_reps(name, "vector", reps, duration)
+        vec_vals = _run_reps(name, "vector", reps, duration, impl)
         for m in METRICS:
             ms, cs = confidence95(sim_vals[m])
             mv, cv = confidence95(vec_vals[m])
@@ -185,14 +225,18 @@ def main(argv=None) -> int:
                     help="exit non-zero unless the jax (or numpy-fallback) "
                          "warm speedup reaches MIN_X and the equivalence "
                          "gate passes")
+    ap.add_argument("--impl", default="auto",
+                    choices=["auto", "ref", "pallas"],
+                    help="pin the jax path's kernel impl (auto honors "
+                         "REPRO_FORCE_IMPL; all impls are bit-identical)")
     args = ap.parse_args(argv)
 
     print(f"bench_vector: fig1 grid shape "
           f"({'smoke' if args.smoke else 'full'}), jax={has_jax()}",
           file=sys.stderr)
-    grid = grid_rows(args.smoke)
+    grid = grid_rows(args.smoke, args.impl)
     print("bench_vector: equivalence gate ...", file=sys.stderr)
-    equiv = equivalence_gate(args.smoke)
+    equiv = equivalence_gate(args.smoke, args.impl)
 
     # the headline backend is whichever vector path is fastest HERE: on
     # CI-scale smoke grids the jit compile can leave numpy ahead; at
@@ -224,6 +268,16 @@ def main(argv=None) -> int:
                      "event engine"),
         },
     }
+    if "vector_jax" in grid:
+        pps = grid["vector_jax"]["points_per_sec"]
+        out["acceptance"]["jax_warm_points_per_sec"] = pps
+        out["acceptance"]["jax_impl"] = grid["vector_jax"]["impl"]
+        out["acceptance"]["n_devices"] = grid["vector_jax"]["n_devices"]
+        # the absolute floor is a full-grid number; smoke grids run a
+        # different shape, so their gate is the relative --check instead
+        if not args.smoke:
+            out["acceptance"]["meets_committed_jax_baseline"] = \
+                bool(pps >= JAX_BASELINE_PPS)
     write_record("vector", out, args.smoke)
     print(json.dumps(out["acceptance"], indent=1))
 

@@ -1,10 +1,11 @@
-"""jax purity rules for traced bodies in ``vector/``.
+"""jax purity rules for traced bodies in ``vector/`` and the vector
+Pallas kernels.
 
 A function body is considered *traced* when any of these hold:
 
 * it is decorated with ``jit`` / ``jax.jit`` (or a ``partial`` of it);
 * it is passed syntactically to ``lax.scan`` / ``jax.lax.scan`` /
-  ``jax.jit`` at a call site in the same file;
+  ``jax.jit`` / ``pl.pallas_call`` at a call site in the same file;
 * it follows the repo's scan-body convention: a (possibly nested)
   function whose parameters are exactly ``(carry, xs)`` — the shape
   ``_scalar_step``/``_batched_step`` build and hand to ``lax.scan``.
@@ -25,10 +26,13 @@ from typing import Iterator, Optional, Set
 from repro.analysis.lint.engine import Rule, SourceFile
 from repro.analysis.lint.rules import dotted_name
 
-VECTOR_SCOPE = ("vector/",)
+VECTOR_SCOPE = ("vector/", "kernels/vector_step.py",
+                "kernels/vector_quantiles.py")
 
 SCAN_CALLS = ("lax.scan", "jax.lax.scan")
 JIT_CALLS = ("jit", "jax.jit")
+#: a Pallas kernel body is a traced function too — same purity rules
+PALLAS_CALLS = ("pl.pallas_call", "pallas_call", "pallas.pallas_call")
 CONCRETIZE_BUILTINS = ("float", "int", "bool")
 
 
@@ -64,7 +68,7 @@ def _traced_callee_names(tree: ast.AST) -> Set[str]:
         if not isinstance(node, ast.Call) or not node.args:
             continue
         name = dotted_name(node.func)
-        if name in SCAN_CALLS + JIT_CALLS:
+        if name in SCAN_CALLS + JIT_CALLS + PALLAS_CALLS:
             first = dotted_name(node.args[0])
             if first is not None:
                 out.add(first.split(".")[-1])

@@ -511,21 +511,24 @@ class EngineRuntime(Runtime):
 # One entry point, either backend
 # ---------------------------------------------------------------------------
 def run_scenario(scenario, backend: str = "sim", *, rep: int = 0,
-                 engines=None, engine_factory=None, **engine_kw) -> Runtime:
+                 engines=None, engine_factory=None, vector_config=None,
+                 **engine_kw) -> Runtime:
     """Compile a ``Scenario`` and execute it on the chosen backend.
 
     ``backend="sim"`` runs the deterministic virtual-time simulator;
     ``backend="engine"`` drives the supplied engines wall-clock;
     ``backend="vector"`` runs the batched array backend (statistically
-    equivalent to ``sim``, not bit-identical — see ``repro.vector``).
-    Returns the finished ``Runtime`` (telemetry under ``.telemetry``).
+    equivalent to ``sim``, not bit-identical — see ``repro.vector``;
+    ``vector_config`` tunes its impl / device / bucketing knobs, all
+    bit-preserving).  Returns the finished ``Runtime`` (telemetry under
+    ``.telemetry``).
     """
     exp = scenario.compile()
     if backend == "sim":
         rt: Runtime = SimulatorRuntime(exp, rep=rep)
     elif backend == "vector":
         from repro.vector import VectorRuntime
-        rt = VectorRuntime(exp, rep=rep)
+        rt = VectorRuntime(exp, rep=rep, config=vector_config)
     elif backend == "engine":
         if engines is None:
             raise ValueError("backend='engine' needs engines=")

@@ -273,6 +273,29 @@ def pctl(xs, q: float) -> float:
     return float(np.percentile(_as_float_array(xs), q))
 
 
+#: (n, qs) -> (kth, lo, hi, t): the order-statistic plan for one sample
+#: size.  ``np.unique(np.concatenate([lo, hi]))`` costs more than the
+#: partition itself when called once per grid cell x interval, and the
+#: vector runtime asks for the same fixed (50, 95, 99) tuple at a small
+#: set of sizes — hoist the plan and reuse it.
+_QPLAN_CACHE: dict = {}
+_QPLAN_CACHE_CAP = 4096
+
+
+def _quantile_plan(n: int, qs: tuple) -> tuple:
+    key = (n, qs)
+    plan = _QPLAN_CACHE.get(key)
+    if plan is None:
+        pos = np.asarray(qs, float) / 100.0 * (n - 1)
+        lo = np.floor(pos).astype(np.intp)
+        hi = np.ceil(pos).astype(np.intp)
+        kth = np.unique(np.concatenate([lo, hi]))
+        if len(_QPLAN_CACHE) >= _QPLAN_CACHE_CAP:
+            _QPLAN_CACHE.clear()
+        plan = _QPLAN_CACHE[key] = (kth, lo, hi, pos - lo)
+    return plan
+
+
 def quantiles_partition(xs, qs) -> np.ndarray:
     """``np.percentile``-style linear-interpolation quantiles via ONE
     ``np.partition`` pass: partially sorts only the floor/ceil order
@@ -280,20 +303,32 @@ def quantiles_partition(xs, qs) -> np.ndarray:
     O(n log n) sort, and one pass for all quantiles.  This is the
     vector-runtime extraction path (one call per grid cell)."""
     xs = np.asarray(xs, float)
-    qs = np.asarray(qs, float)
     n = xs.size
     if n == 0:
-        return np.full(qs.shape, float("nan"))
-    pos = qs / 100.0 * (n - 1)
-    lo = np.floor(pos).astype(np.intp)
-    hi = np.ceil(pos).astype(np.intp)
-    part = np.partition(xs, np.unique(np.concatenate([lo, hi])))
-    t = pos - lo
+        return np.full(np.asarray(qs, float).shape, float("nan"))
+    kth, lo, hi, t = _quantile_plan(n, tuple(float(q) for q in qs))
+    part = np.partition(xs, kth)
     a, b = part[lo], part[hi]
     # numpy's lerp: anchor on the nearer endpoint for t >= 0.5
     out = a + (b - a) * t
     flip = t >= 0.5
     out[flip] = b[flip] - (b[flip] - a[flip]) * (1.0 - t[flip])
+    return out
+
+
+def quantiles_partition_batched(mat: np.ndarray, counts,
+                                qs) -> np.ndarray:
+    """Row-wise ``quantiles_partition`` over a padded ``[C, K]`` matrix
+    (row ``i`` holds ``counts[i]`` valid samples, padding beyond).  Runs
+    the SAME partition + lerp per row, so its output is bit-for-bit the
+    scalar path's — the contract the vector runtime's fused extraction
+    relies on (and a test asserts)."""
+    counts = np.asarray(counts)
+    qs = tuple(float(q) for q in qs)
+    out = np.full((counts.size, len(qs)), float("nan"))
+    for i, n in enumerate(counts):
+        if n:
+            out[i] = quantiles_partition(mat[i, :int(n)], qs)
     return out
 
 

@@ -24,6 +24,11 @@ def _resolve(impl: str) -> str:
     return impl
 
 
+#: public alias — the vector runtime resolves its impl knob up front so
+#: the choice can enter its jit-cache key
+resolve_impl = _resolve
+
+
 def _interpret() -> bool:
     return jax.default_backend() != "tpu"
 
@@ -51,6 +56,38 @@ def decode_attention(q, k, v, *, lengths, key_positions=None, q_pos=None,
     return da.decode_attention(q, k, v, lengths=lengths,
                                key_positions=key_positions, q_pos=q_pos,
                                window=window, interpret=_interpret())
+
+
+def vector_slot_advance(family: str, consts: dict, carry, xs, *,
+                        impl: str = "auto"):
+    """One vector-runtime scan step ("scalar" or "batched" family).
+
+    Called from inside the runtime's ``lax.scan`` body; resolution is
+    trace-time static.  The ref path and the interpret-mode Pallas path
+    execute the same step math (see ``vector_step``) — bit-equal.
+    """
+    impl = _resolve(impl)
+    if impl == "ref":
+        return _ref.vector_slot_advance(family, consts, carry, xs)
+    from repro.kernels import vector_step as vs
+    fn = (vs.scalar_slot_advance if family == "scalar"
+          else vs.batched_slot_advance)
+    return fn(consts, carry, xs, interpret=_interpret())
+
+
+def vector_quantiles(lat, counts, *, impl: str = "auto"):
+    """Fused p50/p95/p99 for every grid cell in one launch.
+
+    ``lat``: [C, K] f32 rows padded with +inf past ``counts[i]``;
+    ``counts``: [C] int32 -> [C, 3] (NaN rows where the count is 0).
+    The Pallas radix-select kernel and the sort oracle both select
+    exact order statistics: their outputs are bit-equal.
+    """
+    impl = _resolve(impl)
+    if impl == "ref":
+        return _ref.fused_quantiles(lat, counts)
+    from repro.kernels import vector_quantiles as vq
+    return vq.fused_quantiles(lat, counts, interpret=_interpret())
 
 
 def ssd_scan(x, dt, A, B, C, *, chunk: int = 256, h0=None, impl: str = "auto"):

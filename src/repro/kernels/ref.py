@@ -92,6 +92,64 @@ def decode_attention(q, k, v, *, lengths, window: Optional[int] = None,
 
 
 # ---------------------------------------------------------------------------
+# Vector runtime: slot advance + fused streaming quantiles
+# ---------------------------------------------------------------------------
+def vector_slot_advance(family: str, consts: dict, carry, xs):
+    """One vector-runtime scan step on plain jnp ops.
+
+    The oracle IS the runtime's step math (``_scalar_step`` /
+    ``_batched_step`` instantiated with ``jnp``): the Pallas kernel body
+    calls the same functions on its tiles, so in interpret mode the two
+    paths execute identical op sequences — bit-equal, not just close.
+    """
+    from repro.vector.runtime import _batched_step, _scalar_step
+    builder = _scalar_step if family == "scalar" else _batched_step
+    return builder(jnp, consts)(carry, xs)
+
+
+#: the fixed quantile tuple the vector runtime extracts
+VECTOR_QS = (50.0, 95.0, 99.0)
+
+
+def quantile_ranks(n, qs=VECTOR_QS):
+    """np.percentile's floor/ceil order statistics for each quantile of
+    a ``[C]`` batch of sample counts -> (pos, lo, hi), each ``[C, Q]``
+    f32/int32.  Shared verbatim by the sort oracle and the radix-select
+    kernel body so both interpolate between the SAME ranks."""
+    nf = n.astype(F32)
+    pos = jnp.stack([q / 100.0 * (nf - 1.0) for q in qs], axis=-1)
+    lo = jnp.floor(pos)
+    hi = jnp.ceil(pos)
+    return pos, lo.astype(jnp.int32), hi.astype(jnp.int32)
+
+
+def quantile_lerp(a, b, t):
+    """numpy's percentile lerp: anchor on the nearer endpoint for
+    t >= 0.5 (identical to ``quantiles_partition``'s flip)."""
+    return jnp.where(t >= 0.5, b - (b - a) * (1.0 - t), a + (b - a) * t)
+
+
+def fused_quantiles(lat, counts, qs=VECTOR_QS):
+    """Sort-based oracle for the fused streaming-quantile kernel.
+
+    ``lat``: ``[C, K]`` f32, row ``i`` holds ``counts[i]`` valid
+    samples then ``+inf`` padding (order-preserving under the kernel's
+    uint32 bitcast).  Returns ``[C, len(qs)]`` exact-order-statistic
+    quantiles, NaN where ``counts == 0``.  Bit-equal to the Pallas
+    radix-select kernel: both select true array elements at the same
+    ranks and share ``quantile_ranks``/``quantile_lerp``.
+    """
+    x = jnp.sort(lat.astype(F32), axis=-1)
+    pos, lo, hi = quantile_ranks(counts, qs)
+    safe_lo = jnp.clip(lo, 0, x.shape[-1] - 1)
+    safe_hi = jnp.clip(hi, 0, x.shape[-1] - 1)
+    a = jnp.take_along_axis(x, safe_lo, axis=-1)
+    b = jnp.take_along_axis(x, safe_hi, axis=-1)
+    out = quantile_lerp(a, b, pos - lo.astype(F32))
+    return jnp.where(counts[:, None] > 0, out, jnp.nan)
+
+
+# ---------------------------------------------------------------------------
 # Mamba-2 SSD
 # ---------------------------------------------------------------------------
 def ssd_naive(x, dt, A, B, C, h0=None):

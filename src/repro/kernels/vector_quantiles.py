@@ -1,0 +1,78 @@
+"""Fused streaming-quantile kernel for the vector runtime.
+
+One ``pl.pallas_call`` produces p50/p95/p99 for EVERY grid cell in a
+single launch, replacing the per-cell ``quantiles_partition`` loop of
+the extraction path.  Rows are ``[cell, sample]`` f32 tiles padded
+with ``+inf`` past each cell's count.
+
+Sorting networks are awkward on TPU tiles; instead the kernel runs an
+exact **radix select**: non-negative f32 latencies bitcast to uint32
+order-preservingly (``+inf`` padding sorts last), and 32 bit-sliced
+rounds recover the floor/ceil order statistics of every quantile by
+counting values below each candidate prefix.  The selected values are
+true array elements — bit-equal to the ``jnp.sort`` oracle
+(``ref.fused_quantiles``), which the kernel shares its rank and lerp
+math with (``ref.quantile_ranks`` / ``ref.quantile_lerp``).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.ref import VECTOR_QS, quantile_lerp, quantile_ranks
+
+#: cells per kernel instance (f32 sublane tile)
+CELL_TILE = 8
+#: sample-axis padding multiple (f32 lane tile)
+LANE = 128
+
+
+def _quantile_kernel(lat_ref, cnt_ref, out_ref):
+    x = lat_ref[...]                              # [CT, K] f32
+    n = cnt_ref[...][:, 0]                        # [CT] int32
+    pos, lo, hi = quantile_ranks(n, VECTOR_QS)    # [CT, Q]
+    ranks = jnp.concatenate([lo, hi], axis=-1)    # [CT, 2Q]
+    u = jax.lax.bitcast_convert_type(x, jnp.uint32)
+
+    def bit_round(b, prefix):
+        bit = jax.lax.shift_right_logical(jnp.uint32(0x80000000),
+                                          b.astype(jnp.uint32))
+        cand = prefix | bit
+        below = (u[:, None, :] < cand[:, :, None])
+        n_below = jnp.sum(below.astype(jnp.int32), axis=-1)   # [CT, 2Q]
+        # fewer than rank+1 values below the candidate -> the rank-th
+        # order statistic is >= cand -> the bit survives
+        return jnp.where(n_below <= ranks, cand, prefix)
+
+    prefix = jax.lax.fori_loop(0, 32, bit_round,
+                               jnp.zeros(ranks.shape, jnp.uint32))
+    sel = jax.lax.bitcast_convert_type(prefix, jnp.float32)
+    q = len(VECTOR_QS)
+    a, b = sel[:, :q], sel[:, q:]
+    out = quantile_lerp(a, b, pos - lo.astype(jnp.float32))
+    out_ref[...] = jnp.where(n[:, None] > 0, out, jnp.nan)
+
+
+def fused_quantiles(lat, counts, *, interpret: bool = False,
+                    cell_tile: int = CELL_TILE):
+    """``lat``: [C, K] f32 (+inf padded past ``counts``); ``counts``:
+    [C] int32 -> [C, 3] p50/p95/p99 (NaN rows where count is 0)."""
+    C, K = lat.shape
+    q = len(VECTOR_QS)
+    c_pad = -(-C // cell_tile) * cell_tile
+    k_pad = -(-max(K, 1) // LANE) * LANE
+    lat = jnp.pad(lat.astype(jnp.float32),
+                  ((0, c_pad - C), (0, k_pad - K)),
+                  constant_values=jnp.inf)
+    cnt = jnp.pad(counts.astype(jnp.int32), (0, c_pad - C))[:, None]
+    out = pl.pallas_call(
+        _quantile_kernel,
+        grid=(c_pad // cell_tile,),
+        in_specs=[pl.BlockSpec((cell_tile, k_pad), lambda i: (i, 0)),
+                  pl.BlockSpec((cell_tile, 1), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((cell_tile, q), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((c_pad, q), jnp.float32),
+        interpret=interpret,
+    )(lat, cnt)
+    return out[:C]

@@ -1,0 +1,168 @@
+"""Pallas slot-advance kernels for the vector runtime.
+
+Each ``lax.scan`` slot of the vector runtime becomes ONE
+``pl.pallas_call`` over ``[cell, server]`` tiles — the water-fill /
+Erlang-C-wait scalar family and the roofline batched family each get a
+fused kernel instead of a chain of generic XLA ops.
+
+The kernel bodies do not reimplement the queueing math: they call the
+runtime's own ``_scalar_step`` / ``_batched_step`` (instantiated with
+``jnp``) on their tiles.  Every reduction in that math runs over the
+server axis only, so tiling the cell axis cannot change bits — in
+interpret mode the kernels are bit-equal to the jnp reference path,
+which is what the determinism tests pin.
+
+The batched family's roofline constants (t_memory, t_compute/seq, mean
+decode tokens) are staged into a VMEM scratch tile once per kernel
+instance and broadcast from there against every server lane.  The
+Erlang-C ``lgamma`` table never enters the kernels at all: by design
+the stationary-wait law is precomputed host-side from the
+deterministic offered load (see ``runtime._erlang_c``) — only the
+fluid state advance runs in the scan.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.vector.runtime import _batched_step, _scalar_step
+
+#: cells per kernel instance (f32 sublane tile)
+CELL_TILE = 8
+
+
+def _scalar_kernel(t_ref, dt_ref, c_ref, fail_ref,
+                   Nc_ref, Wc_ref, Nf_ref, Wf_ref, act_ref, acc_ref,
+                   spd_ref, U_ref, Q_ref, drops_ref,
+                   U_out, Q_out, drops_out, waitU_out, waitf_out,
+                   served_out, drained_out, Qs_out):
+    consts = {"c": c_ref[...], "fail_slot": fail_ref[...],
+              "dt": dt_ref[0, 0]}
+    carry = (U_ref[...], Q_ref[...], drops_ref[:, 0])
+    xs = (t_ref[0, 0], Nc_ref[...], Wc_ref[...], Nf_ref[:, 0],
+          Wf_ref[:, 0], act_ref[...], acc_ref[...], spd_ref[...])
+    (U, Q, drops), ys = _scalar_step(jnp, consts)(carry, xs)
+    U_out[...] = U
+    Q_out[...] = Q
+    drops_out[...] = drops[:, None]
+    waitU_out[...] = ys[0]
+    waitf_out[...] = ys[1][:, None]
+    served_out[...] = ys[2]
+    drained_out[...] = ys[3]
+    Qs_out[...] = ys[4]
+
+
+def _batched_kernel(t_ref, dt_ref, c_ref, fail_ref, tm_ref, tc_ref,
+                    nm_ref, Nc_ref, Wpc_ref, Wtc_ref, Nf_ref, Wpf_ref,
+                    Wtf_ref, act_ref, acc_ref, spd_ref,
+                    P_ref, T_ref, L_ref, drops_ref,
+                    P_out, T_out, L_out, drops_out, wadm_out, sth_out,
+                    narr_out, served_out, busy_out, Ls_out, tok_out,
+                    roof_ref):
+    # stage the roofline constants into scratch once per tile; the step
+    # math broadcasts them against every server lane
+    roof_ref[...] = jnp.concatenate(
+        [tm_ref[...], tc_ref[...], nm_ref[...]], axis=-1)
+    roof = roof_ref[...]
+    consts = {"c": c_ref[...], "fail_slot": fail_ref[...],
+              "dt": dt_ref[0, 0], "tm": roof[:, 0:1], "tc": roof[:, 1:2],
+              "new_mean": roof[:, 2:3]}
+    carry = (P_ref[...], T_ref[...], L_ref[...], drops_ref[:, 0])
+    xs = (t_ref[0, 0], Nc_ref[...], Wpc_ref[...], Wtc_ref[...],
+          Nf_ref[:, 0], Wpf_ref[:, 0], Wtf_ref[:, 0], act_ref[...],
+          acc_ref[...], spd_ref[...])
+    (P, T, L, drops), ys = _batched_step(jnp, consts)(carry, xs)
+    P_out[...] = P
+    T_out[...] = T
+    L_out[...] = L
+    drops_out[...] = drops[:, None]
+    wadm_out[...] = ys[0]
+    sth_out[...] = ys[1]
+    narr_out[...] = ys[2]
+    served_out[...] = ys[3]
+    busy_out[...] = ys[4]
+    Ls_out[...] = ys[5]
+    tok_out[...] = ys[6]
+
+
+def _block(cell_tile: int, width: int):
+    return pl.BlockSpec((cell_tile, width), lambda i: (i, 0))
+
+
+def _scalar_block():
+    return pl.BlockSpec((1, 1), lambda i: (0, 0))
+
+
+def scalar_slot_advance(consts: dict, carry, xs, *,
+                        interpret: bool = False,
+                        cell_tile: int = CELL_TILE):
+    """One scalar-family slot advance as a fused kernel.  Shapes follow
+    the scan: carry ``(U[C,S], Q[C,S], drops[C])``, xs ``(t, Nc, Wc,
+    Nf[C], Wf[C], act, acc, spd)``."""
+    U, Q, drops = carry
+    t, Nc, Wc, Nf, Wf, act, acc, spd = xs
+    C, S = U.shape
+    if C % cell_tile:
+        raise ValueError(f"cell axis {C} not a multiple of {cell_tile}")
+    f32 = jnp.float32
+    row, col, one = (lambda: _block(cell_tile, S),
+                     lambda: _block(cell_tile, 1), _scalar_block)
+    sds = jax.ShapeDtypeStruct
+    outs = pl.pallas_call(
+        _scalar_kernel,
+        grid=(C // cell_tile,),
+        in_specs=[one(), one(), row(), row(), row(), row(), col(),
+                  col(), row(), row(), row(), row(), row(), col()],
+        out_specs=[row(), row(), col(), row(), col(), row(), row(),
+                   row()],
+        out_shape=[sds((C, S), f32), sds((C, S), f32), sds((C, 1), f32),
+                   sds((C, S), f32), sds((C, 1), f32), sds((C, S), f32),
+                   sds((C, S), f32), sds((C, S), f32)],
+        interpret=interpret,
+    )(jnp.reshape(jnp.asarray(t, jnp.int32), (1, 1)),
+      jnp.reshape(jnp.asarray(consts["dt"], f32), (1, 1)),
+      consts["c"], consts["fail_slot"], Nc, Wc, Nf[:, None],
+      Wf[:, None], act, acc, spd, U, Q, drops[:, None])
+    U2, Q2, d2, waitU, waitf, served, drained, Qs = outs
+    return (U2, Q2, d2[:, 0]), (waitU, waitf[:, 0], served, drained, Qs)
+
+
+def batched_slot_advance(consts: dict, carry, xs, *,
+                         interpret: bool = False,
+                         cell_tile: int = CELL_TILE):
+    """One batched-family (roofline) slot advance as a fused kernel.
+    carry ``(P, T, L [C,S], drops[C])``, xs ``(t, Nc, Wpc, Wtc, Nf[C],
+    Wpf[C], Wtf[C], act, acc, spd)``."""
+    P, T, L, drops = carry
+    t, Nc, Wpc, Wtc, Nf, Wpf, Wtf, act, acc, spd = xs
+    C, S = P.shape
+    if C % cell_tile:
+        raise ValueError(f"cell axis {C} not a multiple of {cell_tile}")
+    f32 = jnp.float32
+    row, col, one = (lambda: _block(cell_tile, S),
+                     lambda: _block(cell_tile, 1), _scalar_block)
+    sds = jax.ShapeDtypeStruct
+    outs = pl.pallas_call(
+        _batched_kernel,
+        grid=(C // cell_tile,),
+        in_specs=[one(), one(), row(), row(), col(), col(), col(),
+                  row(), row(), row(), col(), col(), col(), row(),
+                  row(), row(), row(), row(), row(), col()],
+        out_specs=[row(), row(), row(), col(), row(), row(), row(),
+                   row(), row(), row(), row()],
+        out_shape=[sds((C, S), f32), sds((C, S), f32), sds((C, S), f32),
+                   sds((C, 1), f32), sds((C, S), f32), sds((C, S), f32),
+                   sds((C, S), f32), sds((C, S), f32), sds((C, S), f32),
+                   sds((C, S), f32), sds((C, S), f32)],
+        scratch_shapes=[pltpu.VMEM((cell_tile, 3), f32)],
+        interpret=interpret,
+    )(jnp.reshape(jnp.asarray(t, jnp.int32), (1, 1)),
+      jnp.reshape(jnp.asarray(consts["dt"], f32), (1, 1)),
+      consts["c"], consts["fail_slot"], consts["tm"], consts["tc"],
+      consts["new_mean"], Nc, Wpc, Wtc, Nf[:, None], Wpf[:, None],
+      Wtf[:, None], act, acc, spd, P, T, L, drops[:, None])
+    P2, T2, L2, d2, wadm, sth, narr, served, busy, Ls, tok = outs
+    return ((P2, T2, L2, d2[:, 0]),
+            (wadm, sth, narr, served, busy, Ls, tok))

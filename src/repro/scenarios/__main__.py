@@ -80,6 +80,18 @@ def main(argv=None) -> int:
     ap.add_argument("--max-batch", type=int, default=4)
     ap.add_argument("--time-scale", type=float, default=1.0,
                     help="engine backend: virtual->wall time stretch")
+    # vector-backend options (all bit-preserving — see repro.vector)
+    ap.add_argument("--vector-impl", default="auto",
+                    choices=["auto", "ref", "pallas"],
+                    help="vector backend: kernel impl (auto = Pallas on "
+                         "TPU, jnp reference elsewhere)")
+    ap.add_argument("--vector-backend", default="auto",
+                    choices=["auto", "jax", "numpy"],
+                    help="vector backend: array backend (auto = jax when "
+                         "importable)")
+    ap.add_argument("--vector-devices", type=int, default=0,
+                    help="vector backend: shard cells over N local "
+                         "devices (0 = all)")
     args = ap.parse_args(argv)
 
     if args.list or not args.name:
@@ -98,7 +110,13 @@ def main(argv=None) -> int:
     sc = scenarios.get(args.name, seed=args.seed, **overrides)
 
     if args.backend in ("sim", "vector"):
-        rt = run_scenario(sc, args.backend)
+        vcfg = None
+        if args.backend == "vector":
+            from repro.vector import VectorConfig
+            vcfg = VectorConfig(backend=args.vector_backend,
+                                impl=args.vector_impl,
+                                devices=args.vector_devices)
+        rt = run_scenario(sc, args.backend, vector_config=vcfg)
     else:
         from repro.scenarios.backends import (build_stub_engines,
                                               run_experiment_on_real_engines)

@@ -157,6 +157,17 @@ def main(argv=None) -> int:
     ap.add_argument("--executor", default="serial",
                     choices=["serial", "process"])
     ap.add_argument("--workers", type=int, default=None)
+    # vector grid-path knobs (all bit-preserving — see repro.vector)
+    ap.add_argument("--vector-impl", default="auto",
+                    choices=["auto", "ref", "pallas"],
+                    help="vector grid: kernel impl (auto = Pallas on TPU, "
+                         "jnp reference elsewhere)")
+    ap.add_argument("--vector-backend", default="auto",
+                    choices=["auto", "jax", "numpy"],
+                    help="vector grid: array backend")
+    ap.add_argument("--vector-devices", type=int, default=0,
+                    help="vector grid: shard cells over N local devices "
+                         "(0 = all)")
     ap.add_argument("--out", default=OUT_DEFAULT,
                     help=f"artifact directory (default {OUT_DEFAULT})")
     ap.add_argument("--quiet", action="store_true",
@@ -202,8 +213,12 @@ def main(argv=None) -> int:
     def _progress(msg: str) -> None:
         print(msg, file=sys.stderr, flush=True)
 
+    from repro.vector import VectorConfig
+    vcfg = VectorConfig(backend=args.vector_backend, impl=args.vector_impl,
+                        devices=args.vector_devices)
     frame = run_sweep(sweep, executor=args.executor, workers=args.workers,
-                      progress=None if args.quiet else _progress)
+                      progress=None if args.quiet else _progress,
+                      vector_config=vcfg)
     json_path = os.path.join(args.out, f"{frame.name}.json")
     csv_path = os.path.join(args.out, f"{frame.name}.csv")
     frame.to_json(json_path)

@@ -38,7 +38,7 @@ from repro.sweep.spec import EXTRA_METRICS, PointCtx, SUMMARY_METRICS, Sweep
 # ---------------------------------------------------------------------------
 # One task = one (point, rep) run
 # ---------------------------------------------------------------------------
-def _build_runtime(sweep: Sweep, exp, ctx: PointCtx):
+def _build_runtime(sweep: Sweep, exp, ctx: PointCtx, vector_config=None):
     runtime = ctx.params.get("runtime", sweep.runtime)
     if runtime == "sim":
         from repro.core.runtime import SimulatorRuntime
@@ -61,7 +61,7 @@ def _build_runtime(sweep: Sweep, exp, ctx: PointCtx):
         # vector tasks into one array program; per-cell RNG derivation
         # makes the two paths bit-identical)
         from repro.vector import VectorRuntime
-        rt = VectorRuntime(exp, rep=ctx.stream)
+        rt = VectorRuntime(exp, rep=ctx.stream, config=vector_config)
         rt.run()
         return rt
     raise ValueError(f"unknown runtime: {runtime!r}")
@@ -255,7 +255,8 @@ def mp_context():
 def run_sweep(sweep: Sweep, executor: str = "serial",
               workers: Optional[int] = None,
               progress: Optional[Callable[[str], None]] = _log,
-              fail_fast: bool = False) -> ResultFrame:
+              fail_fast: bool = False,
+              vector_config=None) -> ResultFrame:
     """Execute a ``Sweep`` and return its ``ResultFrame``.
 
     ``executor="serial"`` runs in-process; ``"process"`` fans the tasks
@@ -266,7 +267,9 @@ def run_sweep(sweep: Sweep, executor: str = "serial",
     silence it.  ``fail_fast=True`` re-raises a task's ORIGINAL
     exception at the first failure instead of recording an error row —
     for shims like ``run_repeated`` whose callers expect the historical
-    propagation semantics.
+    propagation semantics.  ``vector_config`` (a ``VectorConfig``)
+    tunes the vector grid path's impl / device / bucketing knobs; all
+    of them are bit-preserving, so it cannot change rows.
     """
     tasks = sweep.tasks()
     total = len(tasks)
@@ -289,7 +292,8 @@ def run_sweep(sweep: Sweep, executor: str = "serial",
     done = 0
     if vec_tasks:
         for k, row in run_vector_tasks(sweep, vec_tasks,
-                                       fail_fast=fail_fast).items():
+                                       fail_fast=fail_fast,
+                                       config=vector_config).items():
             rows[k] = row
             done += 1
             note(done, row)

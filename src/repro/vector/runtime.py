@@ -23,12 +23,25 @@ through ``n_slots`` fixed steps of width ``dt``:
 Latency percentiles come from per-request samples (slot drawn from the
 realized arrival weights, own service drawn from the exact law, wait
 from the slot's state), censored at the horizon and at server-failure
-instants exactly like the event engine's recorder, and extracted in
-one ``np.partition`` pass per cell.
+instants exactly like the event engine's recorder, and extracted for
+the whole grid chunk in ONE fused quantile pass.
+
+On the jax backend the scan body dispatches through
+``repro.kernels.ops``: ``impl="pallas"`` runs each slot advance as one
+``pl.pallas_call`` over ``[cell, server]`` tiles (interpret mode off
+TPU), ``impl="ref"`` the plain-jnp step, ``"auto"`` picks per
+``jax.default_backend()`` with the ``REPRO_FORCE_IMPL`` env override.
+Cells are grouped into geometric (T, S) shape buckets (one jit trace
+per bucket, not per exact shape) and the cell axis is laid across the
+local devices via ``shard_map``.  All three choices are
+bit-preserving: every reduction in the step math runs over the server
+axis, so ref / pallas-interpret / sharded execution produce identical
+rows for identical seeds.
 """
 from __future__ import annotations
 
 import math
+from collections import OrderedDict
 from dataclasses import dataclass, field
 from typing import Optional, Sequence
 
@@ -57,7 +70,13 @@ class VectorConfig:
     dt: float = 0.005               # slot width (seconds)
     samples: int = 32768            # latency-sample budget per cell
     backend: str = "auto"           # auto | jax | numpy
+    impl: str = "auto"              # auto | pallas | ref (jax backend;
+                                    # REPRO_FORCE_IMPL overrides "auto")
     jit: bool = True                # wrap the jax scan in jax.jit
+    devices: int = 0                # cell-axis sharding: 0 = every local
+                                    # device (auto), N >= 1 pins the mesh
+                                    # size (1 still runs the shard layer)
+    bucket: bool = True             # geometric (T, S) shape-bucketing
     max_slot_elems: int = 64_000_000   # chunk cells when T*C*S exceeds this
 
     def resolve_backend(self) -> str:
@@ -67,6 +86,18 @@ class VectorConfig:
             raise RuntimeError("backend='jax' requested but jax is not "
                                "importable (use 'numpy' or 'auto')")
         return self.backend
+
+    def resolve_impl(self) -> str:
+        """Resolved scan-step impl for the jax backend."""
+        from repro.kernels.ops import resolve_impl
+        return resolve_impl(self.impl)
+
+    def resolve_devices(self) -> int:
+        import jax
+        avail = len(jax.local_devices())
+        if self.devices <= 0:
+            return avail
+        return max(1, min(self.devices, avail))
 
 
 # ---------------------------------------------------------------------------
@@ -100,18 +131,24 @@ class VectorResult:
 def _waterfill(xp, U_eff, total):
     """Distribute ``total`` [C] of work over the least-loaded lanes of
     ``U_eff`` [C, S] (masked lanes carry ``_BIG``): fill to a common
-    level.  -> per-lane fill amounts [C, S]."""
-    S = U_eff.shape[-1]
-    sortU = xp.sort(U_eff, axis=-1)
-    prefix = xp.cumsum(sortU, axis=-1)
-    js = xp.arange(1, S + 1)
-    level = (total[..., None] + prefix) / js
-    # valid j: level within [sortU[j-1], sortU[j]] (last j open above)
-    upper = xp.concatenate([sortU[..., 1:],
-                            xp.full(sortU[..., :1].shape, _BIG)], axis=-1)
-    valid = (level >= sortU - 1e-9) & (level <= upper + 1e-9)
-    idx = xp.argmax(valid, axis=-1)
-    L = xp.take_along_axis(level, idx[..., None], axis=-1)
+    level.  -> per-lane fill amounts [C, S].
+
+    Sort-free formulation (Pallas kernel bodies cannot sort): lane k
+    proposes the level reached if exactly the lanes at-or-below it
+    share the work, ``L_k = (total + sum_{U_i <= U_k} U_i) /
+    |{U_i <= U_k}|``.  Every proposal upper-bounds the true level
+    (``sum_A (L_k - U_i) = total = sum_i (L* - U_i)^+ >=
+    sum_A (L* - U_i)``), and the true active set attains it — so the
+    level is exactly ``min_k L_k``, no bracket test needed.  O(S^2)
+    broadcasts over the server axis only, so cell-axis tiling and
+    sharding cannot change bits."""
+    mine = U_eff[..., :, None]                    # proposing lane k
+    other = U_eff[..., None, :]                   # every lane i
+    le = other <= mine
+    cnt = xp.sum(xp.where(le, 1.0, 0.0), axis=-1)
+    wsum = xp.sum(xp.where(le, other, 0.0), axis=-1)
+    level = (total[..., None] + wsum) / xp.maximum(cnt, 1.0)
+    L = xp.min(level, axis=-1, keepdims=True)
     return xp.clip(L - U_eff, 0.0, None)
 
 
@@ -261,42 +298,127 @@ def _scan_numpy(step, carry, xs_seq, n_slots: int):
     return carry, outs
 
 
-#: (step_builder, jit_flag) -> compiled runner; consts enter as traced
-#: pytree arguments, so one trace serves every grid of the same shape
-#: signature — repeated sweeps and same-shape chunks pay the jit
-#: compile once per process, not once per call
-_JIT_CACHE: dict = {}
+#: (step_builder, jit, impl, shard, padded shapes) -> compiled runner.
+#: consts enter as traced pytree arguments, so one entry serves every
+#: grid with the same signature; shape-bucketing keeps the key set
+#: small, and the LRU cap bounds the resident compile footprint across
+#: long sessions (eviction only costs a recompile, never bits).
+_JIT_CACHE: OrderedDict = OrderedDict()
+_JIT_CACHE_CAP = 8
 
 
-def _jax_runner(step_builder, jit: bool):
-    key = (step_builder, jit)
+def _jax_runner(step_builder, jit: bool, impl: str, shard: int,
+                shape_key: tuple):
+    key = (step_builder, jit, impl, shard, shape_key)
     fn = _JIT_CACHE.get(key)
-    if fn is None:
-        import jax
-        import jax.numpy as jnp
+    if fn is not None:
+        _JIT_CACHE.move_to_end(key)
+        return fn
+    import jax
+    import jax.numpy as jnp
 
-        def run(consts, carry, xs):
-            return jax.lax.scan(step_builder(jnp, consts), carry, xs)
+    family = "batched" if step_builder is _batched_step else "scalar"
+    if impl == "ref":
+        def make_step(consts):
+            return step_builder(jnp, consts)
+    else:
+        from repro.kernels import ops as kernel_ops
 
-        fn = _JIT_CACHE[key] = jax.jit(run) if jit else run
+        def make_step(consts):
+            def step(carry, xs):
+                return kernel_ops.vector_slot_advance(
+                    family, consts, carry, xs, impl=impl)
+            return step
+
+    def run(consts, carry, xs):
+        return jax.lax.scan(make_step(consts), carry, xs)
+
+    if shard:
+        run = _shard_cells(run, family, shard)
+    fn = jax.jit(run) if jit else run
+    _JIT_CACHE[key] = fn
+    while len(_JIT_CACHE) > _JIT_CACHE_CAP:
+        _JIT_CACHE.popitem(last=False)
     return fn
 
 
-def _scan_jax(step_builder, consts, carry, xs_seq, jit: bool):
+def _shard_cells(run, family: str, n_dev: int):
+    """Lay the cell axis across ``n_dev`` local devices via
+    ``shard_map``.  Every reduction in the step math runs over the
+    server axis, so the sharded program is bit-identical to the
+    single-device one (a test pins this)."""
+    import jax
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import Mesh, PartitionSpec
+
+    cell = PartitionSpec("cells")          # [C, ...] leading cell axis
+    seq = PartitionSpec(None, "cells")     # [T, C, ...] scan sequences
+    none = PartitionSpec()
+    if family == "scalar":
+        const_spec = {"c": cell, "fail_slot": cell, "dt": none}
+        n_carry, n_xs, n_ys = 3, 8, 5
+    else:
+        const_spec = {"c": cell, "fail_slot": cell, "dt": none,
+                      "tm": cell, "tc": cell, "new_mean": cell}
+        n_carry, n_xs, n_ys = 4, 10, 7
+    in_specs = (const_spec, (cell,) * n_carry,
+                (none,) + (seq,) * (n_xs - 1))
+    out_specs = ((cell,) * n_carry, (seq,) * n_ys)
+    mesh = Mesh(np.array(jax.devices()[:n_dev]), ("cells",))
+    return shard_map(run, mesh=mesh, in_specs=in_specs,
+                     out_specs=out_specs, check_rep=False)
+
+
+#: cell-padding fills that keep padded (dead) cells NaN-free: no
+#: failure slot, unit roofline times; everything else zero
+_CELL_PAD_FILL = {"fail_slot": -1, "tm": 1.0, "tc": 1.0, "new_mean": 1.0}
+
+
+def _pad_cell_axis(a: np.ndarray, pad: int, axis: int, fill=0.0):
+    width = [(0, 0)] * a.ndim
+    width[axis] = (0, pad)
+    return np.pad(a, width, constant_values=fill)
+
+
+def _scan_jax(step_builder, consts, carry, xs_seq, cfg: VectorConfig):
     import jax.numpy as jnp
 
+    impl = cfg.resolve_impl()
+    n_dev = cfg.resolve_devices()
+    use_shard = n_dev > 1 or cfg.devices >= 1
+    if impl == "pallas":
+        from repro.kernels.vector_step import CELL_TILE as tile
+    else:
+        tile = 1
+    # pad the cell axis so each device shard is kernel-tile aligned;
+    # padded cells are inert and sliced away after the scan
+    C = carry[-1].shape[0]
+    unit = tile * (n_dev if use_shard else 1)
+    pad = (-C) % unit
+    if pad:
+        consts = {k: (_pad_cell_axis(v, pad, 0,
+                                     _CELL_PAD_FILL.get(k, 0.0))
+                      if isinstance(v, np.ndarray) else v)
+                  for k, v in consts.items()}
+        carry = tuple(_pad_cell_axis(c, pad, 0) for c in carry)
+        xs_seq = (xs_seq[0],) + tuple(_pad_cell_axis(x, pad, 1)
+                                      for x in xs_seq[1:])
+
     consts_j = {k: (jnp.asarray(v, jnp.float32)
-                    if isinstance(v, np.ndarray) else v)
+                    if isinstance(v, np.ndarray) else
+                    jnp.float32(v))
                 for k, v in consts.items()}
     # fail_slot compares against integer slot indices
     consts_j["fail_slot"] = jnp.asarray(consts["fail_slot"], jnp.int32)
     carry_j = tuple(jnp.asarray(c, jnp.float32) for c in carry)
     xs_j = tuple(jnp.asarray(x, jnp.int32 if i == 0 else jnp.float32)
                  for i, x in enumerate(xs_seq))
-    out_carry, outs = _jax_runner(step_builder, jit)(consts_j, carry_j,
-                                                     xs_j)
-    return (tuple(np.asarray(c, np.float64) for c in out_carry),
-            tuple(np.asarray(o, np.float64) for o in outs))
+    shape_key = (xs_j[0].shape[0],) + carry_j[0].shape
+    runner = _jax_runner(step_builder, cfg.jit, impl,
+                         n_dev if use_shard else 0, shape_key)
+    out_carry, outs = runner(consts_j, carry_j, xs_j)
+    return (tuple(np.asarray(c, np.float64)[:C] for c in out_carry),
+            tuple(np.asarray(o, np.float64)[:, :C] for o in outs))
 
 
 # ---------------------------------------------------------------------------
@@ -350,38 +472,74 @@ def _pad(a: np.ndarray, T: int, S: int) -> np.ndarray:
     return out
 
 
+#: geometric bucket resolution: sizes per octave (<= 1/quantum relative
+#: padding waste; tiny dims stay exact)
+_BUCKET_QUANTUM = 8
+
+
+def _bucket_dim(n: int, quantum: int = _BUCKET_QUANTUM) -> int:
+    """Round ``n`` up to the next geometric bucket so heterogeneous
+    grids collapse onto a few stable pad shapes (one jit trace per
+    bucket, not per exact shape)."""
+    n = int(n)
+    if n <= quantum:
+        return n
+    step = max(1, (1 << ((n - 1).bit_length() - 1)) // quantum)
+    return -(-n // step) * step
+
+
+def _plan_groups(programs: Sequence[VectorProgram],
+                 cfg: VectorConfig) -> list:
+    """Group cell indices by (family, padded (T, S) shape).
+
+    With ``cfg.bucket`` each cell's own (n_slots, n_servers) rounds up
+    to its geometric bucket; without, each family pads to its max (the
+    pre-bucketing behavior).  Either way padding is masking, never
+    truncation: a cell's draws use its true shape and extraction
+    slices it back out, so rows are bit-identical across groupings (a
+    test pins bucketed == unbucketed)."""
+    groups: dict = {}
+    for i, p in enumerate(programs):
+        shape = (_bucket_dim(p.n_slots), _bucket_dim(p.n_servers)) \
+            if cfg.bucket else None
+        groups.setdefault((p.batched, shape), []).append(i)
+    out = []
+    for (batched, shape), idxs in sorted(
+            groups.items(), key=lambda kv: (kv[0][0], kv[0][1] or ())):
+        if shape is None:
+            shape = (max(programs[i].n_slots for i in idxs),
+                     max(programs[i].n_servers for i in idxs))
+        out.append((batched, shape, idxs))
+    return out
+
+
 def run_cells(programs: Sequence[VectorProgram],
               seeds: Sequence[tuple],
               config: Optional[VectorConfig] = None) -> list[VectorResult]:
     """Execute one cell per (program, (seed, stream)) pair — the whole
-    grid as one batched array program per family (scalar / batched),
+    grid as one batched array program per (family, shape bucket),
     chunked to bound scan memory."""
     cfg = config or VectorConfig()
     backend = cfg.resolve_backend()
     results: list[Optional[VectorResult]] = [None] * len(programs)
-    for batched in (False, True):
-        idxs = [i for i, p in enumerate(programs) if p.batched == batched]
-        if not idxs:
-            continue
+    for batched, shape, idxs in _plan_groups(programs, cfg):
         # chunk cells so T*C*S stays within the memory budget
-        T = max(programs[i].n_slots for i in idxs)
-        S = max(programs[i].n_servers for i in idxs)
-        per_cell = max(T * S, 1)
+        per_cell = max(shape[0] * shape[1], 1)
         chunk = max(1, cfg.max_slot_elems // per_cell)
         for lo in range(0, len(idxs), chunk):
             part = idxs[lo:lo + chunk]
             for i, res in zip(part, _run_family(
                     [programs[i] for i in part],
-                    [seeds[i] for i in part], batched, backend, cfg)):
+                    [seeds[i] for i in part], batched, backend, cfg,
+                    shape)):
                 results[i] = res
     return results  # type: ignore[return-value]
 
 
 def _run_family(progs: list, seeds: list, batched: bool, backend: str,
-                cfg: VectorConfig) -> list[VectorResult]:
+                cfg: VectorConfig, shape: tuple) -> list[VectorResult]:
     C = len(progs)
-    T = max(p.n_slots for p in progs)
-    S = max(p.n_servers for p in progs)
+    T, S = shape
     dt = progs[0].dt
     rngs = [_cell_rng(s, st) for s, st in seeds]
     draws = [_draw_cell(p, r) for p, r in zip(progs, rngs)]
@@ -501,24 +659,29 @@ def _run_family(progs: list, seeds: list, batched: bool, backend: str,
         builder = _batched_step
 
     if backend == "jax":
-        carry, outs = _scan_jax(builder, consts, carry, xs, cfg.jit)
+        carry, outs = _scan_jax(builder, consts, carry, xs, cfg)
     else:
         step = builder(np, dict(consts))
         carry, outs = _scan_numpy(step, carry, xs, T)
 
-    return [_extract(progs[i], rngs[i], i, batched, carry, outs, aux,
-                     draws[i], cfg)
+    cells = [_sample_cell(progs[i], rngs[i], i, batched, carry, outs, aux,
+                          draws[i], cfg)
+             for i in range(C)]
+    quants = _grid_quantiles([cell["lat"] for cell in cells], cfg, backend)
+    return [_finish_cell(progs[i], batched, cells[i], quants[i])
             for i in range(C)]
 
 
 # ---------------------------------------------------------------------------
-# Per-cell extraction: sampling, censoring, one-partition percentiles
+# Per-cell extraction: sampling, censoring, fused-grid percentiles
 # ---------------------------------------------------------------------------
-def _extract(prog: VectorProgram, rng: np.random.Generator, i: int,
-             batched: bool, carry, outs, aux: dict, draws: dict,
-             cfg: VectorConfig) -> VectorResult:
-    from repro.core.stats import quantiles_partition
-
+def _sample_cell(prog: VectorProgram, rng: np.random.Generator, i: int,
+                 batched: bool, carry, outs, aux: dict, draws: dict,
+                 cfg: VectorConfig) -> dict:
+    """Draw this cell's request sample from the slot series (uniform over
+    realized arrivals, event-engine censoring) — everything per-cell
+    EXCEPT the percentiles, which `_grid_quantiles` computes for the
+    whole chunk in one fused launch."""
     T, S = prog.n_slots, prog.n_servers
     dt = prog.dt
     if not batched:
@@ -603,9 +766,63 @@ def _extract(prog: VectorProgram, rng: np.random.Generator, i: int,
         lat = np.empty(0)
         completion = np.empty(0)
 
+    return {"lat": lat, "completion": completion, "n_served": n_served,
+            "drained": drained, "Qs": Qs, "drops": drops,
+            "tok_served": tok_served if batched else None}
+
+
+def _grid_quantiles(lats: list, cfg: VectorConfig, backend: str):
+    """p50/p95/p99 for every cell of a chunk -> [C, 3] (NaN rows when a
+    cell has no samples).
+
+    numpy backend: hoisted-plan partition per row, f64.  jax backend:
+    ONE fused launch over a [C, K] +inf-padded f32 matrix — the jnp
+    sort oracle (impl="ref") and the Pallas radix-select kernel select
+    the same order statistics bit-for-bit, so the impl knob never
+    changes a row.  Means are NOT computed here: the row mean stays
+    host-side f64 so it cannot depend on the pad width K.
+    """
+    C = len(lats)
+    counts = np.array([lat.size for lat in lats], np.int64)
+    K = int(counts.max()) if C else 0
+    if backend != "jax":
+        from repro.core.stats import quantiles_partition_batched
+        mat = np.zeros((C, max(K, 1)))
+        for i, lat in enumerate(lats):
+            mat[i, :lat.size] = lat
+        return quantiles_partition_batched(mat, counts, (50.0, 95.0, 99.0))
+    if K == 0:
+        return np.full((C, 3), float("nan"))
+    import jax.numpy as jnp
+
+    from repro.kernels import ops as kernel_ops
+    mat = np.full((C, K), np.inf, np.float32)
+    for i, lat in enumerate(lats):
+        mat[i, :lat.size] = lat
+    # eager launch (no jit): the kernel pads K internally to the lane
+    # tile, so per-(C, K) retraces would defeat the bucketing anyway
+    out = kernel_ops.vector_quantiles(jnp.asarray(mat),
+                                      jnp.asarray(counts, jnp.int32),
+                                      impl=cfg.resolve_impl())
+    return np.asarray(out, np.float64)
+
+
+def _finish_cell(prog: VectorProgram, batched: bool, cell: dict,
+                 q3) -> VectorResult:
+    T, S = prog.n_slots, prog.n_servers
+    dt = prog.dt
+    speed = prog.speed
+    lat = cell["lat"]
+    completion = cell["completion"]
+    n_served = cell["n_served"]
+    drained = cell["drained"]
+    Qs = cell["Qs"]
+    tok_served = cell["tok_served"]
+    drops = cell["drops"]
+
     n = int(round(float(n_served.sum())))
     if lat.size:
-        p50, p95, p99 = quantiles_partition(lat, (50.0, 95.0, 99.0))
+        p50, p95, p99 = (float(v) for v in q3)
         mean = float(lat.mean())
     else:
         p50 = p95 = p99 = mean = float("nan")

@@ -24,6 +24,22 @@ class VectorTelemetry:
         self.interval = result.interval
         self.slo = result.slo
         self._series_cache = None
+        self._groups_cache = None
+
+    def _ivl_samples(self, ivl: int) -> np.ndarray:
+        """Samples completing in interval ``ivl`` — grouped once by a
+        STABLE argsort (within-group order preserved), so each group is
+        bit-for-bit the boolean-mask slice it replaces, without the
+        O(intervals x samples) rescan."""
+        if self._groups_cache is None:
+            r = self.result
+            order = np.argsort(r.sample_ivl, kind="stable")
+            sorted_ivl = r.sample_ivl[order]
+            sorted_xs = r.samples[order]
+            starts = np.searchsorted(sorted_ivl, np.arange(len(r.n_ivl) + 1))
+            self._groups_cache = (sorted_xs, starts)
+        sorted_xs, starts = self._groups_cache
+        return sorted_xs[starts[ivl]:starts[ivl + 1]]
 
     # ---- summaries ---------------------------------------------------------
     def overall(self) -> Summary:
@@ -51,7 +67,7 @@ class VectorTelemetry:
         out: dict[int, Summary] = {}
         for ivl in range(len(r.n_ivl)):
             n = int(round(float(r.n_ivl[ivl])))
-            xs = r.samples[r.sample_ivl == ivl]
+            xs = self._ivl_samples(ivl)
             if n == 0 and xs.size == 0:
                 continue
             if xs.size:
@@ -74,7 +90,7 @@ class VectorTelemetry:
         frames = []
         for ivl in range(len(r.n_ivl)):
             s = series.get(ivl) or Summary.empty()
-            xs = r.samples[r.sample_ivl == ivl]
+            xs = self._ivl_samples(ivl)
             frames.append(IntervalFrame(
                 t=ivl, n=s.n, qps=s.n / self.interval, mean=s.mean,
                 p50=s.p50, p95=s.p95, p99=s.p99,

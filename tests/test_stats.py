@@ -468,3 +468,38 @@ def test_reservoir_default_stream_is_deterministic():
         r3.add(float(x))
     assert r1.data == r2.data
     assert r1.data != r3.data
+
+
+def test_quantiles_partition_batched_bitwise_scalar():
+    """The fused extraction's contract: the batched row-wise path is
+    bit-for-bit the scalar `quantiles_partition`, hoisted plan and all
+    (NaN rows where a count is zero)."""
+    from repro.core.stats import (quantiles_partition,
+                                  quantiles_partition_batched)
+    rng = np.random.default_rng(7)
+    counts = np.array([0, 1, 2, 17, 100, 64])
+    K = int(counts.max())
+    mat = np.zeros((counts.size, K))
+    for i, n in enumerate(counts):
+        mat[i, :n] = rng.gamma(2.0, 0.01, n)
+    qs = (50.0, 95.0, 99.0)
+    got = quantiles_partition_batched(mat, counts, qs)
+    for i, n in enumerate(counts):
+        if n == 0:
+            assert np.all(np.isnan(got[i]))
+        else:
+            want = quantiles_partition(mat[i, :n], qs)
+            assert got[i].tobytes() == np.asarray(want).tobytes()
+
+
+def test_quantile_plan_hoisting_stable():
+    """Repeated calls reuse one hoisted order-statistic plan — and the
+    plan cache cannot change results (cleared vs warm: same bits)."""
+    from repro.core import stats as st
+    xs = np.random.default_rng(11).random(501)
+    qs = (50.0, 95.0, 99.0)
+    st._QPLAN_CACHE.clear()
+    cold = st.quantiles_partition(xs, qs)
+    assert (501, qs) in {(k[0], k[1]) for k in st._QPLAN_CACHE}
+    warm = st.quantiles_partition(xs, qs)
+    assert np.asarray(cold).tobytes() == np.asarray(warm).tobytes()
