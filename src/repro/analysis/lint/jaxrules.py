@@ -1,11 +1,14 @@
-"""jax purity rules for traced bodies in ``vector/`` and the vector
-Pallas kernels.
+"""jax purity rules for traced bodies in ``vector/``, ``plan/`` and the
+vector Pallas kernels.
 
 A function body is considered *traced* when any of these hold:
 
 * it is decorated with ``jit`` / ``jax.jit`` (or a ``partial`` of it);
 * it is passed syntactically to ``lax.scan`` / ``jax.lax.scan`` /
-  ``jax.jit`` / ``pl.pallas_call`` at a call site in the same file;
+  ``jax.jit`` / ``pl.pallas_call`` / ``jax.grad`` /
+  ``jax.value_and_grad`` at a call site in the same file — a body
+  handed to the autodiff tracers is traced exactly like a jitted one,
+  which is how the planner's loss closures get covered;
 * it follows the repo's scan-body convention: a (possibly nested)
   function whose parameters are exactly ``(carry, xs)`` — the shape
   ``_scalar_step``/``_batched_step`` build and hand to ``lax.scan``.
@@ -26,13 +29,15 @@ from typing import Iterator, Optional, Set
 from repro.analysis.lint.engine import Rule, SourceFile
 from repro.analysis.lint.rules import dotted_name
 
-VECTOR_SCOPE = ("vector/", "kernels/vector_step.py",
+VECTOR_SCOPE = ("vector/", "plan/", "kernels/vector_step.py",
                 "kernels/vector_quantiles.py")
 
 SCAN_CALLS = ("lax.scan", "jax.lax.scan")
 JIT_CALLS = ("jit", "jax.jit")
 #: a Pallas kernel body is a traced function too — same purity rules
 PALLAS_CALLS = ("pl.pallas_call", "pallas_call", "pallas.pallas_call")
+#: ...and so is anything handed to the autodiff tracers
+GRAD_CALLS = ("jax.grad", "grad", "jax.value_and_grad", "value_and_grad")
 CONCRETIZE_BUILTINS = ("float", "int", "bool")
 
 
@@ -68,7 +73,7 @@ def _traced_callee_names(tree: ast.AST) -> Set[str]:
         if not isinstance(node, ast.Call) or not node.args:
             continue
         name = dotted_name(node.func)
-        if name in SCAN_CALLS + JIT_CALLS + PALLAS_CALLS:
+        if name in SCAN_CALLS + JIT_CALLS + PALLAS_CALLS + GRAD_CALLS:
             first = dotted_name(node.args[0])
             if first is not None:
                 out.add(first.split(".")[-1])

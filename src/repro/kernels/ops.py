@@ -65,8 +65,14 @@ def vector_slot_advance(family: str, consts: dict, carry, xs, *,
     Called from inside the runtime's ``lax.scan`` body; resolution is
     trace-time static.  The ref path and the interpret-mode Pallas path
     execute the same step math (see ``vector_step``) — bit-equal.
+
+    Soft-mode consts carry a ``"tau"`` temperature: the Pallas kernels
+    implement only the hard step math, so those always take the jnp
+    reference path (structural, trace-time-static routing).
     """
     impl = _resolve(impl)
+    if "tau" in consts:
+        impl = "ref"
     if impl == "ref":
         return _ref.vector_slot_advance(family, consts, carry, xs)
     from repro.kernels import vector_step as vs

@@ -1,0 +1,25 @@
+"""Gradient-based capacity planning over the smoothed vector runtime.
+
+The dense alternative — sweeping a provisioning grid on the exact
+vector runtime — costs O(grid points x repetitions) cell evaluations
+per capacity question.  ``repro.plan`` answers the same question with
+O(optimizer steps) through ``jax.value_and_grad`` of a smoothed
+surrogate (``repro.vector.soft``), then spends a SMALL number of exact
+cells verifying the rounded answer: the surrogate proposes, the exact
+runtime decides.  ``benchmarks/bench_plan.py`` holds the planner to
+>= 10x fewer exact cells than the dense grid while landing inside the
+grid optimum's 95% CI.
+"""
+from repro.plan.model import (OBJECTIVES, PlanConfig, PlanData, PlanError,
+                              analytic_capacity, build_plan_data,
+                              hard_metrics, plan_loss, surrogate_metrics)
+from repro.plan.planner import (DEFAULT_BOXES, PlanResult, PlanSpec,
+                                plan_spec_from_sweep, run_plan,
+                                run_plan_sweep)
+
+__all__ = [
+    "OBJECTIVES", "PlanConfig", "PlanData", "PlanError", "PlanResult",
+    "PlanSpec", "DEFAULT_BOXES", "analytic_capacity", "build_plan_data",
+    "hard_metrics", "plan_loss", "plan_spec_from_sweep", "run_plan",
+    "run_plan_sweep", "surrogate_metrics",
+]

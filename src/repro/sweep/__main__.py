@@ -89,6 +89,16 @@ def _sweep_from_decl(decl: dict) -> Sweep:
     axes = tuple(Axis(k, tuple(v)) for k, v in decl.get("axes", {}).items())
     points = tuple(decl.get("points", ()))
     metrics = tuple(decl.get("metrics", DEFAULT_METRICS))
+    optimize = decl.get("optimize")
+    if optimize is not None:
+        # planner declaration: {"scenario": ..., "optimize": {"slo": ...,
+        # "params": {"capacity": [4, 1, 24]}, ...}, "fixed": {...}}
+        return Sweep(name=decl.get("name", scenario), factory=None,
+                     mode="optimize",
+                     optimize={"scenario": scenario, **optimize},
+                     fixed=dict(decl.get("fixed", {})),
+                     reps=int(decl.get("reps", 13)),
+                     base_seed=int(decl.get("seed", 0)))
     return Sweep(name=decl.get("name", scenario),
                  factory=scenario_factory(scenario),
                  axes=axes,
@@ -104,7 +114,23 @@ def _sweep_from_decl(decl: dict) -> Sweep:
                  runtime=decl.get("runtime", "sim"))
 
 
+def _print_plan(frame) -> None:
+    plan = frame.spec["plan"]
+    print(f"plan={frame.name} objective={plan['spec']['objective']} "
+          f"target={plan['spec']['target']}")
+    print(f"continuous optimum: {plan['params']}")
+    v = plan.get("verified")
+    if v is not None:
+        print(f"verified fleet: n={plan['n_star']} "
+              f"{v['metric']}={v['mean']:.4g} +- {v['ci95']:.4g} "
+              f"({'feasible' if plan['feasible'] else 'INFEASIBLE'}; "
+              f"{plan['cell_evals']} exact cells)")
+
+
 def _print_aggregate(frame) -> None:
+    if "plan" in frame.spec:
+        _print_plan(frame)
+        return
     metrics = [m for m in frame.spec.get("metrics", ())
                if m not in ("n",)]
     headline = "p99" if "p99" in metrics else (metrics[0] if metrics else None)

@@ -271,6 +271,12 @@ def run_sweep(sweep: Sweep, executor: str = "serial",
     tunes the vector grid path's impl / device / bucketing knobs; all
     of them are bit-preserving, so it cannot change rows.
     """
+    if sweep.mode == "optimize":
+        # gradient-planner entry point: the search is an optimizer loop
+        # over the smoothed vector surrogate, not a task grid
+        from repro.plan import run_plan_sweep
+        return run_plan_sweep(sweep, progress=progress,
+                              vector_config=vector_config)
     tasks = sweep.tasks()
     total = len(tasks)
     rows: list = [None] * total

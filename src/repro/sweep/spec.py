@@ -141,6 +141,14 @@ class Sweep:
     zips equal-length axes, ``"points"`` uses the explicit ``points``
     dicts.  ``fixed`` parameters merge into every point.
 
+    ``mode="optimize"`` is the gradient-planner entry point: instead of
+    enumerating points, the executor hands the spec to
+    ``repro.plan.run_plan_sweep``, which optimizes the ``optimize``
+    block's parameters through the smoothed vector surrogate and
+    verifies the answer on the exact runtime.  ``fixed`` becomes the
+    scenario overrides, ``reps``/``base_seed`` keep their meanings, and
+    ``factory``/``axes`` are unused (pass ``factory=None``).
+
     ``runtime`` picks the execution backend: ``"sim"`` (virtual-time
     simulator), ``"engine"`` (wall-clock ``EngineRuntime`` driving
     stub engines on a virtual clock), or ``"vector"`` (the batched
@@ -165,11 +173,26 @@ class Sweep:
     telemetry: bool = False             # capture per-interval series rows
     per_client: bool = False            # capture per-client summaries
     runtime: str = "sim"                # sim | engine (stub replicas)
+    optimize: Optional[dict] = None     # mode="optimize": planner knobs
+                                        # (see repro.plan.PlanSpec)
 
     def __post_init__(self):
         self.axes = _as_axes(self.axes)
-        if self.mode not in ("grid", "zip", "points"):
+        if self.mode not in ("grid", "zip", "points", "optimize"):
             raise ValueError(f"unknown sweep mode: {self.mode!r}")
+        if self.mode == "optimize":
+            if not self.optimize:
+                raise ValueError("mode='optimize' needs an optimize "
+                                 "block (at least an 'slo')")
+            if self.axes or self.points:
+                raise ValueError("mode='optimize' takes no axes/points "
+                                 "— the planner owns the search")
+            if self.reps < 1:
+                raise ValueError("reps must be >= 1")
+            return
+        if self.optimize:
+            raise ValueError(f"optimize block given but "
+                             f"mode={self.mode!r} (use mode='optimize')")
         if self.mode == "points" and not self.points:
             raise ValueError("mode='points' needs a non-empty points list")
         if self.mode != "points" and self.points:
@@ -195,6 +218,8 @@ class Sweep:
     # ------------------------------------------------------------- points
     def point_dicts(self) -> list[dict]:
         """The sweep's points, in deterministic declaration order."""
+        if self.mode == "optimize":
+            return []               # the planner owns the search space
         if self.mode == "points":
             pts = [dict(p) for p in self.points]
         elif self.mode == "zip":
@@ -238,6 +263,7 @@ class Sweep:
             "runtime": self.runtime,
             "telemetry": self.telemetry,
             "per_client": self.per_client,
+            **({"optimize": dict(self.optimize)} if self.optimize else {}),
         }
 
 

@@ -27,6 +27,7 @@ class OptConfig:
     total_steps: int = 10_000
     m_dtype: str = "bfloat16"      # bf16 first moment (ZeRO-friendly)
     v_dtype: str = "float32"
+    schedule: str = "cosine"       # cosine | constant (post-warmup shape)
 
 
 def init_opt_state(params, cfg: OptConfig):
@@ -46,6 +47,10 @@ def abstract_opt_state(abstract_params, cfg: OptConfig):
 def lr_at(cfg: OptConfig, step):
     step = step.astype(F32)
     warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    if cfg.schedule == "constant":
+        return cfg.lr * warm
+    if cfg.schedule != "cosine":
+        raise ValueError(f"unknown schedule {cfg.schedule!r}")
     prog = jnp.clip((step - cfg.warmup_steps)
                     / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1), 0.0, 1.0)
     cos = 0.5 * (1 + jnp.cos(jnp.pi * prog))

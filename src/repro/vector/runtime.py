@@ -78,6 +78,13 @@ class VectorConfig:
                                     # size (1 still runs the shard layer)
     bucket: bool = True             # geometric (T, S) shape-bucketing
     max_slot_elems: int = 64_000_000   # chunk cells when T*C*S exceeds this
+    soft: bool = False              # differentiable mode: smoothed
+                                    # water-filling / Erlang-C / censoring
+                                    # and the soft quantile head (jax
+                                    # backend only; forces impl="ref")
+    tau: float = 0.05               # soft-mode temperature (relative)
+    band_frac: float = 5e-4         # soft quantile-head bandwidth, as a
+                                    # fraction of the effective count
 
     def resolve_backend(self) -> str:
         if self.backend == "auto":
@@ -88,7 +95,11 @@ class VectorConfig:
         return self.backend
 
     def resolve_impl(self) -> str:
-        """Resolved scan-step impl for the jax backend."""
+        """Resolved scan-step impl for the jax backend.  Soft mode pins
+        the jnp reference path: the Pallas kernels implement only the
+        hard step math."""
+        if self.soft:
+            return "ref"
         from repro.kernels.ops import resolve_impl
         return resolve_impl(self.impl)
 
@@ -189,10 +200,28 @@ def _episode_age(rho: np.ndarray, t_idx: np.ndarray, dt: float,
     return np.maximum(idx - last_low, 1.0) * dt
 
 
+def _make_waterfill(xp, consts):
+    """The step's water-fill operator: hard level-fill, or the
+    temperature-controlled relaxation when the consts carry a soft-mode
+    ``tau``.  The choice is structural (dict key presence), so it is
+    trace-time static and never branches on a traced value."""
+    tau = consts.get("tau")
+    if tau is None:
+        def wfill(U_eff, total):
+            return _waterfill(xp, U_eff, total)
+    else:
+        from repro.vector.soft import soft_waterfill
+
+        def wfill(U_eff, total):
+            return soft_waterfill(xp, U_eff, total, tau)
+    return wfill
+
+
 def _scalar_step(xp, consts):
     c = consts["c"]
     fail_slot = consts["fail_slot"]
     dt = consts["dt"]
+    wfill = _make_waterfill(xp, consts)
 
     def step(carry, xs):
         U, Q, drops = carry
@@ -209,7 +238,7 @@ def _scalar_step(xp, consts):
         Wf = xp.where(ok, Wf, 0.0)
         Nf = xp.where(ok, Nf, 0.0)
         U_eff = xp.where(acc > 0, U, _BIG)
-        w_free = _waterfill(xp, U_eff, Wf)
+        w_free = wfill(U_eff, Wf)
         share = w_free / xp.maximum(
             xp.sum(w_free, axis=-1, keepdims=True), _EPS)
         n_free = Nf[..., None] * share
@@ -237,6 +266,7 @@ def _batched_step(xp, consts):
     fail_slot = consts["fail_slot"]; dt = consts["dt"]
     tm = consts["tm"]; tc = consts["tc"]
     new_mean = consts["new_mean"]
+    wfill = _make_waterfill(xp, consts)
 
     def step(carry, xs):
         P, T, L, drops = carry           # prefill s, tokens, requests
@@ -252,7 +282,7 @@ def _batched_step(xp, consts):
         drops = drops + xp.where(ok, 0.0, Nf)
         Nf = xp.where(ok, Nf, 0.0)
         L_eff = xp.where(acc > 0, L, _BIG)
-        n_free = _waterfill(xp, L_eff, Nf)
+        n_free = wfill(L_eff, Nf)
         share = n_free / xp.maximum(
             xp.sum(n_free, axis=-1, keepdims=True), _EPS)
         Wp_arr = Wpc + Wpf[..., None] * share
@@ -335,7 +365,15 @@ def _jax_runner(step_builder, jit: bool, impl: str, shard: int,
 
     if shard:
         run = _shard_cells(run, family, shard)
-    fn = jax.jit(run) if jit else run
+    if jit:
+        # donate the carry: the scan consumes it and the caller only
+        # reads the returned one, so XLA may reuse the buffers in
+        # place.  CPU jax cannot donate (it would only warn), so the
+        # hint is gated on the backend.
+        donate = (1,) if jax.default_backend() != "cpu" else ()
+        fn = jax.jit(run, donate_argnums=donate)
+    else:
+        fn = run
     _JIT_CACHE[key] = fn
     while len(_JIT_CACHE) > _JIT_CACHE_CAP:
         _JIT_CACHE.popitem(last=False)
@@ -381,11 +419,14 @@ def _pad_cell_axis(a: np.ndarray, pad: int, axis: int, fill=0.0):
 
 
 def _scan_jax(step_builder, consts, carry, xs_seq, cfg: VectorConfig):
+    import jax
     import jax.numpy as jnp
 
     impl = cfg.resolve_impl()
     n_dev = cfg.resolve_devices()
-    use_shard = n_dev > 1 or cfg.devices >= 1
+    # soft consts carry the extra "tau" leaf the shard specs don't
+    # declare; soft grids are small, so they skip the shard layer
+    use_shard = (n_dev > 1 or cfg.devices >= 1) and not cfg.soft
     if impl == "pallas":
         from repro.kernels.vector_step import CELL_TILE as tile
     else:
@@ -417,6 +458,11 @@ def _scan_jax(step_builder, consts, carry, xs_seq, cfg: VectorConfig):
     runner = _jax_runner(step_builder, cfg.jit, impl,
                          n_dev if use_shard else 0, shape_key)
     out_carry, outs = runner(consts_j, carry_j, xs_j)
+    # ONE device->host sync for the whole chunk: the previous per-array
+    # np.asarray form issued ~10 blocking transfers per chunk, which is
+    # what left the warm jax path behind the NumPy fallback on small
+    # grids.  The f64 widening stays host-side so rows keep their bits.
+    out_carry, outs = jax.device_get((out_carry, outs))
     return (tuple(np.asarray(c, np.float64)[:C] for c in out_carry),
             tuple(np.asarray(o, np.float64)[:, :C] for o in outs))
 
@@ -521,6 +567,10 @@ def run_cells(programs: Sequence[VectorProgram],
     chunked to bound scan memory."""
     cfg = config or VectorConfig()
     backend = cfg.resolve_backend()
+    if cfg.soft and backend != "jax":
+        raise RuntimeError("VectorConfig.soft=True needs the jax "
+                           "backend: the soft quantile head runs "
+                           "through jnp (use backend='jax' or 'auto')")
     results: list[Optional[VectorResult]] = [None] * len(programs)
     for batched, shape, idxs in _plan_groups(programs, cfg):
         # chunk cells so T*C*S stays within the memory budget
@@ -583,7 +633,15 @@ def _run_family(progs: list, seeds: list, batched: bool, backend: str,
                            lam_w / np.maximum(c * spd, _EPS), 0.0)
         lgamma_c = _lgamma(c)
         cmax = int(c.max()) if c.size else 1
-        aux["pC"] = _erlang_c(c[None], lgamma_c[None], rho_det, cmax)
+        if cfg.soft:
+            from repro.vector import soft as _soft
+            consts["tau"] = float(cfg.tau)
+            aux["pC"] = _soft.soft_erlang_c(np, c[None].astype(float),
+                                            rho_det, cmax, cfg.tau)
+            headroom = 1.0 - _soft.smooth_rho(np, rho_det, cfg.tau)
+        else:
+            aux["pC"] = _erlang_c(c[None], lgamma_c[None], rho_det, cmax)
+            headroom = 1.0 - np.clip(rho_det, 0.0, 0.999)
         # conditional wait given queueing: residual service work over
         # the free capacity (exact Pollaczek-Khinchine mean for c=1),
         # bounded near/above criticality by the diffusion growth law
@@ -591,8 +649,7 @@ def _run_family(progs: list, seeds: list, batched: bool, backend: str,
         # only builds the queue the random walk had time to build
         e2 = v_w + m_w * m_w
         resid = e2 / np.maximum(2.0 * m_w, _EPS)
-        w_stat = resid[None] / np.maximum(
-            c[None] * spd * (1.0 - np.clip(rho_det, 0.0, 0.999)), _EPS)
+        w_stat = resid[None] / np.maximum(c[None] * spd * headroom, _EPS)
         lam_srv = rho_det * c[None] * spd / np.maximum(m_w[None], _EPS)
         # the diffusion clock runs from the start of the CURRENT
         # near-critical episode, not the run: cyclic loads (diurnal)
@@ -620,10 +677,17 @@ def _run_family(progs: list, seeds: list, batched: bool, backend: str,
                             work_rate / np.maximum(cap_pool, _EPS), 0.0)
         c_pool = np.minimum(np.maximum((acc * c[None]).sum(axis=-1), 1.0),
                             64.0)
-        aux["pC_free"] = _erlang_c(c_pool, _lgamma(c_pool), rho_pool,
-                                   int(c_pool.max()))
-        w_stat_f = resid_bar[None] / np.maximum(
-            cap_pool * (1.0 - np.clip(rho_pool, 0.0, 0.999)), _EPS)
+        if cfg.soft:
+            aux["pC_free"] = _soft.soft_erlang_c(np, c_pool, rho_pool,
+                                                 int(c_pool.max()),
+                                                 cfg.tau)
+            headroom_f = 1.0 - _soft.smooth_rho(np, rho_pool, cfg.tau)
+        else:
+            aux["pC_free"] = _erlang_c(c_pool, _lgamma(c_pool), rho_pool,
+                                       int(c_pool.max()))
+            headroom_f = 1.0 - np.clip(rho_pool, 0.0, 0.999)
+        w_stat_f = resid_bar[None] / np.maximum(cap_pool * headroom_f,
+                                                _EPS)
         lam_pool = rho_pool * cap_pool / np.maximum(m_bar[None], _EPS)
         t_since_f = _episode_age(rho_pool, t_idx, dt)
         growth_f = np.sqrt(2.0 / math.pi * lam_pool * e2_bar[None]
@@ -641,6 +705,8 @@ def _run_family(progs: list, seeds: list, batched: bool, backend: str,
         nm = np.array([p.new_mean for p in progs])[:, None]
         consts = {"c": c, "fail_slot": fail, "dt": dt, "tm": tm, "tc": tc,
                   "new_mean": nm}
+        if cfg.soft:
+            consts["tau"] = float(cfg.tau)
         # a resident's wall-clock pace per own token stretches by the
         # prefill ops interleaved with decode (the engine serializes one
         # op at a time) — deterministic expected prefill time-share
@@ -667,7 +733,13 @@ def _run_family(progs: list, seeds: list, batched: bool, backend: str,
     cells = [_sample_cell(progs[i], rngs[i], i, batched, carry, outs, aux,
                           draws[i], cfg)
              for i in range(C)]
-    quants = _grid_quantiles([cell["lat"] for cell in cells], cfg, backend)
+    if cfg.soft:
+        quants = _grid_quantiles([cell["lat_all"] for cell in cells], cfg,
+                                 backend,
+                                 weights=[cell["w_all"] for cell in cells])
+    else:
+        quants = _grid_quantiles([cell["lat"] for cell in cells], cfg,
+                                 backend)
     return [_finish_cell(progs[i], batched, cells[i], quants[i])
             for i in range(C)]
 
@@ -731,10 +803,19 @@ def _sample_cell(prog: VectorProgram, rng: np.random.Generator, i: int,
             spd_i = np.where(is_free, spd_f[ts], speed[ts, ss])
             svc = demand / np.maximum(spd_i, _EPS)
             # wait = inherited backlog (always, PASTA) + the stationary
-            # within-slot queue: Bernoulli(Erlang-C) x Exp(conditional)
-            queued = rng.random(K) < np.where(is_free, pC_f[ts],
-                                              pC[ts, ss])
-            station = queued * rng.standard_exponential(K) \
+            # within-slot queue: Bernoulli(Erlang-C) x Exp(conditional).
+            # Soft mode reuses the SAME uniform/exponential draws and
+            # only smooths the indicator (reparameterization), so the
+            # two modes sample the same underlying requests.
+            pC_i = np.where(is_free, pC_f[ts], pC[ts, ss])
+            u_q = rng.random(K)
+            e_q = rng.standard_exponential(K)
+            if cfg.soft:
+                from repro.vector.soft import stable_sigmoid
+                queued = stable_sigmoid(np, (pC_i - u_q) / cfg.tau)
+            else:
+                queued = u_q < pC_i
+            station = queued * e_q \
                 * np.where(is_free, w_cond_f[ts], w_cond[ts, ss])
             lat = np.where(is_free, wait_free[ts], wait_U[ts, ss]) \
                 + station + svc
@@ -757,7 +838,15 @@ def _sample_cell(prog: VectorProgram, rng: np.random.Generator, i: int,
         # censor like the event engine's recorder: completions past the
         # horizon are never recorded, and a request caught on a failing
         # server (arrived in its fail slot, or completing after the fail
-        # instant) is lost
+        # instant) is lost.  Soft mode additionally keeps the FULL
+        # sample with smooth keep-weights for the soft quantile head
+        # (the stored samples stay hard-censored for telemetry).
+        if cfg.soft:
+            from repro.vector.soft import censor_weight
+            lat_all = lat
+            w_all = censor_weight(np, centers[ts], completion,
+                                  prog.duration, fail_t,
+                                  80.0 * dt * cfg.tau)
         keep = (completion <= prog.duration) & (centers[ts] < fail_t) \
             & (completion <= fail_t)
         lat = lat[keep]
@@ -765,13 +854,20 @@ def _sample_cell(prog: VectorProgram, rng: np.random.Generator, i: int,
     else:
         lat = np.empty(0)
         completion = np.empty(0)
+        lat_all = np.empty(0)
+        w_all = np.empty(0)
 
-    return {"lat": lat, "completion": completion, "n_served": n_served,
-            "drained": drained, "Qs": Qs, "drops": drops,
-            "tok_served": tok_served if batched else None}
+    out = {"lat": lat, "completion": completion, "n_served": n_served,
+           "drained": drained, "Qs": Qs, "drops": drops,
+           "tok_served": tok_served if batched else None}
+    if cfg.soft:
+        out["lat_all"] = lat_all
+        out["w_all"] = w_all
+    return out
 
 
-def _grid_quantiles(lats: list, cfg: VectorConfig, backend: str):
+def _grid_quantiles(lats: list, cfg: VectorConfig, backend: str,
+                    weights: Optional[list] = None):
     """p50/p95/p99 for every cell of a chunk -> [C, 3] (NaN rows when a
     cell has no samples).
 
@@ -781,10 +877,27 @@ def _grid_quantiles(lats: list, cfg: VectorConfig, backend: str):
     the same order statistics bit-for-bit, so the impl knob never
     changes a row.  Means are NOT computed here: the row mean stays
     host-side f64 so it cannot depend on the pad width K.
+
+    ``weights`` (soft mode) switches to the differentiable head: the
+    full per-cell sample with smooth censor keep-weights, one
+    ``soft_quantiles`` launch for the chunk (zero-weight padding).
     """
     C = len(lats)
     counts = np.array([lat.size for lat in lats], np.int64)
     K = int(counts.max()) if C else 0
+    if weights is not None:
+        from repro.vector.soft import soft_quantiles
+        if K == 0:
+            return np.full((C, 3), float("nan"))
+        import jax.numpy as jnp
+        mat = np.full((C, K), np.inf, np.float32)
+        wmat = np.zeros((C, K), np.float32)
+        for i, (lat, w) in enumerate(zip(lats, weights)):
+            mat[i, :lat.size] = lat
+            wmat[i, :w.size] = w
+        out = soft_quantiles(jnp.asarray(mat), jnp.asarray(wmat),
+                             band_frac=cfg.band_frac)
+        return np.asarray(out, np.float64)
     if backend != "jax":
         from repro.core.stats import quantiles_partition_batched
         mat = np.zeros((C, max(K, 1)))

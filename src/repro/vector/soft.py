@@ -1,0 +1,206 @@
+"""Smoothed (differentiable) counterparts of the vector runtime's hard
+primitives — the ``VectorConfig.soft=True`` mode.
+
+Every hard decision in the vector dynamics is a kink or a step that
+kills gradients: the water-filling ``argmin`` over server backlogs, the
+``rho < 0.999`` clip inside Erlang-C, the queue/no-queue Bernoulli
+indicator, the horizon/failure censoring mask, and the order-statistic
+quantile extraction.  This module replaces each with a
+temperature-controlled relaxation that (a) recovers the hard operator
+as ``tau -> 0`` and (b) keeps a usable gradient near the places
+capacity planning actually cares about (rho ~= 1, the p99 rank).
+
+Design rules shared by every primitive here:
+
+* one temperature knob ``tau`` (dimensionless); primitives that compare
+  quantities with physical units rescale it by a magnitude estimate of
+  their operands, so ``tau=0.05`` means "5% of the operand scale"
+  everywhere;
+* masked lanes (``_BIG`` backlogs, ``+inf`` quantile padding) must fall
+  out EXACTLY — the sigmoids saturate to literal 0.0/1.0 there, so soft
+  mode never leaks mass through a dead server or a pad slot;
+* the quantile surrogate anchors on ``repro.kernels.ref``'s
+  ``quantile_ranks`` / ``quantile_lerp`` — the exact kernel's rank
+  plan, not a reimplementation — so soft and hard heads interpolate
+  between the SAME order statistics (a test pins the identity).
+
+The scan-step relaxations are ``xp``-generic like the hard step math;
+the quantile head is jnp-only (it exists to be differentiated).
+"""
+from __future__ import annotations
+
+import math
+
+import numpy as np
+
+_EPS = 1e-12
+_BIG = 1e18
+#: utilization ceiling shared with the hard Erlang-C clip
+RHO_MAX = 0.999
+
+
+def stable_sigmoid(xp, x):
+    """Overflow-safe logistic; saturates to exact 0.0/1.0 so masked
+    (``_BIG``) operands drop out bit-exactly."""
+    z = xp.exp(-xp.abs(x))
+    return xp.where(x >= 0, 1.0 / (1.0 + z), z / (1.0 + z))
+
+
+def softplus(xp, x):
+    """Overflow-safe ``log(1 + exp(x))`` (= x for large x, 0 for very
+    negative x)."""
+    return xp.maximum(x, 0.0) + xp.log1p(xp.exp(-xp.abs(x)))
+
+
+def smooth_min(xp, a, b, tau):
+    """Soft ``min(a, b)``: ``-tau * logsumexp(-[a, b]/tau)``, written in
+    the overflow-safe two-operand form.  Always <= min(a, b); recovers
+    it as ``tau -> 0``."""
+    m = xp.minimum(a, b)
+    return m - tau * xp.log1p(xp.exp(-xp.abs(a - b) / tau))
+
+
+def smooth_rho(xp, rho, tau, hi: float = RHO_MAX):
+    """Utilization with the Erlang-C ceiling applied smoothly: the hard
+    path's ``clip(rho, 1e-9, 0.999)`` flattens the loss surface to zero
+    gradient the moment a candidate fleet saturates — exactly where the
+    planner needs a slope pointing back toward feasibility.  The soft
+    ceiling ``smooth_min(rho, hi)`` keeps ``1 - rho`` >= ``1 - hi`` (so
+    every downstream ``1/(1-rho)`` stays finite) while ``d rho/d x``
+    survives arbitrarily deep into overload."""
+    return xp.maximum(smooth_min(xp, rho, hi, tau * hi), 1e-9)
+
+
+def soft_waterfill(xp, U_eff, total, tau):
+    """Temperature-controlled relaxation of ``_waterfill``: distribute
+    ``total`` [C] over the least-loaded lanes of ``U_eff`` [C, S].
+
+    The hard operator has two kinks: the active-set membership test
+    (``U_i <= U_k``) and the final ``relu(L - U)``.  Both become
+    sigmoids/softplus at a temperature scaled by the per-cell operand
+    magnitude, and the level itself becomes a softmin over the lane
+    proposals.  Fills are renormalized so the slot conserves work mass
+    exactly at ANY temperature — the relaxation may misallocate between
+    near-tied servers but can never create or destroy work.  Masked
+    lanes (``_BIG``) saturate every sigmoid and contribute exact zeros.
+    """
+    fin = U_eff < (_BIG * 0.5)
+    n_fin = xp.sum(xp.where(fin, 1.0, 0.0), axis=-1)
+    u_sum = xp.sum(xp.where(fin, U_eff, 0.0), axis=-1)
+    # operand magnitude: mean finite backlog + the incoming work itself
+    scale = (u_sum + total) / xp.maximum(n_fin, 1.0) + _EPS
+    t = tau * scale
+    mine = U_eff[..., :, None]
+    other = U_eff[..., None, :]
+    le = stable_sigmoid(xp, (mine - other) / t[..., None, None])
+    cnt = xp.sum(le, axis=-1)
+    wsum = xp.sum(le * xp.where(fin, U_eff, 0.0)[..., None, :], axis=-1)
+    level = (total[..., None] + wsum) / xp.maximum(cnt, 0.5)
+    # softmin over lane proposals, anchored at the hard min for safety
+    lmin = xp.min(level, axis=-1, keepdims=True)
+    w_prop = xp.exp(-(level - lmin) / t[..., None])
+    L = xp.sum(level * w_prop, axis=-1, keepdims=True) \
+        / xp.maximum(xp.sum(w_prop, axis=-1, keepdims=True), _EPS)
+    fill = softplus(xp, (L - U_eff) / t[..., None]) * t[..., None]
+    # conserve the slot's work mass exactly at any temperature
+    fsum = xp.sum(fill, axis=-1, keepdims=True)
+    return fill * (total[..., None] / xp.maximum(fsum, _EPS))
+
+
+def _np_lgamma1p(c: np.ndarray) -> np.ndarray:
+    """lgamma(c + 1) elementwise; dedup first — capacity arrays hold a
+    handful of distinct values over [T, C, S] elements."""
+    flat = np.asarray(c, float).ravel()
+    vals, inv = np.unique(flat, return_inverse=True)
+    table = np.array([math.lgamma(v + 1.0) for v in vals])
+    return table[inv].reshape(np.shape(c))
+
+
+def soft_erlang_c(xp, c, rho, cmax: int, tau):
+    """Erlang-C delay probability with CONTINUOUS capacity ``c`` and a
+    smooth utilization ceiling — the differentiable twin of
+    ``_erlang_c``.
+
+    Two discrete structures go soft: the factorial becomes
+    ``lgamma(c + 1)`` (exact at integers, smooth between), and the
+    truncated-sum membership ``k < c`` becomes a sigmoid gate at
+    ``c - k - 0.5`` so fractional capacity blends adjacent integer
+    laws instead of jumping.  ``rho`` passes through ``smooth_rho`` so
+    the delay probability saturates to ~1 smoothly as the fleet
+    saturates instead of clipping flat.  At integer ``c`` and
+    ``tau <= 0.05`` the gates are within 1e-4 of the hard sum, so the
+    forward pass agrees with ``_erlang_c`` to the same order."""
+    rho_s = smooth_rho(xp, rho, tau)
+    a = c * rho_s
+    if xp is np:
+        lg = _np_lgamma1p(c)
+    else:
+        from jax import lax
+        # c * 1.0 promotes integer inputs; float inputs keep their
+        # dtype (f64 under enable_x64, where the FD grad checks run)
+        lg = lax.lgamma(xp.asarray(c * 1.0))
+    top = xp.exp(c * xp.log(xp.maximum(a, _EPS)) - lg)
+    term = xp.ones_like(a)
+    ssum = xp.zeros_like(a)
+    for k in range(cmax):
+        gate = stable_sigmoid(xp, (c - k - 0.5) / tau)
+        ssum = ssum + gate * term
+        term = term * a / (k + 1.0)
+    denom = (1.0 - rho_s) * ssum + top
+    return top / xp.maximum(denom, _EPS)
+
+
+def censor_weight(xp, arrive_t, completion, horizon, fail_t, tau):
+    """Smooth keep-weight for one sampled request — the relaxation of
+    the recorder's hard censoring mask ``(completion <= horizon) &
+    (arrive < fail) & (completion <= fail)``.  ``tau`` is in seconds
+    (a few slot widths); ``fail_t = +inf`` saturates its sigmoids to
+    exact 1.0, so unfailed servers censor only at the horizon."""
+    w = stable_sigmoid(xp, (horizon - completion) / tau)
+    w = w * stable_sigmoid(xp, (fail_t - arrive_t) / tau)
+    return w * stable_sigmoid(xp, (fail_t - completion) / tau)
+
+
+def soft_quantiles(lat, weights, qs=None, band_frac: float = 5e-4):
+    """Differentiable weighted-quantile head: ``[C, K]`` latencies with
+    per-sample keep-weights -> ``[C, len(qs)]``.
+
+    Anchored on the exact kernel's rank plan: ``quantile_ranks`` gives
+    the (pos, lo, hi) order statistics np.percentile would select at
+    the effective (weighted) count, a Gaussian kernel over fractional
+    ranks turns each anchor into a soft order statistic, and
+    ``quantile_lerp`` blends the two anchors with the exact path's
+    interpolation — so as the band shrinks the head converges to
+    ``fused_quantiles`` on unit weights.  The kernel bandwidth is
+    ``max(0.5, band_frac * n_eff)`` ranks: 0.5 keeps adjacent integer
+    ranks resolvable (forward agreement), larger fractions widen the
+    gradient support for planning.  Pad slots must carry weight 0.0
+    (their value may be ``+inf``); rows with no effective samples
+    return NaN like the hard head."""
+    import jax.numpy as jnp
+
+    from repro.kernels.ref import VECTOR_QS, quantile_lerp, quantile_ranks
+    if qs is None:
+        qs = VECTOR_QS
+    order = jnp.argsort(lat, axis=-1)
+    xs = jnp.take_along_axis(lat, order, axis=-1)
+    ws = jnp.take_along_axis(weights, order, axis=-1)
+    xs = jnp.where(ws > 0.0, xs, 0.0)         # never 0 * inf at the pads
+    cum = jnp.cumsum(ws, axis=-1)
+    n_eff = cum[..., -1]
+    # each sample sits at the center of its own weight mass, 0-indexed:
+    # unit weights give ranks 0..K-1 exactly
+    r = cum - 0.5 * ws - 0.5
+    pos, lo, hi = quantile_ranks(n_eff, qs)
+    band = jnp.maximum(band_frac * n_eff, 0.5)[..., None, None]
+
+    def soft_os(rank):                         # [C, Q] -> [C, Q]
+        d = (r[..., None, :] - rank[..., :, None]) / band
+        k = jnp.exp(-0.5 * d * d) * ws[..., None, :]
+        num = jnp.sum(k * xs[..., None, :], axis=-1)
+        return num / jnp.maximum(jnp.sum(k, axis=-1), _EPS)
+
+    a = soft_os(lo.astype(jnp.float32))
+    b = soft_os(hi.astype(jnp.float32))
+    out = quantile_lerp(a, b, pos - lo.astype(jnp.float32))
+    return jnp.where(n_eff[..., None] > 0.5, out, jnp.nan)
