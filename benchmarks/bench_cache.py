@@ -1,0 +1,287 @@
+"""Result-cache benchmark: warm re-run speedup, bit-identity, planner
+cell reuse, and the pipelined chunk path.
+
+Three measurements, one committed record (``BENCH_cache.json``):
+
+1. **Warm fig1-grid re-run** — the paper's Fig. 1 sweep shape (the
+   same grid ``bench_vector`` times) run three ways: uncached, cold
+   through a fresh cache directory (compute + store overhead), and
+   warm (every row served from disk).  The headline gate is the warm
+   speedup over the cold run, with every row required bit-identical
+   across all three — the cache may only change how fast an answer
+   arrives, never which answer arrives.
+
+2. **Planner cell reuse** — ``bench_plan``'s dense provisioning grid
+   populates a cache; ``run_plan`` on the same question with that
+   cache must then spend almost nothing: ``cell_evals`` counts only
+   cells the cache could not serve (gate: <= 5).  Both sides share one
+   SeedSequence spawn tree, so key sharing is by construction, not
+   coincidence.
+
+3. **Pipelined chunk execution** — the jax warm path with chunks
+   double-buffered (device scan of chunk k+1 overlapping host
+   finishing of chunk k) vs the strictly serial launch-then-finish
+   order, forced into several chunks via ``max_slot_elems``.  Gate:
+   pipelining is never slower than 1.10x the sync path and the rows
+   are identical.
+
+Usage:
+    PYTHONPATH=src python benchmarks/bench_cache.py             # full
+    PYTHONPATH=src python benchmarks/bench_cache.py --smoke --check
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import shutil
+import sys
+import tempfile
+import time
+
+REPO = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+sys.path.insert(0, os.path.join(REPO, "src"))
+if REPO not in sys.path:
+    sys.path.insert(0, REPO)
+
+from benchmarks._record import write_record  # noqa: E402
+from benchmarks.bench_vector import build_grid  # noqa: E402
+from repro.cache import ResultCache  # noqa: E402
+from repro.plan import PlanSpec, run_plan  # noqa: E402
+from repro.scenarios import get  # noqa: E402
+from repro.sweep import run_sweep  # noqa: E402
+from repro.sweep.spec import spawn_seed  # noqa: E402
+from repro.vector import (VectorConfig, compile_experiment,  # noqa: E402
+                          has_jax, run_cells)
+
+#: warm-over-cold floor: full scale pays real compute cold; smoke
+#: grids are small enough that fixed costs compress the ratio
+MIN_WARM_SPEEDUP = {"full": 10.0, "smoke": 3.0}
+MIN_HIT_FRAC = 0.9
+MAX_PLANNER_CELLS = 5
+#: pipelining must never cost more than this over strict sync
+MAX_PIPELINE_RATIO = 1.10
+
+#: bench_plan's provisioning question, shared seed tree and all
+PLAN_FULL = {"qps": 2600.0, "duration": 12.0, "n_clients": 8,
+             "policy": "jsq", "slo": 0.02, "n_grid": 24, "reps": 13,
+             "steps": 150, "starts": 3, "samples": 16384, "probe_reps": 5}
+PLAN_SMOKE = {"qps": 2600.0, "duration": 5.0, "n_clients": 8,
+              "policy": "jsq", "slo": 0.02, "n_grid": 8, "reps": 3,
+              "steps": 50, "starts": 1, "samples": 2048, "probe_reps": 2}
+SEED = 0
+
+
+def _row_bits(frame) -> list:
+    """The frame's rows as an exact comparable (declaration order)."""
+    return [(r.index, r.rep, r.params, r.seed, r.stream,
+             {k: repr(v) for k, v in r.metrics.items()})
+            for r in frame.rows]
+
+
+def _cell_bits(results) -> list:
+    return [(r.n, repr(r.mean), repr(r.p50), repr(r.p95), repr(r.p99),
+             r.dropped, r.samples.tobytes(), r.sample_ivl.tobytes())
+            for r in results]
+
+
+# ---------------------------------------------------------------------------
+# 1. Warm fig1-grid re-run
+# ---------------------------------------------------------------------------
+def sweep_section(smoke: bool, cache_root: str) -> dict:
+    sweep = build_grid(smoke, "vector")
+    cfg = VectorConfig()
+    n_tasks = len(sweep.tasks())
+    cache_dir = os.path.join(cache_root, "sweep")
+
+    print(f"  fig1 grid ({n_tasks} cells), uncached ...", file=sys.stderr,
+          flush=True)
+    run_sweep(sweep, vector_config=cfg)       # pay the jit compile once
+    t0 = time.perf_counter()
+    plain = run_sweep(sweep, vector_config=cfg)
+    uncached_wall = time.perf_counter() - t0
+
+    print("  cold through a fresh cache ...", file=sys.stderr, flush=True)
+    cold_cache = ResultCache(cache_dir=cache_dir)
+    t0 = time.perf_counter()
+    cold = run_sweep(sweep, vector_config=cfg, cache=cold_cache)
+    cold_wall = time.perf_counter() - t0
+
+    print("  warm re-run ...", file=sys.stderr, flush=True)
+    warm_cache = ResultCache(cache_dir=cache_dir)
+    t0 = time.perf_counter()
+    warm = run_sweep(sweep, vector_config=cfg, cache=warm_cache)
+    warm_wall = time.perf_counter() - t0
+
+    hit_frac = warm_cache.stats.hits / max(n_tasks, 1)
+    identical = (_row_bits(plain) == _row_bits(cold) == _row_bits(warm))
+    speedup = cold_wall / max(warm_wall, 1e-9)
+    print(f"    uncached {uncached_wall:.2f}s cold {cold_wall:.2f}s "
+          f"warm {warm_wall:.2f}s -> {speedup:.1f}x, "
+          f"hits {warm_cache.stats.hits}/{n_tasks}", file=sys.stderr)
+    return {
+        "tasks": n_tasks,
+        "uncached_wall_s": round(uncached_wall, 3),
+        "cold_wall_s": round(cold_wall, 3),
+        "warm_wall_s": round(warm_wall, 3),
+        "store_overhead_frac":
+            round(cold_wall / max(uncached_wall, 1e-9) - 1.0, 4),
+        "warm_speedup_vs_cold": round(speedup, 2),
+        "warm_hits": warm_cache.stats.hits,
+        "warm_misses": warm_cache.stats.misses,
+        "hit_frac": round(hit_frac, 4),
+        "rows_bit_identical": bool(identical),
+        "errors": len(plain.errors) + len(cold.errors) + len(warm.errors),
+    }
+
+
+# ---------------------------------------------------------------------------
+# 2. Planner cell reuse after a dense sweep
+# ---------------------------------------------------------------------------
+def planner_section(smoke: bool, cache_root: str) -> dict:
+    p = PLAN_SMOKE if smoke else PLAN_FULL
+    overrides = {"qps": p["qps"], "duration": p["duration"],
+                 "n_clients": p["n_clients"], "policy": p["policy"]}
+    cache_dir = os.path.join(cache_root, "plan")
+    cfg = VectorConfig()
+
+    progs, seeds = [], []
+    for n in range(1, p["n_grid"] + 1):
+        sc = get("steady", seed=SEED, slo=p["slo"], n_servers=n,
+                 **overrides)
+        prog = compile_experiment(sc.compile())
+        for rep in range(p["reps"]):
+            progs.append(prog)
+            seeds.append((spawn_seed(SEED, n, rep), rep))
+    print(f"  dense grid ({len(progs)} cells) into the cache ...",
+          file=sys.stderr, flush=True)
+    grid_cache = ResultCache(cache_dir=cache_dir)
+    t0 = time.perf_counter()
+    run_cells(progs, seeds, cfg, cache=grid_cache)
+    grid_wall = time.perf_counter() - t0
+
+    spec = PlanSpec(scenario="steady", objective="p99", slo=p["slo"],
+                    overrides=overrides, steps=p["steps"],
+                    starts=p["starts"], samples=p["samples"],
+                    probe_reps=p["probe_reps"], reps=p["reps"], seed=SEED)
+    print("  planner with the shared cache ...", file=sys.stderr,
+          flush=True)
+    plan_cache = ResultCache(cache_dir=cache_dir)
+    t0 = time.perf_counter()
+    res = run_plan(spec, cache=plan_cache)
+    plan_wall = time.perf_counter() - t0
+    print(f"    n_star={res.n_star} cell_evals={res.cell_evals} "
+          f"(cache hits {plan_cache.stats.hits})", file=sys.stderr)
+    return {
+        "grid_cells": len(progs),
+        "grid_wall_s": round(grid_wall, 3),
+        "plan_wall_s": round(plan_wall, 3),
+        "n_star": res.n_star,
+        "feasible": bool(res.feasible),
+        "cell_evals_with_cache": res.cell_evals,
+        "cache_hits": plan_cache.stats.hits,
+        "cache_misses": plan_cache.stats.misses,
+    }
+
+
+# ---------------------------------------------------------------------------
+# 3. Pipelined vs sync chunk execution (jax warm path)
+# ---------------------------------------------------------------------------
+def pipeline_section(smoke: bool) -> dict:
+    sweep = build_grid(smoke, "vector")
+    from repro.sweep import PointCtx
+    progs, seeds = [], []
+    for i, params, rep in sweep.tasks():
+        seed, stream = sweep.seed_for(i, rep)
+        ctx = PointCtx(params=params, index=i, rep=rep, seed=seed,
+                       stream=stream)
+        obj = sweep.factory(ctx)
+        exp = obj.compile() if hasattr(obj, "compile") else obj
+        progs.append(compile_experiment(exp))
+        seeds.append((seed, stream))
+    # force the grid into ~4 chunks so there is something to overlap
+    shape = progs[0].active.shape
+    per_cell = int(shape[0]) * int(shape[1])
+    elems = per_cell * max(1, len(progs) // 4)
+    base = dict(backend="jax", impl="ref", max_slot_elems=elems)
+
+    print(f"  pipeline: {len(progs)} cells in ~4 chunks ...",
+          file=sys.stderr, flush=True)
+    run_cells(progs, seeds, VectorConfig(**base))         # jit warm-up
+    t0 = time.perf_counter()
+    sync = run_cells(progs, seeds, VectorConfig(**base, pipeline=False))
+    sync_wall = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    piped = run_cells(progs, seeds, VectorConfig(**base, pipeline=True))
+    piped_wall = time.perf_counter() - t0
+    ratio = piped_wall / max(sync_wall, 1e-9)
+    print(f"    sync {sync_wall:.2f}s pipelined {piped_wall:.2f}s "
+          f"(ratio {ratio:.3f})", file=sys.stderr)
+    return {
+        "cells": len(progs),
+        "chunks": 4,
+        "sync_wall_s": round(sync_wall, 3),
+        "pipelined_wall_s": round(piped_wall, 3),
+        "pipelined_over_sync": round(ratio, 4),
+        "bit_identical": bool(_cell_bits(sync) == _cell_bits(piped)),
+    }
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI scale; writes the gitignored smoke record")
+    ap.add_argument("--check", action="store_true",
+                    help="exit non-zero if any gate fails")
+    args = ap.parse_args(argv)
+    scale = "smoke" if args.smoke else "full"
+    print(f"bench_cache ({scale}), jax={has_jax()}", file=sys.stderr)
+
+    cache_root = tempfile.mkdtemp(prefix="bench_cache.")
+    try:
+        sweep = sweep_section(args.smoke, cache_root)
+        planner = planner_section(args.smoke, cache_root) if has_jax() \
+            else None
+        pipeline = pipeline_section(args.smoke) if has_jax() else None
+    finally:
+        shutil.rmtree(cache_root, ignore_errors=True)
+
+    gates = {
+        "warm_speedup": bool(sweep["warm_speedup_vs_cold"]
+                             >= MIN_WARM_SPEEDUP[scale]),
+        "hit_frac": bool(sweep["hit_frac"] >= MIN_HIT_FRAC),
+        "rows_bit_identical": sweep["rows_bit_identical"],
+        "no_errors": sweep["errors"] == 0,
+    }
+    if planner is not None:
+        gates["planner_cells"] = bool(planner["cell_evals_with_cache"]
+                                      <= MAX_PLANNER_CELLS)
+    if pipeline is not None:
+        gates["pipeline_not_slower"] = bool(pipeline["pipelined_over_sync"]
+                                            <= MAX_PIPELINE_RATIO)
+        gates["pipeline_bit_identical"] = pipeline["bit_identical"]
+
+    payload = {
+        "benchmark": "bench_cache",
+        "scale": scale,
+        "jax_available": has_jax(),
+        "sweep": sweep,
+        "planner": planner,
+        "pipeline": pipeline,
+        "thresholds": {"min_warm_speedup": MIN_WARM_SPEEDUP[scale],
+                       "min_hit_frac": MIN_HIT_FRAC,
+                       "max_planner_cells": MAX_PLANNER_CELLS,
+                       "max_pipeline_ratio": MAX_PIPELINE_RATIO},
+        "gates": gates,
+    }
+    write_record("cache", payload, smoke=args.smoke)
+    print(json.dumps({"gates": gates,
+                      "warm_speedup": sweep["warm_speedup_vs_cold"],
+                      "hit_frac": sweep["hit_frac"]}, indent=1))
+    if args.check:
+        return 0 if all(gates.values()) else 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -18,7 +18,7 @@ from repro.analysis.lint.engine import Rule, SourceFile
 
 #: packages whose code executes inside a measurement
 MEASUREMENT_SCOPE = ("core/", "vector/", "sweep/", "scenarios/",
-                     "serving/", "analysis/", "plan/")
+                     "serving/", "analysis/", "plan/", "cache/")
 
 #: call suffixes that consume a seed as their first positional argument
 SEED_SINK_SUFFIXES = ("default_rng", "SeedSequence", "RandomState",
@@ -217,7 +217,7 @@ class WallclockInSim(Rule):
     description = ("wall-clock call in a simulated path "
                    "(inject a clock callable)")
     scope = ("core/", "vector/", "sweep/", "scenarios/", "analysis/",
-             "plan/")
+             "plan/", "cache/")
 
     def check(self, sf: SourceFile) -> Iterator[tuple]:
         for node in ast.walk(sf.tree):

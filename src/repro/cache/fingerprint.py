@@ -1,0 +1,151 @@
+"""Canonical content fingerprints — what makes a cell addressable.
+
+A cache hit must be *provably* the same computation, so the key is a
+SHA-256 over a canonical walk of everything that decides a cell's
+bits: the compiled program/experiment (dataclasses walked field by
+field, ndarrays hashed dtype + shape + raw bytes, floats by ``repr``
+so ``0.1`` and ``0.30000000000000004`` key differently exactly when
+they compute differently), the derived (seed, stream) pair, the
+bit-affecting runtime config, and a code-version salt.
+
+The salt (``code_salt``) digests every measurement-path source file
+under ``src/repro`` (the analysis linter is excluded — static tooling
+cannot move a result bit) plus a format-version constant, so ANY code
+change that could move bits invalidates the whole cache rather than
+silently serving stale rows.  ``REPRO_CACHE_SALT`` overrides it (tests
+use this to simulate stale entries).
+
+Objects that cannot be canonically walked (lambdas, closures, open
+handles) raise ``Unfingerprintable`` — callers treat that as "not
+cacheable", never as an error.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import os
+from functools import lru_cache, partial
+
+import numpy as np
+
+#: bump to invalidate every existing cache entry on a format change
+CACHE_FORMAT = 1
+
+#: packages whose source participates in the code-version salt — the
+#: measurement path.  ``analysis`` (static lint) is deliberately out.
+_SALT_EXCLUDE = ("analysis",)
+
+
+class Unfingerprintable(TypeError):
+    """The object has no canonical content form (lambda, closure,
+    handle, ...) — the computation is valid but not cacheable."""
+
+
+def _update_callable(h, fn) -> None:
+    mod = getattr(fn, "__module__", None)
+    qual = getattr(fn, "__qualname__", getattr(fn, "__name__", None))
+    if not mod or not qual or "<lambda>" in qual or "<locals>" in qual \
+            or mod == "__main__":
+        raise Unfingerprintable(f"callable {fn!r} has no stable "
+                                f"module-level identity")
+    h.update(f"fn:{mod}:{qual};".encode())
+
+
+def _update(h, obj) -> None:
+    """Stream one object's canonical form into the hash."""
+    if obj is None:
+        h.update(b"N;")
+    elif isinstance(obj, bool):
+        h.update(b"T;" if obj else b"F;")
+    elif isinstance(obj, (int, np.integer)):
+        h.update(f"i{int(obj)};".encode())
+    elif isinstance(obj, (float, np.floating)):
+        h.update(f"f{float(obj)!r};".encode())
+    elif isinstance(obj, str):
+        h.update(f"s{len(obj)}:".encode())
+        h.update(obj.encode())
+    elif isinstance(obj, bytes):
+        h.update(f"b{len(obj)}:".encode())
+        h.update(obj)
+    elif isinstance(obj, np.ndarray):
+        h.update(f"nd:{obj.dtype.str}:{obj.shape};".encode())
+        h.update(np.ascontiguousarray(obj).tobytes())
+    elif isinstance(obj, (list, tuple)):
+        h.update(f"l{len(obj)}[".encode())
+        for v in obj:
+            _update(h, v)
+        h.update(b"];")
+    elif isinstance(obj, dict):
+        h.update(f"d{len(obj)}{{".encode())
+        for k in sorted(obj, key=lambda k: (type(k).__name__, repr(k))):
+            _update(h, k)
+            h.update(b"=")
+            _update(h, obj[k])
+        h.update(b"};")
+    elif isinstance(obj, partial):
+        h.update(b"partial(")
+        _update(h, obj.func)
+        _update(h, tuple(obj.args))
+        _update(h, dict(obj.keywords))
+        h.update(b");")
+    elif dataclasses.is_dataclass(obj) and not isinstance(obj, type):
+        cls = type(obj)
+        h.update(f"dc:{cls.__module__}.{cls.__qualname__}(".encode())
+        for f in sorted(dataclasses.fields(obj), key=lambda f: f.name):
+            h.update(f.name.encode())
+            h.update(b"=")
+            _update(h, getattr(obj, f.name))
+        h.update(b");")
+    elif callable(obj):
+        _update_callable(h, obj)
+    elif hasattr(obj, "__dict__"):
+        # plain object: class identity + its public attribute dict (the
+        # declared configuration; leading-underscore derived state is
+        # excluded so memo fields never split keys)
+        cls = type(obj)
+        if cls.__module__ == "__main__":
+            raise Unfingerprintable(f"{cls.__qualname__} defined in "
+                                    f"__main__ has no stable identity")
+        h.update(f"o:{cls.__module__}.{cls.__qualname__}(".encode())
+        attrs = {k: v for k, v in vars(obj).items()
+                 if not k.startswith("_")}
+        _update(h, attrs)
+        h.update(b");")
+    else:
+        raise Unfingerprintable(f"no canonical form for "
+                                f"{type(obj).__name__}: {obj!r}")
+
+
+def fingerprint(obj) -> str:
+    """SHA-256 hex digest of ``obj``'s canonical content form."""
+    h = hashlib.sha256()
+    _update(h, obj)
+    return h.hexdigest()
+
+
+@lru_cache(maxsize=1)
+def code_salt() -> str:
+    """Digest of the measurement-path source tree (+ format version).
+
+    Computed once per process; ``REPRO_CACHE_SALT`` overrides it for
+    tests that need to simulate a stale cache."""
+    env = os.environ.get("REPRO_CACHE_SALT")
+    if env:
+        return env
+    h = hashlib.sha256()
+    h.update(f"format:{CACHE_FORMAT};".encode())
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    for dirpath, dirnames, filenames in sorted(os.walk(root)):
+        dirnames.sort()
+        rel_dir = os.path.relpath(dirpath, root)
+        top = rel_dir.split(os.sep, 1)[0]
+        if top in _SALT_EXCLUDE or "__pycache__" in rel_dir:
+            continue
+        for fn in sorted(filenames):
+            if not fn.endswith(".py"):
+                continue
+            rel = os.path.join(rel_dir, fn)
+            h.update(f"file:{rel};".encode())
+            with open(os.path.join(dirpath, fn), "rb") as f:
+                h.update(f.read())
+    return h.hexdigest()[:16]

@@ -512,7 +512,7 @@ class EngineRuntime(Runtime):
 # ---------------------------------------------------------------------------
 def run_scenario(scenario, backend: str = "sim", *, rep: int = 0,
                  engines=None, engine_factory=None, vector_config=None,
-                 **engine_kw) -> Runtime:
+                 cache=None, **engine_kw) -> Runtime:
     """Compile a ``Scenario`` and execute it on the chosen backend.
 
     ``backend="sim"`` runs the deterministic virtual-time simulator;
@@ -528,7 +528,7 @@ def run_scenario(scenario, backend: str = "sim", *, rep: int = 0,
         rt: Runtime = SimulatorRuntime(exp, rep=rep)
     elif backend == "vector":
         from repro.vector import VectorRuntime
-        rt = VectorRuntime(exp, rep=rep, config=vector_config)
+        rt = VectorRuntime(exp, rep=rep, config=vector_config, cache=cache)
     elif backend == "engine":
         if engines is None:
             raise ValueError("backend='engine' needs engines=")

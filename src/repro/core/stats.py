@@ -22,7 +22,7 @@ Two recorder modes:
 from __future__ import annotations
 
 import math
-from collections import defaultdict
+from collections import OrderedDict, defaultdict
 from dataclasses import dataclass
 from typing import Iterable, Optional
 
@@ -277,8 +277,11 @@ def pctl(xs, q: float) -> float:
 #: size.  ``np.unique(np.concatenate([lo, hi]))`` costs more than the
 #: partition itself when called once per grid cell x interval, and the
 #: vector runtime asks for the same fixed (50, 95, 99) tuple at a small
-#: set of sizes — hoist the plan and reuse it.
-_QPLAN_CACHE: dict = {}
+#: set of sizes — hoist the plan and reuse it.  A capped LRU (oldest
+#: entry out, not a wholesale clear): soak-scale sweeps touch an
+#: unbounded set of sample sizes, and the plan is a pure function of
+#: its key, so eviction can only ever cost a recompute — never a bit.
+_QPLAN_CACHE: OrderedDict = OrderedDict()
 _QPLAN_CACHE_CAP = 4096
 
 
@@ -290,9 +293,11 @@ def _quantile_plan(n: int, qs: tuple) -> tuple:
         lo = np.floor(pos).astype(np.intp)
         hi = np.ceil(pos).astype(np.intp)
         kth = np.unique(np.concatenate([lo, hi]))
-        if len(_QPLAN_CACHE) >= _QPLAN_CACHE_CAP:
-            _QPLAN_CACHE.clear()
         plan = _QPLAN_CACHE[key] = (kth, lo, hi, pos - lo)
+        while len(_QPLAN_CACHE) > _QPLAN_CACHE_CAP:
+            _QPLAN_CACHE.popitem(last=False)
+    else:
+        _QPLAN_CACHE.move_to_end(key)
     return plan
 
 

@@ -98,6 +98,8 @@ def main(argv=None) -> int:
     ap.add_argument("--out", default=OUT_DEFAULT,
                     help=f"artifact directory (default {OUT_DEFAULT})")
     ap.add_argument("--quiet", action="store_true")
+    from repro.cache import add_cache_args, cache_from_args
+    add_cache_args(ap)
     args = ap.parse_args(argv)
 
     if args.list:
@@ -146,7 +148,9 @@ def main(argv=None) -> int:
     def _progress(msg: str) -> None:
         print(msg, file=sys.stderr, flush=True)
 
-    res = run_plan(spec, progress=None if args.quiet else _progress)
+    cache = cache_from_args(args)
+    res = run_plan(spec, progress=None if args.quiet else _progress,
+                   cache=cache)
 
     os.makedirs(args.out, exist_ok=True)
     path = os.path.join(args.out, f"plan_{args.scenario}.json")
@@ -165,6 +169,8 @@ def main(argv=None) -> int:
               f"{args.objective}={v['mean']:.4g} +- {v['ci95']:.4g} "
               f"({'feasible' if res.feasible else 'INFEASIBLE'}; "
               f"{res.cell_evals} exact cells)")
+    if cache is not None:
+        print(f"cache[{cache.cache_dir}] {cache.stats}")
     print(f"wrote {path}")
     return 0 if res.feasible else 1
 

@@ -112,7 +112,7 @@ class _ExactEvaluator:
     only in their (seed, stream) pairs, derived through the sweep
     machinery's SeedSequence spawn tree."""
 
-    def __init__(self, spec: PlanSpec, vector_config=None):
+    def __init__(self, spec: PlanSpec, vector_config=None, cache=None):
         from repro.vector import VectorConfig
         self.spec = spec
         base = vector_config or VectorConfig()
@@ -122,6 +122,12 @@ class _ExactEvaluator:
         self.cfg = dataclasses.replace(base, dt=spec.dt)
         self.cells = 0
         self._progs: dict = {}
+        # content-addressed reuse: cells repeat across the ladder's
+        # multi-start restarts (memory LRU) and across runs (disk) —
+        # e.g. a planner run after a dense sweep of the same scenario
+        # finds nearly every cell already stored.  Cells served from
+        # the cache are NOT counted: ``cells`` is genuinely new work.
+        self.cache = cache
 
     def _program(self, n: int):
         from repro.scenarios import get
@@ -148,8 +154,14 @@ class _ExactEvaluator:
         prog = self._program(n)
         seeds = [(spawn_seed(self.spec.seed, int(n), rep), rep)
                  for rep in range(reps)]
-        results = run_cells([prog] * reps, seeds, self.cfg)
-        self.cells += reps
+        if self.cache is None:
+            results = run_cells([prog] * reps, seeds, self.cfg)
+            self.cells += reps
+        else:
+            before = self.cache.stats.hits
+            results = run_cells([prog] * reps, seeds, self.cfg,
+                                cache=self.cache)
+            self.cells += reps - (self.cache.stats.hits - before)
         return [_metric_of(r, self.spec.objective) for r in results]
 
 
@@ -165,10 +177,14 @@ def _spread_inits(box: tuple, start: int, starts: int) -> float:
 
 def run_plan(spec: PlanSpec, *,
              progress: Optional[Callable[[str], None]] = None,
-             vector_config=None) -> PlanResult:
+             vector_config=None, cache=None) -> PlanResult:
     """Execute one planning problem end to end: multi-start Adam on the
     smoothed surrogate, then integer rounding verified on the exact
-    vector runtime."""
+    vector runtime.
+
+    ``cache`` (a ``repro.cache.ResultCache``) lets the exact ladder
+    reuse cells within the run and across runs; ``cell_evals`` then
+    counts only cells that were actually computed."""
     from repro.vector import has_jax
     if not has_jax():
         raise PlanError("repro.plan needs jax (the surrogate is "
@@ -251,7 +267,7 @@ def run_plan(spec: PlanSpec, *,
         return result
 
     # ---- integer rounding + exact-runtime ladder ---------------------------
-    ev = _ExactEvaluator(spec, vector_config=vector_config)
+    ev = _ExactEvaluator(spec, vector_config=vector_config, cache=cache)
     lo_n = int(np.ceil(lo["capacity"]))
     hi_n = int(np.floor(hi["capacity"]))
     n = int(np.clip(round(best_params["capacity"]), lo_n, hi_n))
@@ -326,7 +342,7 @@ def plan_spec_from_sweep(sweep) -> PlanSpec:
 
 def run_plan_sweep(sweep, *,
                    progress: Optional[Callable[[str], None]] = None,
-                   vector_config=None):
+                   vector_config=None, cache=None):
     """Execute a ``mode="optimize"`` sweep -> ``ResultFrame`` whose rows
     are phase-tagged: one row per optimizer start, one per exact-ladder
     probe, and one final verified row — so planner runs archive through
@@ -334,7 +350,8 @@ def run_plan_sweep(sweep, *,
     from repro.sweep.results import ResultFrame, SweepRow
 
     spec = plan_spec_from_sweep(sweep)
-    res = run_plan(spec, progress=progress, vector_config=vector_config)
+    res = run_plan(spec, progress=progress, vector_config=vector_config,
+                   cache=cache)
     rows = []
     for s, row in enumerate(res.starts):
         rows.append(SweepRow(

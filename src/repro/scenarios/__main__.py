@@ -92,6 +92,8 @@ def main(argv=None) -> int:
     ap.add_argument("--vector-devices", type=int, default=0,
                     help="vector backend: shard cells over N local "
                          "devices (0 = all)")
+    from repro.cache import add_cache_args, cache_from_args
+    add_cache_args(ap)
     args = ap.parse_args(argv)
 
     if args.list or not args.name:
@@ -109,6 +111,7 @@ def main(argv=None) -> int:
                                    ("slo", args.slo)) if v is not None}
     sc = scenarios.get(args.name, seed=args.seed, **overrides)
 
+    cache = cache_from_args(args)
     if args.backend in ("sim", "vector"):
         vcfg = None
         if args.backend == "vector":
@@ -116,7 +119,7 @@ def main(argv=None) -> int:
             vcfg = VectorConfig(backend=args.vector_backend,
                                 impl=args.vector_impl,
                                 devices=args.vector_devices)
-        rt = run_scenario(sc, args.backend, vector_config=vcfg)
+        rt = run_scenario(sc, args.backend, vector_config=vcfg, cache=cache)
     else:
         from repro.scenarios.backends import (build_stub_engines,
                                               run_experiment_on_real_engines)
@@ -142,6 +145,8 @@ def main(argv=None) -> int:
             rt.run()
 
     _print_report(rt, sc, args.backend)
+    if cache is not None:
+        print(f"cache[{cache.cache_dir}] {cache.stats}")
     if args.csv:
         _write_csv(rt, args.csv)
     return 0

@@ -198,6 +198,8 @@ def main(argv=None) -> int:
                     help=f"artifact directory (default {OUT_DEFAULT})")
     ap.add_argument("--quiet", action="store_true",
                     help="suppress per-task progress lines")
+    from repro.cache import add_cache_args, cache_from_args
+    add_cache_args(ap)
     args = ap.parse_args(argv)
 
     if args.list:
@@ -242,14 +244,17 @@ def main(argv=None) -> int:
     from repro.vector import VectorConfig
     vcfg = VectorConfig(backend=args.vector_backend, impl=args.vector_impl,
                         devices=args.vector_devices)
+    cache = cache_from_args(args)
     frame = run_sweep(sweep, executor=args.executor, workers=args.workers,
                       progress=None if args.quiet else _progress,
-                      vector_config=vcfg)
+                      vector_config=vcfg, cache=cache)
     json_path = os.path.join(args.out, f"{frame.name}.json")
     csv_path = os.path.join(args.out, f"{frame.name}.csv")
     frame.to_json(json_path)
     frame.to_csv(csv_path)
     _print_aggregate(frame)
+    if cache is not None:
+        print(f"cache[{cache.cache_dir}] {cache.stats}")
     print(f"wrote {json_path}")
     print(f"wrote {csv_path}")
     return 1 if frame.errors else 0

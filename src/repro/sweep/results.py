@@ -166,28 +166,72 @@ class ResultFrame:
         return {"name": self.name, "spec": self.spec,
                 "rows": [r.to_dict() for r in self.rows]}
 
+    def iter_json(self, indent: int = 1):
+        """Yield the frame's JSON text in row-sized pieces.  The
+        concatenation is byte-identical to
+        ``json.dumps(self.to_dict(), indent=indent)`` (a test pins
+        this), but only one row is materialized at a time — the
+        soak-scale path."""
+        pad1 = " " * indent
+        yield "{\n"
+        yield f'{pad1}"name": {json.dumps(self.name)},\n'
+        yield f'{pad1}"spec": {_dumps_at(self.spec, indent, 1)},\n'
+        if not self.rows:
+            yield f'{pad1}"rows": []\n'
+        else:
+            yield f'{pad1}"rows": [\n'
+            pad2 = " " * (2 * indent)
+            last = len(self.rows) - 1
+            for i, r in enumerate(self.rows):
+                body = _dumps_at(r.to_dict(), indent, 2)
+                yield f"{pad2}{body}" + (",\n" if i != last else "\n")
+            yield f"{pad1}]\n"
+        yield "}"
+
     def to_json(self, path: Optional[str] = None, indent: int = 1) -> str:
         """Serialize (and optionally write) the frame.  Python's JSON
         encoder emits ``repr``-exact floats (and NaN/Infinity literals),
         so ``from_json(to_json(frame))`` reproduces every value
-        bit-for-bit."""
-        text = json.dumps(self.to_dict(), indent=indent)
+        bit-for-bit.  With ``path`` the frame is STREAMED to the file
+        row by row (no whole-frame string) and the path is returned;
+        without, the text itself is returned."""
         if path is not None:
             os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
             with open(path, "w") as f:
-                f.write(text)
-        return text
+                for piece in self.iter_json(indent):
+                    f.write(piece)
+            return path
+        return "".join(self.iter_json(indent))
 
     @classmethod
     def from_json(cls, text_or_path: str) -> "ResultFrame":
+        """Load a frame from JSON text or a file path.  File input is
+        parsed incrementally (row by row, bounded buffer) — a
+        soak-scale artifact never materializes as one string."""
         if "\n" not in text_or_path and os.path.exists(text_or_path):
+            frame = cls(name="")
             with open(text_or_path) as f:
-                text = f.read()
-        else:
-            text = text_or_path
-        d = json.loads(text)
+                for key, val in _iter_frame_stream(f):
+                    if key == "row":
+                        frame.rows.append(SweepRow.from_dict(val))
+                    elif key == "name":
+                        frame.name = val
+                    elif key == "spec":
+                        frame.spec = val
+            return frame
+        d = json.loads(text_or_path)
         return cls(name=d["name"], spec=d.get("spec", {}),
                    rows=[SweepRow.from_dict(r) for r in d.get("rows", [])])
+
+    @classmethod
+    def iter_json_rows(cls, path: str):
+        """Yield ``SweepRow``s straight off a frame file, one at a time
+        — stream consumers (drift detectors, row filters) never hold
+        the whole frame."""
+        with open(path) as f:
+            for key, val in _iter_frame_stream(f):
+                if key == "row":
+                    yield SweepRow.from_dict(val)
 
     # --------------------------------------------------------------- CSV
     def to_csv(self, path: str, aggregated: Optional[str] = None) -> str:
@@ -219,6 +263,111 @@ class ResultFrame:
             for r in rows:
                 w.writerow([r.get(c, "") for c in cols])
         return path
+
+
+# ---------------------------------------------------------------------------
+# Streaming JSON plumbing
+# ---------------------------------------------------------------------------
+def _dumps_at(obj, indent: int, depth: int) -> str:
+    """``json.dumps(obj, indent=indent)`` re-anchored at nesting
+    ``depth`` — every newline gains the enclosing indentation, which is
+    exactly how the stock encoder lays out a nested value."""
+    s = json.dumps(obj, indent=indent)
+    if "\n" in s:
+        s = s.replace("\n", "\n" + " " * (indent * depth))
+    return s
+
+
+class _JsonStream:
+    """Incremental JSON reader over a file object: a bounded growing
+    buffer + ``JSONDecoder.raw_decode``, with the consumed prefix
+    dropped after every refill so memory tracks the LARGEST single
+    value, not the file."""
+
+    _WS = " \t\n\r"
+
+    def __init__(self, f, chunk: int = 1 << 16):
+        self.f = f
+        self.chunk = chunk
+        self.buf = ""
+        self.pos = 0
+        self._dec = json.JSONDecoder()
+
+    def _fill(self) -> bool:
+        data = self.f.read(self.chunk)
+        if not data:
+            return False
+        if self.pos:
+            self.buf = self.buf[self.pos:]
+            self.pos = 0
+        self.buf += data
+        return True
+
+    def peek(self) -> str:
+        """Next non-whitespace char ('' at EOF); does not consume."""
+        while True:
+            while self.pos < len(self.buf) and \
+                    self.buf[self.pos] in self._WS:
+                self.pos += 1
+            if self.pos < len(self.buf):
+                return self.buf[self.pos]
+            if not self._fill():
+                return ""
+
+    def expect(self, ch: str) -> None:
+        got = self.peek()
+        if got != ch:
+            raise ValueError(f"malformed frame JSON: expected {ch!r}, "
+                             f"got {got!r}")
+        self.pos += 1
+
+    def value(self):
+        """Decode one complete JSON value, refilling as needed."""
+        self.peek()                       # position at the value start
+        while True:
+            try:
+                obj, end = self._dec.raw_decode(self.buf, self.pos)
+            except ValueError:
+                if not self._fill():
+                    raise
+                continue
+            if end == len(self.buf) and self._fill():
+                # the value touched the buffer end: it might be a
+                # truncated number — re-decode with more data
+                continue
+            self.pos = end
+            return obj
+
+
+def _iter_frame_stream(f):
+    """Yield ``(key, value)`` per top-level frame entry, with the
+    ``rows`` list exploded into one ``("row", dict)`` per element."""
+    s = _JsonStream(f)
+    s.expect("{")
+    if s.peek() == "}":
+        return
+    while True:
+        key = s.value()
+        s.expect(":")
+        if key == "rows" and s.peek() == "[":
+            s.pos += 1
+            if s.peek() == "]":
+                s.pos += 1
+            else:
+                while True:
+                    yield ("row", s.value())
+                    if s.peek() == ",":
+                        s.pos += 1
+                        continue
+                    s.expect("]")
+                    break
+        else:
+            yield (key, s.value())
+        if s.peek() == ",":
+            s.pos += 1
+            continue
+        s.expect("}")
+        return
 
 
 @dataclass(frozen=True)

@@ -24,6 +24,7 @@ fast lane rather than a bit-identical replay):
 from __future__ import annotations
 
 import math
+from collections import OrderedDict
 from dataclasses import dataclass, field
 from typing import Optional
 
@@ -38,6 +39,37 @@ FREE_POLICIES = ("jsq", "p2c")
 
 class VectorCompileError(ValueError):
     """The experiment uses a feature the vector backend cannot lower."""
+
+
+#: (schedule fingerprint, n_slots, repr(dt)) -> NaN-cleaned rate array.
+#: Grids that sweep only capacity/policy repeat the SAME ``QPSSchedule``
+#: across every cell; the rate evaluation (trace interpolation, diurnal
+#: curves) is the dominant compile cost there, so compute it once per
+#: unique schedule.  Cached arrays are frozen (read-only views) and the
+#: memo is content-keyed, so sharing cannot change any program's bits.
+_RATE_CACHE: OrderedDict = OrderedDict()
+_RATE_CACHE_CAP = 256
+
+
+def _schedule_rates(schedule, centers: np.ndarray, n_slots: int,
+                    dt: float) -> np.ndarray:
+    from repro.cache.fingerprint import Unfingerprintable, fingerprint
+    try:
+        key = (fingerprint(schedule), n_slots, repr(float(dt)))
+    except Unfingerprintable:
+        r = np.asarray(schedule.rate_array(centers), float)
+        return np.where(np.isnan(r), 0.0, r)
+    r = _RATE_CACHE.get(key)
+    if r is None:
+        r = np.asarray(schedule.rate_array(centers), float)
+        r = np.where(np.isnan(r), 0.0, r)
+        r.setflags(write=False)
+        _RATE_CACHE[key] = r
+        while len(_RATE_CACHE) > _RATE_CACHE_CAP:
+            _RATE_CACHE.popitem(last=False)
+    else:
+        _RATE_CACHE.move_to_end(key)
+    return r
 
 
 @dataclass
@@ -179,8 +211,7 @@ def compile_experiment(exp: Experiment, dt: float = 0.005) -> VectorProgram:
     rates = np.zeros((len(clients), n_slots))
     ends = np.full(len(clients), exp.duration)
     for i, c in enumerate(clients):
-        r = np.asarray(c.schedule.rate_array(centers), float)
-        r = np.where(np.isnan(r), 0.0, r)
+        r = _schedule_rates(c.schedule, centers, n_slots, dt)
         end = min(c.end_time, exp.duration) if c.end_time is not None \
             else exp.duration
         masked = np.where((centers >= c.start_time) & (centers < end),

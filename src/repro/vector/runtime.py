@@ -78,6 +78,11 @@ class VectorConfig:
                                     # size (1 still runs the shard layer)
     bucket: bool = True             # geometric (T, S) shape-bucketing
     max_slot_elems: int = 64_000_000   # chunk cells when T*C*S exceeds this
+    jit_cache_size: int = 8         # compiled-runner LRU entries (eviction
+                                    # only costs a recompile, never bits)
+    pipeline: bool = True           # double-buffer chunks: the device scan
+                                    # of chunk k+1 overlaps host finishing
+                                    # (quantiles, cache writes) of chunk k
     soft: bool = False              # differentiable mode: smoothed
                                     # water-filling / Erlang-C / censoring
                                     # and the soft quantile head (jax
@@ -338,7 +343,7 @@ _JIT_CACHE_CAP = 8
 
 
 def _jax_runner(step_builder, jit: bool, impl: str, shard: int,
-                shape_key: tuple):
+                shape_key: tuple, cap: int = _JIT_CACHE_CAP):
     key = (step_builder, jit, impl, shard, shape_key)
     fn = _JIT_CACHE.get(key)
     if fn is not None:
@@ -375,7 +380,7 @@ def _jax_runner(step_builder, jit: bool, impl: str, shard: int,
     else:
         fn = run
     _JIT_CACHE[key] = fn
-    while len(_JIT_CACHE) > _JIT_CACHE_CAP:
+    while len(_JIT_CACHE) > max(1, cap):
         _JIT_CACHE.popitem(last=False)
     return fn
 
@@ -418,8 +423,11 @@ def _pad_cell_axis(a: np.ndarray, pad: int, axis: int, fill=0.0):
     return np.pad(a, width, constant_values=fill)
 
 
-def _scan_jax(step_builder, consts, carry, xs_seq, cfg: VectorConfig):
-    import jax
+def _scan_jax_launch(step_builder, consts, carry, xs_seq,
+                     cfg: VectorConfig):
+    """Dispatch the chunk's scan and return immediately (jax dispatch is
+    async: the device computes while the host moves on).  Pair with
+    ``_scan_jax_finish``, which blocks on the transfer."""
     import jax.numpy as jnp
 
     impl = cfg.resolve_impl()
@@ -456,8 +464,15 @@ def _scan_jax(step_builder, consts, carry, xs_seq, cfg: VectorConfig):
                  for i, x in enumerate(xs_seq))
     shape_key = (xs_j[0].shape[0],) + carry_j[0].shape
     runner = _jax_runner(step_builder, cfg.jit, impl,
-                         n_dev if use_shard else 0, shape_key)
-    out_carry, outs = runner(consts_j, carry_j, xs_j)
+                         n_dev if use_shard else 0, shape_key,
+                         cap=cfg.jit_cache_size)
+    return runner(consts_j, carry_j, xs_j), C
+
+
+def _scan_jax_finish(raw):
+    """Block on a launched chunk and widen host-side to f64."""
+    import jax
+    (out_carry, outs), C = raw
     # ONE device->host sync for the whole chunk: the previous per-array
     # np.asarray form issued ~10 blocking transfers per chunk, which is
     # what left the warm jax path behind the NumPy fallback on small
@@ -465,6 +480,11 @@ def _scan_jax(step_builder, consts, carry, xs_seq, cfg: VectorConfig):
     out_carry, outs = jax.device_get((out_carry, outs))
     return (tuple(np.asarray(c, np.float64)[:C] for c in out_carry),
             tuple(np.asarray(o, np.float64)[:, :C] for o in outs))
+
+
+def _scan_jax(step_builder, consts, carry, xs_seq, cfg: VectorConfig):
+    return _scan_jax_finish(
+        _scan_jax_launch(step_builder, consts, carry, xs_seq, cfg))
 
 
 # ---------------------------------------------------------------------------
@@ -561,10 +581,25 @@ def _plan_groups(programs: Sequence[VectorProgram],
 
 def run_cells(programs: Sequence[VectorProgram],
               seeds: Sequence[tuple],
-              config: Optional[VectorConfig] = None) -> list[VectorResult]:
+              config: Optional[VectorConfig] = None,
+              cache=None) -> list[VectorResult]:
     """Execute one cell per (program, (seed, stream)) pair — the whole
     grid as one batched array program per (family, shape bucket),
-    chunked to bound scan memory."""
+    chunked to bound scan memory.
+
+    With a ``ResultCache``, cached cells are filtered out BEFORE
+    ``_plan_groups``: only cold cells enter the batched scan, so a
+    re-run of a 117-cell grid with 3 edited points launches 3 cells.
+    Each cell's draws come from its own seeded Generator, so which
+    cells happen to be cold can never change any cell's bits.
+
+    Chunks are double-buffered when ``cfg.pipeline``: the device scan
+    of chunk k+1 is dispatched (async) before chunk k's host finishing
+    (device fetch, sampling, quantiles, cache writes) runs, overlapping
+    the two.  ``pipeline=False`` restores strictly serial
+    launch-then-finish; both orders produce identical rows because a
+    cell's numbers depend only on its own program, seed, and config.
+    """
     cfg = config or VectorConfig()
     backend = cfg.resolve_backend()
     if cfg.soft and backend != "jax":
@@ -572,22 +607,61 @@ def run_cells(programs: Sequence[VectorProgram],
                            "backend: the soft quantile head runs "
                            "through jnp (use backend='jax' or 'auto')")
     results: list[Optional[VectorResult]] = [None] * len(programs)
-    for batched, shape, idxs in _plan_groups(programs, cfg):
+    keys: list[Optional[str]] = [None] * len(programs)
+    if cache is not None:
+        cold = []
+        for i, (p, s) in enumerate(zip(programs, seeds)):
+            keys[i] = cache.cell_key(p, s, cfg)
+            hit = cache.get_cell(keys[i]) if keys[i] is not None else None
+            if hit is not None:
+                results[i] = hit
+            else:
+                cold.append(i)
+    else:
+        cold = list(range(len(programs)))
+    if not cold:
+        return results  # type: ignore[return-value]
+
+    cold_progs = [programs[i] for i in cold]
+    chunks = []                     # (batched, shape, indices into cold)
+    for batched, shape, idxs in _plan_groups(cold_progs, cfg):
         # chunk cells so T*C*S stays within the memory budget
         per_cell = max(shape[0] * shape[1], 1)
         chunk = max(1, cfg.max_slot_elems // per_cell)
         for lo in range(0, len(idxs), chunk):
-            part = idxs[lo:lo + chunk]
-            for i, res in zip(part, _run_family(
-                    [programs[i] for i in part],
-                    [seeds[i] for i in part], batched, backend, cfg,
-                    shape)):
-                results[i] = res
+            chunks.append((batched, shape, idxs[lo:lo + chunk]))
+
+    def finish(state, part):
+        for j, res in zip(part, _finish_family(state)):
+            i = cold[j]
+            results[i] = res
+            if cache is not None and keys[i] is not None:
+                cache.put_cell(keys[i], res)
+
+    pending = None
+    for batched, shape, part in chunks:
+        state = _launch_family([cold_progs[j] for j in part],
+                               [seeds[cold[j]] for j in part],
+                               batched, backend, cfg, shape)
+        if not cfg.pipeline:
+            finish(state, part)
+            continue
+        if pending is not None:
+            finish(*pending)
+        pending = (state, part)
+    if pending is not None:
+        finish(*pending)
     return results  # type: ignore[return-value]
 
 
-def _run_family(progs: list, seeds: list, batched: bool, backend: str,
-                cfg: VectorConfig, shape: tuple) -> list[VectorResult]:
+def _launch_family(progs: list, seeds: list, batched: bool, backend: str,
+                   cfg: VectorConfig, shape: tuple) -> dict:
+    """Draw, assemble, and DISPATCH one (family, shape) chunk.
+
+    On the jax backend the scan is launched asynchronously and this
+    returns before it completes; the host-side analytic aux (Erlang-C,
+    pooled laws, stretch) is computed after dispatch so it overlaps the
+    device scan.  ``_finish_family`` consumes the returned state."""
     C = len(progs)
     T, S = shape
     dt = progs[0].dt
@@ -609,17 +683,40 @@ def _run_family(progs: list, seeds: list, batched: bool, backend: str,
                             constant_values=-1) for p in progs])
     t_idx = np.arange(T, dtype=np.int64)
 
-    aux = {}
     if not batched:
-        m_w = np.stack([np.pad(p.work_mean, (0, S - p.n_servers),
-                               constant_values=1.0) for p in progs])
-        v_w = np.stack([np.pad(p.work_var, (0, S - p.n_servers))
-                        for p in progs])
         consts = {"c": c, "fail_slot": fail, "dt": dt}
         xs = (t_idx, stack("Nc"), stack("Wc"), stack("Nf"), stack("Wf"),
               act, acc, spd)
         carry = tuple(np.zeros((C, S)) for _ in range(2)) + (np.zeros(C),)
         builder = _scalar_step
+    else:
+        tm = np.array([p.service.t_memory for p in progs])[:, None]
+        tc = np.array([p.service.t_compute_per_seq for p in progs])[:, None]
+        nm = np.array([p.new_mean for p in progs])[:, None]
+        consts = {"c": c, "fail_slot": fail, "dt": dt, "tm": tm, "tc": tc,
+                  "new_mean": nm}
+        xs = (t_idx, stack("Nc"), stack("Wpc"), stack("Wtc"), stack("Nf"),
+              stack("Wpf"), stack("Wtf"), act, acc, spd)
+        carry = tuple(np.zeros((C, S)) for _ in range(3)) + (np.zeros(C),)
+        builder = _batched_step
+    if cfg.soft:
+        consts["tau"] = float(cfg.tau)
+
+    state = {"progs": progs, "rngs": rngs, "draws": draws,
+             "batched": batched, "backend": backend, "cfg": cfg, "C": C}
+    if backend == "jax":
+        state["raw"] = _scan_jax_launch(builder, consts, carry, xs, cfg)
+    else:
+        step = builder(np, dict(consts))
+        state["host"] = _scan_numpy(step, carry, xs, T)
+
+    # ---- host-side analytic aux (overlaps the dispatched scan) ---------
+    aux: dict = {}
+    if not batched:
+        m_w = np.stack([np.pad(p.work_mean, (0, S - p.n_servers),
+                               constant_values=1.0) for p in progs])
+        v_w = np.stack([np.pad(p.work_var, (0, S - p.n_servers))
+                        for p in progs])
         # ---- analytic stationary wait (outside the scan) ----------------
         # deterministic per-slot offered load, with request-routed rate
         # spread capacity-proportionally over the accepting servers
@@ -635,7 +732,6 @@ def _run_family(progs: list, seeds: list, batched: bool, backend: str,
         cmax = int(c.max()) if c.size else 1
         if cfg.soft:
             from repro.vector import soft as _soft
-            consts["tau"] = float(cfg.tau)
             aux["pC"] = _soft.soft_erlang_c(np, c[None].astype(float),
                                             rho_det, cmax, cfg.tau)
             headroom = 1.0 - _soft.smooth_rho(np, rho_det, cfg.tau)
@@ -700,13 +796,6 @@ def _run_family(progs: list, seeds: list, batched: bool, backend: str,
             (acc * c[None] * spd).sum(axis=-1)
             / np.maximum((acc * c[None]).sum(axis=-1), _EPS), 1.0)
     else:
-        tm = np.array([p.service.t_memory for p in progs])[:, None]
-        tc = np.array([p.service.t_compute_per_seq for p in progs])[:, None]
-        nm = np.array([p.new_mean for p in progs])[:, None]
-        consts = {"c": c, "fail_slot": fail, "dt": dt, "tm": tm, "tc": tc,
-                  "new_mean": nm}
-        if cfg.soft:
-            consts["tau"] = float(cfg.tau)
         # a resident's wall-clock pace per own token stretches by the
         # prefill ops interleaved with decode (the engine serializes one
         # op at a time) — deterministic expected prefill time-share
@@ -719,16 +808,21 @@ def _run_family(progs: list, seeds: list, batched: bool, backend: str,
                            * pf_mean[None, :, None]
                            / np.maximum(spd, _EPS), 0.0, 0.8)
         aux["stretch"] = 1.0 / (1.0 - pf_share)
-        xs = (t_idx, stack("Nc"), stack("Wpc"), stack("Wtc"), stack("Nf"),
-              stack("Wpf"), stack("Wtf"), act, acc, spd)
-        carry = tuple(np.zeros((C, S)) for _ in range(3)) + (np.zeros(C),)
-        builder = _batched_step
+    state["aux"] = aux
+    return state
 
+
+def _finish_family(state: dict) -> list[VectorResult]:
+    """Fetch a launched chunk's scan outputs and extract every cell's
+    results (sampling, censoring, fused-grid percentiles)."""
+    progs, rngs, draws = state["progs"], state["rngs"], state["draws"]
+    batched, backend, cfg = (state["batched"], state["backend"],
+                             state["cfg"])
+    C, aux = state["C"], state["aux"]
     if backend == "jax":
-        carry, outs = _scan_jax(builder, consts, carry, xs, cfg)
+        carry, outs = _scan_jax_finish(state["raw"])
     else:
-        step = builder(np, dict(consts))
-        carry, outs = _scan_numpy(step, carry, xs, T)
+        carry, outs = state["host"]
 
     cells = [_sample_cell(progs[i], rngs[i], i, batched, carry, outs, aux,
                           draws[i], cfg)
@@ -742,6 +836,12 @@ def _run_family(progs: list, seeds: list, batched: bool, backend: str,
                                  backend)
     return [_finish_cell(progs[i], batched, cells[i], quants[i])
             for i in range(C)]
+
+
+def _run_family(progs: list, seeds: list, batched: bool, backend: str,
+                cfg: VectorConfig, shape: tuple) -> list[VectorResult]:
+    return _finish_family(_launch_family(progs, seeds, batched, backend,
+                                         cfg, shape))
 
 
 # ---------------------------------------------------------------------------
@@ -993,10 +1093,11 @@ class VectorRuntime:
     recorder = None                     # no raw-sample recorder: sampled
 
     def __init__(self, experiment, rep: int = 0,
-                 config: Optional[VectorConfig] = None):
+                 config: Optional[VectorConfig] = None, cache=None):
         from repro.vector.telemetry import VectorTelemetry
         self.experiment = experiment
         self.config = config or VectorConfig()
+        self.cache = cache
         self.program = compile_experiment(experiment, dt=self.config.dt)
         self.seed = (experiment.seed, rep)
         self.unsupported = self.program.unsupported
@@ -1010,6 +1111,6 @@ class VectorRuntime:
     def run(self):
         from repro.vector.telemetry import VectorTelemetry
         self.result = run_cells([self.program], [self.seed],
-                                self.config)[0]
+                                self.config, cache=self.cache)[0]
         self.telemetry = VectorTelemetry(self.result)
         return self.telemetry

@@ -1,0 +1,413 @@
+"""Content-addressed result cache: fingerprint canonicalization, the
+silent-miss contract under on-disk damage and stale code salts,
+bit-for-bit row/cell identity across executors and runtimes, planner
+cell reuse, the rate-array and streaming-JSON satellites, pipelined
+chunk execution, and the maintenance CLI.
+
+The load-bearing invariant everywhere: the cache may only ever change
+how fast an answer arrives, never which answer arrives.
+"""
+from __future__ import annotations
+
+import json
+import os
+
+import numpy as np
+import pytest
+
+from repro.cache import (DEFAULT_CACHE_DIR, ResultCache, Unfingerprintable,
+                         cache_from_args, code_salt, fingerprint)
+from repro.cache import gc as cache_gc
+from repro.cache import scan, verify
+from repro.core.client import ClientConfig, ConstantQPS, DiurnalQPS
+from repro.core.harness import Experiment, ServerSpec
+from repro.scenarios import get
+from repro.sweep import Axis, ResultFrame, Sweep, run_sweep, scenario_factory
+from repro.sweep.spec import spawn_seed
+from repro.vector import VectorConfig, compile_experiment, has_jax, run_cells
+
+
+def _fingerprint_results(results):
+    return [(r.n, repr(r.mean), repr(r.p50), repr(r.p95), repr(r.p99),
+             r.dropped, r.samples.tobytes(), r.sample_ivl.tobytes(),
+             r.util_ivl.tobytes(), r.qdepth_ivl.tobytes())
+            for r in results]
+
+
+def _grid(n_points=2, reps=2, duration=4.0):
+    progs, seeds = [], []
+    for pi, qps in enumerate(np.linspace(300.0, 900.0, n_points)):
+        exp = get("steady", seed=1, duration=duration,
+                  qps=float(qps)).compile()
+        prog = compile_experiment(exp)
+        for rep in range(reps):
+            progs.append(prog)
+            seeds.append((spawn_seed(1, pi, rep), rep))
+    return progs, seeds
+
+
+# ---------------------------------------------------------------------------
+# Fingerprints and keys
+# ---------------------------------------------------------------------------
+def test_fingerprint_canonical_and_sensitive():
+    exp = get("steady", seed=3, duration=2.0).compile()
+    assert fingerprint(exp) == fingerprint(exp)
+    assert fingerprint(exp) == fingerprint(
+        get("steady", seed=3, duration=2.0).compile())
+    assert fingerprint(exp) != fingerprint(
+        get("steady", seed=4, duration=2.0).compile())
+    # dict key order is canonicalized away; values are not
+    assert fingerprint({"a": 1, "b": 2}) == fingerprint({"b": 2, "a": 1})
+    assert fingerprint({"a": 1}) != fingerprint({"a": 2})
+    # float identity is by repr: -0.0 and 0.0 key distinctly
+    assert fingerprint(0.0) != fingerprint(-0.0)
+    assert fingerprint(np.arange(4.0)) != fingerprint(np.arange(4))
+
+
+def test_fingerprint_rejects_unstable_callables():
+    with pytest.raises(Unfingerprintable):
+        fingerprint(lambda x: x)
+
+    def local():
+        pass
+    with pytest.raises(Unfingerprintable):
+        fingerprint(local)
+    # named module-level callables are fine (schedules hold them)
+    assert fingerprint(ConstantQPS) == fingerprint(ConstantQPS)
+    cache = ResultCache(cache_dir=None)
+    assert cache.key("row", lambda x: x) is None
+    assert cache.stats.uncacheable == 1
+
+
+def test_cell_keys_distinguish_bit_affecting_config(tmp_path):
+    cache = ResultCache(cache_dir=str(tmp_path))
+    prog = compile_experiment(get("steady", seed=0, duration=2.0).compile())
+    seed = (spawn_seed(0, 0, 0), 0)
+    base = cache.cell_key(prog, seed, VectorConfig(backend="numpy"))
+    assert base == cache.cell_key(prog, seed, VectorConfig(backend="numpy"))
+    distinct = {base}
+    for cfg in (VectorConfig(backend="numpy", dt=0.01),
+                VectorConfig(backend="numpy", samples=128),
+                VectorConfig(backend="numpy", bucket=False)):
+        k = cache.cell_key(prog, seed, cfg)
+        assert k not in distinct, cfg
+        distinct.add(k)
+    if has_jax():
+        for cfg in (VectorConfig(backend="jax"),
+                    VectorConfig(backend="jax", soft=True),
+                    VectorConfig(backend="jax", soft=True, tau=0.123),
+                    VectorConfig(backend="jax", soft=True, band_frac=0.5)):
+            k = cache.cell_key(prog, seed, cfg)
+            assert k not in distinct, cfg
+            distinct.add(k)
+    # the seed tree is part of the key
+    assert cache.cell_key(prog, (spawn_seed(0, 0, 1), 1),
+                          VectorConfig(backend="numpy")) != base
+
+
+def test_code_salt_env_override(monkeypatch):
+    cur = code_salt()
+    monkeypatch.setenv("REPRO_CACHE_SALT", "deadbeef")
+    code_salt.cache_clear()
+    try:
+        assert code_salt() == "deadbeef"
+    finally:
+        monkeypatch.delenv("REPRO_CACHE_SALT")
+        code_salt.cache_clear()
+    assert code_salt() == cur
+
+
+# ---------------------------------------------------------------------------
+# Cell store round trip + silent-miss contract
+# ---------------------------------------------------------------------------
+def test_cell_cache_roundtrip_and_partial_miss(tmp_path):
+    progs, seeds = _grid()
+    cfg = VectorConfig(backend="numpy")
+    plain = run_cells(progs, seeds, cfg)
+
+    cold = ResultCache(cache_dir=str(tmp_path))
+    first = run_cells(progs[:3], seeds[:3], cfg, cache=cold)
+    assert cold.stats.misses == 3 and cold.stats.stores == 3
+    assert _fingerprint_results(first) == _fingerprint_results(plain[:3])
+
+    # a FRESH cache object on the same dir: disk hits for the warm 3,
+    # one cold cell — and which cells are cold never changes any bits
+    warm = ResultCache(cache_dir=str(tmp_path))
+    second = run_cells(progs, seeds, cfg, cache=warm)
+    assert warm.stats.hits == 3 and warm.stats.misses == 1
+    assert _fingerprint_results(second) == _fingerprint_results(plain)
+
+
+def test_cell_corruption_is_a_silent_miss(tmp_path):
+    progs, seeds = _grid(n_points=1, reps=1)
+    cfg = VectorConfig(backend="numpy")
+    cache = ResultCache(cache_dir=str(tmp_path))
+    baseline = run_cells(progs, seeds, cfg, cache=cache)
+
+    entries = []
+    for dirpath, _dirs, files in os.walk(tmp_path):
+        entries += [os.path.join(dirpath, f) for f in files]
+    assert len(entries) == 1
+    with open(entries[0], "wb") as f:
+        f.write(b"not an npz at all")
+
+    fresh = ResultCache(cache_dir=str(tmp_path))
+    redo = run_cells(progs, seeds, cfg, cache=fresh)
+    assert fresh.stats.errors == 1 and fresh.stats.hits == 0
+    assert _fingerprint_results(redo) == _fingerprint_results(baseline)
+
+
+def test_stale_salt_entry_is_a_silent_miss(tmp_path):
+    cache = ResultCache(cache_dir=str(tmp_path))
+    key = cache.key("row", "payload-under-an-old-code-version")
+    cache.put_row(key, {"metrics": {"p99": 1.0}})
+    path = cache._path(key, "row")
+    with open(path) as f:
+        entry = json.load(f)
+    entry["salt"] = "0" * 16            # as if written by older code
+    with open(path, "w") as f:
+        json.dump(entry, f)
+
+    fresh = ResultCache(cache_dir=str(tmp_path))
+    assert fresh.get_row(key) is None
+    assert fresh.stats.errors == 1 and fresh.stats.misses == 1
+
+
+# ---------------------------------------------------------------------------
+# Sweep rows: cached == recomputed, bit for bit, on every executor
+# ---------------------------------------------------------------------------
+def _mixed_sweep():
+    return Sweep(name="mix", factory=scenario_factory("steady"),
+                 axes=(Axis("runtime", ("sim", "engine", "vector")),
+                       Axis("qps", (150.0, 300.0))),
+                 fixed={"duration": 1.5}, reps=2, base_seed=9,
+                 metrics=("n", "mean", "p50", "p95", "p99", "dropped"))
+
+
+def test_sweep_rows_bit_identical_cached_vs_recomputed(tmp_path):
+    sweep = _mixed_sweep()
+    vcfg = VectorConfig(backend="numpy")
+    plain = run_sweep(sweep, vector_config=vcfg).to_dict()["rows"]
+
+    cold = ResultCache(cache_dir=str(tmp_path))
+    first = run_sweep(sweep, vector_config=vcfg, cache=cold)
+    assert not first.errors
+    assert first.to_dict()["rows"] == plain
+    assert cold.stats.hits == 0 and cold.stats.stores >= len(first.rows)
+
+    # warm re-runs across serial / 2-worker / 8-worker: all hits, and
+    # the rows cannot depend on the executor or worker count
+    for executor, workers in (("serial", None), ("process", 2),
+                              ("process", 8)):
+        warm = ResultCache(cache_dir=str(tmp_path))
+        frame = run_sweep(sweep, executor=executor, workers=workers,
+                          vector_config=vcfg, cache=warm)
+        assert frame.to_dict()["rows"] == plain, (executor, workers)
+        assert warm.stats.hits == len(frame.rows)
+        assert warm.stats.misses == 0
+
+
+def test_sweep_cache_hits_preserve_declaration_order(tmp_path):
+    sweep = Sweep(name="order", factory=scenario_factory("steady"),
+                  axes=(Axis("qps", (150.0, 300.0, 450.0)),),
+                  fixed={"duration": 1.0}, reps=2, base_seed=3,
+                  metrics=("n", "p99"))
+    plain = run_sweep(sweep)
+    pre = ResultCache(cache_dir=str(tmp_path))
+    run_sweep(sweep, cache=pre)
+
+    # evict only the MIDDLE point's entries: a partial hit pattern with
+    # a cold hole in the middle must not reorder or change any row
+    from repro.sweep.executor import _row_key
+    probe = ResultCache(cache_dir=str(tmp_path))
+    for rep in range(2):
+        key = _row_key(probe, sweep, 1, {"duration": 1.0, "qps": 300.0},
+                       rep)
+        os.remove(probe._path(key, "row"))
+
+    warm = ResultCache(cache_dir=str(tmp_path))
+    frame = run_sweep(sweep, cache=warm)
+    assert warm.stats.hits == 4 and warm.stats.misses == 2
+    assert [r.params for r in frame.rows] == [r.params for r in plain.rows]
+    assert frame.to_dict() == plain.to_dict()
+
+
+def test_telemetry_and_per_client_rows_round_trip(tmp_path):
+    sweep = Sweep(name="tele", factory=scenario_factory("steady"),
+                  axes=(Axis("qps", (200.0,)),), fixed={"duration": 2.0},
+                  reps=1, base_seed=1, metrics=("n", "p99"),
+                  telemetry=True, per_client=True)
+    plain = run_sweep(sweep).to_dict()
+    cold = ResultCache(cache_dir=str(tmp_path))
+    run_sweep(sweep, cache=cold)
+    warm = ResultCache(cache_dir=str(tmp_path))
+    frame = run_sweep(sweep, cache=warm)
+    assert warm.stats.hits == 1
+    assert frame.to_dict() == plain
+    assert frame.rows[0].series is not None
+    assert frame.rows[0].clients is not None
+
+
+# ---------------------------------------------------------------------------
+# Planner reuse
+# ---------------------------------------------------------------------------
+@pytest.mark.slow
+def test_planner_reuses_cells_across_runs(tmp_path):
+    if not has_jax():
+        pytest.skip("jax not importable")
+    from repro.plan import PlanSpec, run_plan
+    spec = PlanSpec(scenario="steady", objective="p99", slo=0.02,
+                    overrides={"policy": "jsq", "qps": 2000.0,
+                               "duration": 3.0},
+                    params={"capacity": (4.0, 1.0, 6.0)},
+                    steps=12, starts=1, samples=512, seed=0,
+                    reps=2, probe_reps=1)
+    cold = ResultCache(cache_dir=str(tmp_path))
+    res1 = run_plan(spec, cache=cold)
+    assert res1.cell_evals > 0
+    warm = ResultCache(cache_dir=str(tmp_path))
+    res2 = run_plan(spec, cache=warm)
+    assert res2.cell_evals == 0          # every exact cell came warm
+    assert res2.n_star == res1.n_star
+    assert res2.verified == res1.verified
+
+
+# ---------------------------------------------------------------------------
+# Satellite: rate-array dedupe in the vector compiler
+# ---------------------------------------------------------------------------
+def test_rate_array_memo_bit_identical():
+    from repro.vector import compile as vcompile
+    exp = Experiment(
+        clients=tuple(ClientConfig(i, DiurnalQPS(250.0, 100.0, period=5.0),
+                                   seed=i) for i in range(3)),
+        servers=(ServerSpec(0),), duration=3.0, seed=5)
+    vcompile._RATE_CACHE.clear()
+    a = compile_experiment(exp)
+    assert len(vcompile._RATE_CACHE) == 1     # 3 identical schedules
+    vcompile._RATE_CACHE.clear()
+    b = compile_experiment(exp)
+    assert np.array_equal(a.rate_conn, b.rate_conn)
+    assert np.array_equal(a.rate_free, b.rate_free)
+
+    # eviction under a cap of 1 cannot change any compiled rates
+    old_cap = vcompile._RATE_CACHE_CAP
+    vcompile._RATE_CACHE_CAP = 1
+    try:
+        vcompile._RATE_CACHE.clear()
+        exp2 = Experiment(
+            clients=tuple(ClientConfig(i, ConstantQPS(100.0 + 50.0 * i),
+                                       seed=i) for i in range(4)),
+            servers=(ServerSpec(0),), duration=2.0, seed=1)
+        capped = compile_experiment(exp2)
+        assert len(vcompile._RATE_CACHE) <= 1
+    finally:
+        vcompile._RATE_CACHE_CAP = old_cap
+    vcompile._RATE_CACHE.clear()
+    full = compile_experiment(exp2)
+    assert np.array_equal(capped.rate_conn, full.rate_conn)
+    assert np.array_equal(capped.rate_free, full.rate_free)
+
+
+# ---------------------------------------------------------------------------
+# Satellite: streaming ResultFrame JSON
+# ---------------------------------------------------------------------------
+def _tele_frame():
+    sweep = Sweep(name="stream", factory=scenario_factory("steady"),
+                  axes=(Axis("qps", (200.0, 400.0)),),
+                  fixed={"duration": 1.5}, reps=2, base_seed=2,
+                  metrics=("n", "mean", "p99"), telemetry=True,
+                  per_client=True)
+    return run_sweep(sweep)
+
+
+def test_streaming_json_byte_identical_to_dumps(tmp_path):
+    frame = _tele_frame()
+    expected = json.dumps(frame.to_dict(), indent=1)
+    assert frame.to_json() == expected
+    path = str(tmp_path / "frame.json")
+    frame.to_json(path)
+    with open(path) as f:
+        assert f.read() == expected
+    # empty frame too
+    empty = ResultFrame(name="none", spec={"metrics": ["n"]}, rows=[])
+    assert empty.to_json() == json.dumps(empty.to_dict(), indent=1)
+
+
+def test_streaming_json_round_trip_is_exact(tmp_path):
+    frame = _tele_frame()
+    path = str(tmp_path / "frame.json")
+    frame.to_json(path)
+    back = ResultFrame.from_json(path)             # streamed reader
+    assert back.to_dict() == frame.to_dict()
+    with open(path) as f:
+        text_back = ResultFrame.from_json(f.read())
+    assert text_back.to_dict() == frame.to_dict()
+    rows = list(ResultFrame.iter_json_rows(path))
+    assert len(rows) == len(frame.rows)
+    assert rows[0].metrics == frame.rows[0].metrics
+    assert rows[-1].params == frame.rows[-1].params
+
+
+# ---------------------------------------------------------------------------
+# Pipelined chunk execution
+# ---------------------------------------------------------------------------
+def test_pipeline_on_off_bit_identical():
+    if not has_jax():
+        pytest.skip("jax not importable")
+    progs, seeds = _grid(n_points=3, reps=2)
+    base = VectorConfig(backend="jax", impl="ref", max_slot_elems=1)
+    sync = run_cells(progs, seeds,
+                     VectorConfig(backend="jax", impl="ref",
+                                  max_slot_elems=1, pipeline=False))
+    piped = run_cells(progs, seeds, base)     # pipeline=True default
+    assert _fingerprint_results(sync) == _fingerprint_results(piped)
+
+
+# ---------------------------------------------------------------------------
+# Maintenance CLI + arg plumbing
+# ---------------------------------------------------------------------------
+def test_cache_cli_stats_verify_gc(tmp_path, capsys):
+    from repro.cache.__main__ import main
+    d = str(tmp_path / "cache")
+    cache = ResultCache(cache_dir=d)
+    k1 = cache.key("row", "a")
+    cache.put_row(k1, {"metrics": {"p99": 0.5}})
+    prog = compile_experiment(get("steady", seed=0, duration=1.0).compile())
+    cfg = VectorConfig(backend="numpy")
+    run_cells([prog], [(1, 0)], cfg, cache=cache)
+    # a stale-salt tree from an imaginary older code version
+    os.makedirs(os.path.join(d, "f" * 16, "ab"))
+
+    assert main(["stats", "--cache-dir", d]) == 0
+    out = capsys.readouterr().out
+    assert "1 rows, 1 cells" in out and "(stale)" in out
+
+    assert main(["verify", "--cache-dir", d]) == 0
+    rep = scan(d)
+    assert rep["salts"][cache.salt]["rows"] == 1
+
+    # corrupt the row entry: verify flags it, gc removes it + stale tree
+    with open(cache._path(k1, "row"), "w") as f:
+        f.write("{ truncated")
+    assert main(["verify", "--cache-dir", d]) == 1
+    assert main(["gc", "--cache-dir", d]) == 0
+    out = capsys.readouterr().out
+    assert "1 stale salt tree(s), 1 corrupt entries" in out.splitlines()[-1]
+    assert verify(d)["corrupt"] == []
+    assert not os.path.isdir(os.path.join(d, "f" * 16))
+    left = cache_gc(d, all_salts=True)
+    assert cache.salt in left["removed_salts"]
+
+
+def test_cache_from_args_flag_combinations(tmp_path):
+    import argparse
+    from repro.cache import add_cache_args
+    ap = argparse.ArgumentParser()
+    add_cache_args(ap)
+    assert cache_from_args(ap.parse_args([])) is None
+    assert cache_from_args(ap.parse_args(["--no-cache"])) is None
+    c = cache_from_args(ap.parse_args(["--cache"]))
+    assert c is not None and c.cache_dir == DEFAULT_CACHE_DIR
+    d = str(tmp_path / "c")
+    c = cache_from_args(ap.parse_args(["--cache-dir", d]))
+    assert c is not None and c.cache_dir == d

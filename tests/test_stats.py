@@ -503,3 +503,26 @@ def test_quantile_plan_hoisting_stable():
     assert (501, qs) in {(k[0], k[1]) for k in st._QPLAN_CACHE}
     warm = st.quantiles_partition(xs, qs)
     assert np.asarray(cold).tobytes() == np.asarray(warm).tobytes()
+
+
+def test_quantile_plan_lru_eviction_never_changes_results():
+    """The plan memo is a capped LRU now: force a cap of 1 so every
+    distinct (n, qs) evicts the last, and verify bits never move."""
+    from repro.core import stats as st
+    rng = np.random.default_rng(13)
+    sizes = (101, 257, 512, 101)        # revisit 101 after eviction
+    qs = (50.0, 95.0, 99.0)
+    st._QPLAN_CACHE.clear()
+    baseline = [st.quantiles_partition(rng.random(n), qs) for n in sizes]
+    old_cap = st._QPLAN_CACHE_CAP
+    st._QPLAN_CACHE_CAP = 1
+    try:
+        st._QPLAN_CACHE.clear()
+        rng = np.random.default_rng(13)
+        capped = [st.quantiles_partition(rng.random(n), qs) for n in sizes]
+        assert len(st._QPLAN_CACHE) <= 1
+    finally:
+        st._QPLAN_CACHE_CAP = old_cap
+        st._QPLAN_CACHE.clear()
+    for a, b in zip(baseline, capped):
+        assert np.asarray(a).tobytes() == np.asarray(b).tobytes()

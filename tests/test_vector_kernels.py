@@ -229,15 +229,17 @@ def test_bucketing_bit_identical():
     assert on == off
 
 
-def test_jit_cache_eviction_never_changes_results(monkeypatch):
-    """A 1-entry LRU forces an eviction + recompile between the two
-    families of the mixed grid; rows must not move a bit."""
+def test_jit_cache_eviction_never_changes_results():
+    """A 1-entry LRU (``VectorConfig.jit_cache_size``) forces an
+    eviction + recompile between the two families of the mixed grid;
+    rows must not move a bit."""
     progs, seeds = _mixed_grid()
-    cfg = VectorConfig(backend="jax", impl="ref")
-    base = _fingerprint(run_cells(progs, seeds, cfg))
-    monkeypatch.setattr(vrt, "_JIT_CACHE_CAP", 1)
+    base = _fingerprint(run_cells(
+        progs, seeds, VectorConfig(backend="jax", impl="ref")))
     vrt._JIT_CACHE.clear()
-    capped = _fingerprint(run_cells(progs, seeds, cfg))
+    capped = _fingerprint(run_cells(
+        progs, seeds,
+        VectorConfig(backend="jax", impl="ref", jit_cache_size=1)))
     assert len(vrt._JIT_CACHE) <= 1
     assert base == capped
 
