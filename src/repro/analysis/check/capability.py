@@ -11,7 +11,8 @@ uses this to reject a declaration at check time instead of mid-run
 (PR 5 only got this to a runtime warning).
 
 Features are strings: ``injection:<kind>`` for each injection kind,
-plus ``hedge_delay`` and ``legacy_mode`` experiment flags.
+plus the ``hedge_delay``/``legacy_mode`` experiment flags and the
+resilience/control fields (``retry``, ``breaker``, ``control``).
 """
 from __future__ import annotations
 
@@ -20,25 +21,39 @@ from typing import Optional
 BACKENDS = ("sim", "engine", "vector")
 
 INJECTION_KINDS = ("server_fail", "server_speed", "server_join",
-                   "server_drain", "set_policy", "set_hedge")
+                   "server_drain", "set_policy", "set_hedge",
+                   "set_admission", "set_scale", "set_retry",
+                   "set_breaker")
 
 _ALL = frozenset([f"injection:{k}" for k in INJECTION_KINDS] +
-                 ["hedge_delay", "legacy_mode"])
+                 ["hedge_delay", "legacy_mode", "retry", "breaker",
+                  "control"])
 
 #: feature -> backends supporting it (mirrors the runtime contracts)
 CAPABILITIES = {
     "sim": frozenset(_ALL),
-    # core/runtime.py _ENGINE_INJECTIONS: join/drain/fail/policy only
+    # core/runtime.py _ENGINE_INJECTIONS: join/drain/fail/policy plus the
+    # resilience kinds; hedging and legacy mode stay simulator-only
     "engine": frozenset({"injection:server_join",
                          "injection:server_drain",
                          "injection:server_fail",
-                         "injection:set_policy"}),
-    # vector/compile.py: hedging + injection-time joins -> unsupported,
-    # legacy_mode -> VectorCompileError; joins lower via ServerSpec
+                         "injection:set_policy",
+                         "injection:set_admission",
+                         "injection:set_scale",
+                         "injection:set_retry",
+                         "injection:set_breaker",
+                         "retry", "breaker", "control"}),
+    # vector/compile.py: hedging, injection-time joins, and per-request
+    # retry/breaker mechanics -> unsupported (no fluid analogue);
+    # admission/scale lower as thinning + capacity schedules, and the
+    # controller replays through the fluid pre-pass
     "vector": frozenset({"injection:server_fail",
                          "injection:server_speed",
                          "injection:server_drain",
-                         "injection:set_policy"}),
+                         "injection:set_policy",
+                         "injection:set_admission",
+                         "injection:set_scale",
+                         "control"}),
 }
 
 
@@ -50,6 +65,14 @@ def required_features(exp) -> list:
     if getattr(exp, "hedge_delay", None) is not None:
         feats.append(("hedge_delay",
                       f"hedge_delay={exp.hedge_delay:g}s"))
+    if getattr(exp, "retry", None) is not None:
+        feats.append(("retry", f"retry={exp.retry!r}"))
+    if getattr(exp, "breaker", None) is not None:
+        feats.append(("breaker", f"breaker={exp.breaker!r}"))
+    ctrl = getattr(exp, "control", None)
+    if ctrl is not None:
+        feats.append(("control",
+                      f"control={getattr(ctrl, 'name', ctrl)!s}"))
     for inj in getattr(exp, "injections", ()):
         feats.append((f"injection:{inj.kind}",
                       f"{inj.kind}@{inj.at:g}s"))

@@ -225,11 +225,14 @@ def _save_cell(f, key: str, salt: str, result) -> None:
             "p95": result.p95, "p99": result.p99,
             "dropped": result.dropped, "interval": result.interval,
             "slo": result.slo, "server_ids": list(result.server_ids),
-            "has_tokens": result.tokens_ivl is not None}
+            "has_tokens": result.tokens_ivl is not None,
+            "has_shed": result.shed_ivl is not None}
     arrays = {name: np.asarray(getattr(result, name))
               for name in _CELL_ARRAYS}
     if result.tokens_ivl is not None:
         arrays["tokens_ivl"] = np.asarray(result.tokens_ivl)
+    if result.shed_ivl is not None:
+        arrays["shed_ivl"] = np.asarray(result.shed_ivl)
     np.savez(f, meta=np.array(json.dumps(meta)), **arrays)
 
 
@@ -242,6 +245,8 @@ def _load_cell(path: str, key: str, salt: str):
             raise ValueError("fingerprint mismatch")
         arrays = {name: z[name] for name in _CELL_ARRAYS}
         tokens = z["tokens_ivl"] if meta["has_tokens"] else None
+        # older cache entries predate shed accounting: absent = None
+        shed = z["shed_ivl"] if meta.get("has_shed") else None
     return VectorResult(
         n=int(meta["n"]), mean=float(meta["mean"]),
         p50=float(meta["p50"]), p95=float(meta["p95"]),
@@ -249,7 +254,7 @@ def _load_cell(path: str, key: str, salt: str):
         interval=float(meta["interval"]),
         slo=None if meta["slo"] is None else float(meta["slo"]),
         server_ids=list(meta["server_ids"]), tokens_ivl=tokens,
-        **arrays)
+        shed_ivl=shed, **arrays)
 
 
 # ---------------------------------------------------------------------------

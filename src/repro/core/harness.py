@@ -29,6 +29,11 @@ class ServerSpec:
     join_at: float = 0.0
     drain_at: Optional[float] = None
     max_batch: Optional[int] = None   # batch slots (batched ServiceModels)
+    # standby pool for elastic scale (set_scale injections / reactive
+    # controllers): the server exists from t=0 — engines are built and
+    # warmed up front — but starts drained (not accepting) until a scale
+    # action activates it.  join_at/drain_at schedules don't apply.
+    standby: bool = False
 
 
 @dataclass
@@ -53,6 +58,13 @@ class Experiment:
     # a BatchedService switches servers to the continuous-batching loop
     service_model: Optional[object] = None
     lengths: Optional[object] = None          # default per-request TokenLengths
+    # resilience + closed-loop control (repro.control; all sweepable):
+    # RetryPolicy (client timeouts/retries; sim+engine), BreakerSpec
+    # (per-server circuit breaking; sim+engine), ControlSpec (reactive
+    # controller; all three backends — see the capability matrix)
+    retry: Optional[object] = None
+    breaker: Optional[object] = None
+    control: Optional[object] = None
 
     def resolved_profile(self):
         if self.profile is not None:
@@ -103,11 +115,20 @@ def build_simulator(exp: Experiment, rep: int = 0) -> Simulator:
         # independent server-noise streams (mirrors the client-RNG fix)
         return (9176, exp.seed, sid, rep)
 
-    servers = [SimServer(s.server_id, s.workers, s.speed, s.service_noise,
-                         rng_seed=_srv_seed(s.server_id),
-                         service_model=exp.service_model,
-                         max_batch=s.max_batch)
-               for s in exp.servers if s.join_at == 0.0]
+    servers = []
+    for s in exp.servers:
+        if s.join_at != 0.0:
+            continue
+        srv = SimServer(s.server_id, s.workers, s.speed, s.service_noise,
+                        rng_seed=_srv_seed(s.server_id),
+                        service_model=exp.service_model,
+                        max_batch=s.max_batch)
+        if s.standby:
+            # standby pool: present (engine parity: built and warm) but
+            # drained until a set_scale action activates it
+            srv.draining = True
+            srv.accepting = False
+        servers.append(srv)
     balancer = POLICIES[exp.policy]() if isinstance(exp.policy, str) else exp.policy
     n_expected = exp.legacy_expected_clients
     if n_expected is None:
@@ -118,7 +139,8 @@ def build_simulator(exp: Experiment, rep: int = 0) -> Simulator:
                     legacy_requests_per_client=exp.legacy_requests_per_client,
                     hedge_delay=exp.hedge_delay, rep=rep,
                     stats_mode=exp.stats_mode, fast_clients=exp.fast_clients,
-                    slo=exp.slo)
+                    slo=exp.slo, retry=exp.retry, breaker=exp.breaker,
+                    control=exp.control)
     sim = Simulator(cfg, servers, balancer, profile=exp.resolved_profile(),
                     lengths=exp.resolved_lengths(),
                     service_model=exp.service_model)

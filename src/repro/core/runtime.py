@@ -31,6 +31,9 @@ from typing import Callable, Optional, Sequence
 
 import numpy as np
 
+from repro.control import (AdmissionController, CircuitBreaker, ControlLoop,
+                           RetryBudget)
+from repro.control.resilience import RESILIENCE_STREAM
 from repro.core.balancer import POLICIES
 from repro.core.client import ClientConfig, ClientGenerator
 from repro.core.harness import Experiment, build_simulator
@@ -41,7 +44,8 @@ from repro.core.stats import LatencyRecorder, MetricsPipeline
 # injection kinds the wall-clock backend can honor (speed scaling and
 # hedging need simulator control over service execution)
 _ENGINE_INJECTIONS = ("server_join", "server_drain", "server_fail",
-                      "set_policy")
+                      "set_policy", "set_admission", "set_scale",
+                      "set_retry", "set_breaker")
 
 
 class Runtime:
@@ -65,6 +69,22 @@ class SimulatorRuntime(Runtime):
     @property
     def dropped(self) -> int:
         return self.sim.dropped
+
+    @property
+    def shed(self) -> int:
+        return self.sim.shed
+
+    @property
+    def timeouts(self) -> int:
+        return self.sim.timeouts
+
+    @property
+    def retries(self) -> int:
+        return self.sim.retries
+
+    @property
+    def control_log(self) -> list:
+        return self.sim.control_log
 
     def run(self) -> MetricsPipeline:
         self.sim.run()
@@ -174,6 +194,7 @@ class EngineRuntime(Runtime):
                  injections: Sequence = (), rep: int = 0,
                  profile=None, lengths=None, stats_mode: str = "exact",
                  engine_factory: Optional[Callable[[int], object]] = None,
+                 retry=None, breaker=None, control=None,
                  clock: Callable[[], float] = time.monotonic,
                  sleep: Callable[[float], None] = time.sleep):
         if isinstance(engines, dict):
@@ -214,12 +235,39 @@ class EngineRuntime(Runtime):
                                          lengths=lengths)
             for c in clients}
         self.assignment: dict[int, EngineServerHandle] = {}
-        self._meta: dict[int, tuple] = {}       # req_id -> (cid, t_arr)
+        # req_id -> (cid, t_created_wall, attempt, prev_delay, ptoks,
+        #            mnew, server_id)
+        self._meta: dict[int, tuple] = {}
+        self.slo = slo
+        # resilience stack (mirrors Simulator: same policies, same
+        # domain-tagged RNG stream, wall-clock actuation)
+        self.shed = 0
+        self.timeouts = 0
+        self.retries = 0
+        self._res_rng = np.random.default_rng((RESILIENCE_STREAM, seed, rep))
+        self._admission: Optional[AdmissionController] = None
+        self._breaker = CircuitBreaker(breaker) if breaker else None
+        self._retry = retry
+        self._retry_budget = (RetryBudget(retry.budget_ratio,
+                                          retry.budget_burst)
+                              if retry else None)
+        self._deadlines: list = []     # (deadline_wall, req_id)
+        self._retry_q: list = []       # (due_wall, seq, cid, t_created_wall,
+                                       #  attempt, prev_delay, ptoks, mnew)
+        self._rseq = itertools.count()
+        # closed-loop control: tick boundaries are wall instants, actions
+        # apply after the actuation lag through the same dispatch as
+        # compiled injections
+        self.control_log: list = []    # (t_virtual_applied, kind, params)
+        self._control = ControlLoop(control) if control else None
+        self._pending_actions: list = []   # (due_wall, seq, kind, params)
         # only injections the wall-clock backend can honor; the rest are
-        # surfaced instead of silently dropped
+        # surfaced instead of silently dropped.  (at, seq) order: ties at
+        # identical timestamps apply in declaration order, matching the
+        # simulator's calendar-queue total order
         self._injections = sorted((i for i in injections
                                    if i.kind in _ENGINE_INJECTIONS),
-                                  key=lambda i: i.at)
+                                  key=lambda i: (i.at, i.seq))
         self.unsupported = [i for i in injections
                             if i.kind not in _ENGINE_INJECTIONS]
         self._alive: list[EngineServerHandle] = [
@@ -277,6 +325,9 @@ class EngineRuntime(Runtime):
             # list instead of silently running the scenario un-hedged
             injections.append(Injection(0.0, "set_hedge",
                                         {"delay": exp.hedge_delay}))
+        # spec-derived joins/drains get seq=-1: the simulator schedules
+        # them BEFORE the compiled injection list at equal timestamps, so
+        # the stable (at, seq) sort must put them first here too
         for s in exp.servers:
             if s.join_at > 0.0:
                 injections.append(Injection(s.join_at, "server_join",
@@ -284,20 +335,34 @@ class EngineRuntime(Runtime):
                                              "workers": s.workers,
                                              "speed": s.speed,
                                              "service_noise": s.service_noise,
-                                             "max_batch": s.max_batch}))
+                                             "max_batch": s.max_batch},
+                                            seq=-1))
             if s.drain_at is not None:
                 injections.append(Injection(s.drain_at, "server_drain",
-                                            {"server_id": s.server_id}))
+                                            {"server_id": s.server_id},
+                                            seq=-1))
         clients = [_replace(c, seed=c.seed if c.seed else exp.seed)
                    for c in exp.clients]
-        return cls(engines, clients, policy=exp.policy,
-                   duration=exp.duration, interval=exp.interval,
-                   vocab=vocab, prompt_len=prompt_len,
-                   max_new_tokens=max_new_tokens, seed=exp.seed,
-                   time_scale=time_scale, slo=exp.slo, injections=injections,
-                   rep=rep, profile=exp.resolved_profile(),
-                   lengths=exp.resolved_lengths(), stats_mode=exp.stats_mode,
-                   engine_factory=engine_factory, clock=clock, sleep=sleep)
+        rt = cls(engines, clients, policy=exp.policy,
+                 duration=exp.duration, interval=exp.interval,
+                 vocab=vocab, prompt_len=prompt_len,
+                 max_new_tokens=max_new_tokens, seed=exp.seed,
+                 time_scale=time_scale, slo=exp.slo, injections=injections,
+                 rep=rep, profile=exp.resolved_profile(),
+                 lengths=exp.resolved_lengths(), stats_mode=exp.stats_mode,
+                 engine_factory=engine_factory, retry=exp.retry,
+                 breaker=exp.breaker, control=exp.control,
+                 clock=clock, sleep=sleep)
+        # standby pool: engines exist (built and warm) but start drained
+        # until a scale action activates them — mirror build_simulator
+        for s in exp.servers:
+            if s.standby:
+                h = rt.handles.get(s.server_id)
+                if h is not None:
+                    h.draining = True
+                    h.accepting = False
+        rt._rebuild_alive()
+        return rt
 
     # ------------------------------------------------------------ internals
     def _rebuild_alive(self) -> None:
@@ -338,35 +403,72 @@ class EngineRuntime(Runtime):
                 self.dropped += 1
                 return False
             self.assignment[cid] = handle
-        handle = self.balancer.route(None, self._alive,
-                                     self.assignment.get(cid))
+        self._submit(cid, t_arr, t_arr, ptoks, mnew, 0, 0.0)
+        return True
+
+    def _submit(self, cid: int, t_sub: float, t_created: float, ptoks: int,
+                mnew: int, attempt: int, prev_delay: float) -> None:
+        """Route + submit one attempt (primary or retry) at wall instant
+        ``t_sub``.  Mirrors ``Simulator._route``: admission control
+        first (sheds are an explicit disposition), then breaker-filtered
+        routing, then the per-attempt timeout deadline."""
+        t_virt = t_sub / self.time_scale
+        adm = self._admission
+        if adm is not None and not adm.allow(t_virt, self._res_rng):
+            self.shed += 1
+            self.dropped += 1
+            self.recorder.record_failure(t_sub, "shed")
+            return
+        pref = self.assignment.get(cid)
+        alive = self._alive
+        brk = self._breaker
+        if brk is not None:
+            allowed = {h.server_id: brk.allow(h.server_id, t_virt)
+                       for h in alive}
+            ok = [h for h in alive if allowed[h.server_id]]
+            if ok:
+                alive = ok
+                if pref is not None and not allowed.get(pref.server_id, True):
+                    pref = None
+        handle = self.balancer.route(None, alive, pref)
         if handle is None or handle.failed:
             self.dropped += 1
-            return True
+            self.recorder.record_failure(t_sub, "failed")
+            return
         rid = next(self._rid)
         n_prompt = ptoks if ptoks > 0 else self.prompt_len
         n_new = mnew if mnew > 0 else self.max_new_tokens
         prompt = self._rng.integers(0, self.vocab, size=n_prompt)
-        self._meta[rid] = (cid, t_arr)
+        self._meta[rid] = (cid, t_created, attempt, prev_delay, ptoks, mnew,
+                           handle.server_id)
         handle.outstanding.add(rid)
         handle.engine.submit(prompt, n_new, rid)
-        return True
+        rp = self._retry
+        if rp is not None:
+            if attempt == 0 and self._retry_budget is not None:
+                self._retry_budget.note_primary()
+            heapq.heappush(self._deadlines,
+                           (t_sub + rp.timeout * self.time_scale, rid))
 
     def _complete(self, handle: EngineServerHandle, comp, wall: float) -> None:
         meta = self._meta.pop(comp.req_id, None)
         handle.outstanding.discard(comp.req_id)
         if meta is None:
-            return                      # request of a failed server: dropped
-        cid, t_arr = meta
+            return     # failed-server request, or a timed-out zombie: the
+                       # wasted server work is real, the response is not
+        cid, t_arr = meta[0], meta[1]
         rec = Request(comp.req_id, cid, t_arr, 0.0)
         rec.enqueued = t_arr
         rec.started = wall - comp.latency
         rec.completed = wall
         rec.server_id = handle.server_id
         self.recorder.record(rec)
+        if self._breaker is not None:
+            self._breaker.record(handle.server_id, True,
+                                 wall / self.time_scale)
         handle.total_served += 1
 
-    def _apply_injection(self, inj) -> None:
+    def _apply_injection(self, inj, now: float = 0.0) -> None:
         kind, p = inj.kind, inj.params
         if kind == "server_join":
             sid = p["server_id"]
@@ -397,6 +499,10 @@ class EngineRuntime(Runtime):
                 for rid in h.outstanding:
                     if self._meta.pop(rid, None) is not None:
                         self.dropped += 1
+                        self.recorder.record_failure(now, "failed")
+                        if self._breaker is not None:
+                            self._breaker.record(h.server_id, False,
+                                                 now / self.time_scale)
                 h.outstanding.clear()
                 self._rebuild_alive()
                 for cid in list(h.connected):
@@ -405,8 +511,115 @@ class EngineRuntime(Runtime):
         elif kind == "set_policy":
             pol = p["policy"]
             self.balancer = POLICIES[pol]() if isinstance(pol, str) else pol
+        elif kind == "set_admission":
+            admit, rate = p.get("admit"), p.get("rate")
+            if rate is None and (admit is None or admit >= 1.0):
+                self._admission = None
+            else:
+                self._admission = AdmissionController(
+                    admit=admit, rate=rate, burst=p.get("burst", 1.0))
+        elif kind == "set_scale":
+            self.scale_to(int(p["n"]))
+        elif kind == "set_retry":
+            pol = p["policy"]
+            self._retry = pol
+            self._retry_budget = (RetryBudget(pol.budget_ratio,
+                                              pol.budget_burst)
+                                  if pol is not None else None)
+        elif kind == "set_breaker":
+            spec = p["spec"]
+            self._breaker = CircuitBreaker(spec) if spec is not None else None
         else:                                   # pre-filtered in __init__
             raise ValueError(f"unsupported engine injection: {kind!r}")
+
+    def scale_to(self, n: int) -> None:
+        """Elastic scale, mirroring ``Simulator.scale_to``: activate the
+        first ``n`` non-failed handles in server-id order, drain the
+        rest (in-flight work completes, clients re-home)."""
+        pool = [h for h in sorted(self.handles.values(),
+                                  key=lambda h: h.server_id)
+                if not h.failed]
+        for h in pool[:n]:
+            if h.draining:
+                h.draining = False
+                h.accepting = True
+        for h in pool[n:]:
+            if not h.draining:
+                h.draining = True
+                h.accepting = False
+                for cid in list(h.connected):
+                    h.disconnect(cid)
+                    self._reassign(cid)
+        self._rebuild_alive()
+
+    def _check_deadlines(self, now: float) -> None:
+        """Expire per-attempt timeouts due by ``now``.  The engine-side
+        request is NOT cancelled — it keeps burning batch slots until
+        completion, which ``_complete`` then discards (zombie work,
+        matching the simulator's wasted-work semantics)."""
+        while self._deadlines and self._deadlines[0][0] <= now:
+            deadline, rid = heapq.heappop(self._deadlines)
+            meta = self._meta.pop(rid, None)
+            if meta is None:
+                continue               # completed (or destroyed) in time
+            cid, t_created, attempt, prev_delay, ptoks, mnew, sid = meta
+            rp = self._retry
+            if rp is None:
+                continue               # policy removed mid-flight
+            if self._breaker is not None:
+                self._breaker.record(sid, False, deadline / self.time_scale)
+            budget = self._retry_budget
+            if (attempt < rp.max_retries and budget is not None
+                    and budget.allow()):
+                budget.note_retry()
+                self.retries += 1
+                delay = rp.delay(attempt + 1, prev_delay, self._res_rng)
+                heapq.heappush(self._retry_q,
+                               (deadline + delay * self.time_scale,
+                                next(self._rseq), cid, t_created,
+                                attempt + 1, delay, ptoks, mnew))
+            else:
+                self.timeouts += 1
+                self.dropped += 1
+                self.recorder.record_failure(deadline, "timeout")
+
+    def _drain_retries(self, now: float) -> None:
+        """Re-issue backed-off retries due by ``now`` (they re-enter
+        ``_submit``, so they pass admission control again)."""
+        while self._retry_q and self._retry_q[0][0] <= now:
+            due, _, cid, t_created, attempt, prev_delay, ptoks, mnew = \
+                heapq.heappop(self._retry_q)
+            self._submit(cid, due, t_created, ptoks, mnew, attempt,
+                         prev_delay)
+
+    def _control_step(self, now: float) -> None:
+        """Closed-loop controller: tick at each control boundary due by
+        ``now``, queue actions for ``now + lag``, apply due actions."""
+        loop = self._control
+        spec = loop.spec
+        scale = self.time_scale
+        while (self._next_control <= now
+               and self._next_control <= self.duration * scale):
+            t_virt = self._next_control / scale
+            admit = (self._admission.level
+                     if self._admission is not None else 1.0)
+            slo_wall = self.slo * scale if self.slo is not None else None
+            # observe in the recorder's (wall) time base — its interval
+            # indices are wall instants; gate the cooldown in virtual
+            # time, like the simulator
+            obs = loop.observe(self.recorder, self._alive,
+                               self._next_control, slo_wall, admit)
+            for kind, params in loop.tick(obs, t_virt):
+                due = self._next_control + spec.lag * scale
+                self.control_log.append((t_virt + spec.lag, kind,
+                                         dict(params)))
+                heapq.heappush(self._pending_actions,
+                               (due, next(self._rseq), kind, dict(params)))
+            self._next_control += spec.interval * scale
+        from repro.core.scenario import Injection
+        while self._pending_actions and self._pending_actions[0][0] <= now:
+            due, _, kind, params = heapq.heappop(self._pending_actions)
+            self._apply_injection(Injection(due, kind, params), now=due)
 
     def _reassign(self, cid: int) -> None:
         self.balancer.release(cid)
@@ -437,15 +650,23 @@ class EngineRuntime(Runtime):
         injections = list(self._injections)
         inj_idx = 0
         self._next_sample = self.interval * self.time_scale
+        self._next_control = (self._control.spec.interval * self.time_scale
+                              if self._control is not None else None)
         end_wall = self.duration * self.time_scale
         t0 = self._clock()
         while True:
             now = self._clock() - t0
             while inj_idx < len(injections) and \
                     injections[inj_idx].at * self.time_scale <= now:
-                self._apply_injection(injections[inj_idx])
+                self._apply_injection(injections[inj_idx],
+                                      now=injections[inj_idx].at
+                                      * self.time_scale)
                 inj_idx += 1
             self._drain_gauges(now)
+            if self._control is not None:
+                self._control_step(now)
+            self._check_deadlines(now)
+            self._drain_retries(now)
             admitted = False
             while heap and heap[0][0] <= now:
                 t_arr, cid, ptoks, mnew = heapq.heappop(heap)
@@ -457,7 +678,9 @@ class EngineRuntime(Runtime):
             # request drains; the idle gauge tail after the final event is
             # fast-forwarded by the closing _drain_gauges below, where
             # nothing can change the readings anymore
-            if not heap and not self._meta and inj_idx >= len(injections):
+            if (not heap and not self._meta and not self._retry_q
+                    and not self._pending_actions
+                    and inj_idx >= len(injections)):
                 break
             # park the next deadline (arrival, injection, or gauge
             # boundary) on the clock so engines skipping ahead in virtual
@@ -473,6 +696,15 @@ class EngineRuntime(Runtime):
                     targets.append(injections[inj_idx].at * self.time_scale)
                 if self._next_sample <= end_wall:
                     targets.append(self._next_sample)
+                if self._deadlines:
+                    targets.append(self._deadlines[0][0])
+                if self._retry_q:
+                    targets.append(self._retry_q[0][0])
+                if self._pending_actions:
+                    targets.append(self._pending_actions[0][0])
+                if (self._next_control is not None
+                        and self._next_control <= end_wall):
+                    targets.append(self._next_control)
                 self._clock.limit = t0 + min(targets) if targets else None
             stepped = False
             for handle in list(self.handles.values()):
@@ -496,6 +728,15 @@ class EngineRuntime(Runtime):
                     targets.append(injections[inj_idx].at * self.time_scale)
                 if self._next_sample <= end_wall:
                     targets.append(self._next_sample)
+                if self._deadlines:
+                    targets.append(self._deadlines[0][0])
+                if self._retry_q:
+                    targets.append(self._retry_q[0][0])
+                if self._pending_actions:
+                    targets.append(self._pending_actions[0][0])
+                if (self._next_control is not None
+                        and self._next_control <= end_wall):
+                    targets.append(self._next_control)
                 wait = min(targets) - now
                 if self._meta:
                     wait = min(wait, 0.001)

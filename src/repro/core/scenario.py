@@ -34,8 +34,16 @@ from repro.core.harness import Experiment, ServerSpec
 class Injection:
     at: float
     kind: str           # server_fail | server_speed | server_join |
-                        # server_drain | set_policy | set_hedge
+                        # server_drain | set_policy | set_hedge |
+                        # set_admission | set_scale | set_retry | set_breaker
     params: dict
+    # declaration-order tie-break: injections at identical timestamps
+    # apply in ``(at, seq)`` order on EVERY backend, mirroring the
+    # calendar queue's total order.  ``Scenario.compile`` stamps this;
+    # runtime-synthesized injections (spec joins/drains) use negative
+    # seqs because the simulator schedules them before the compiled
+    # injection list at equal timestamps.
+    seq: int = 0
 
 
 # ---------------------------------------------------------------------------
@@ -119,9 +127,56 @@ class SetHedge:
     delay: Optional[float]
 
 
+@dataclass(frozen=True)
+class SetAdmission:
+    """Admission control from ``at``: probabilistic (``admit`` fraction)
+    or token-bucket (``rate`` req/s, ``burst`` capacity).  ``admit=1.0``
+    with no rate disables shedding."""
+    at: float
+    admit: Optional[float] = None
+    rate: Optional[float] = None
+    burst: float = 1.0
+
+
+@dataclass(frozen=True)
+class SetScale:
+    """Scale the fleet to ``n`` active servers at ``at``, drawing from
+    the standby pool (``ServerSpec.standby=True``) in server-id order;
+    surplus servers drain (residual work completes)."""
+    at: float
+    n: int
+
+
+@dataclass(frozen=True)
+class SetRetry:
+    """Install (or, with ``policy=None``, remove) the client-side
+    timeout/retry policy (a ``repro.control.RetryPolicy``) at ``at``."""
+    at: float
+    policy: Optional[object]
+
+
+@dataclass(frozen=True)
+class SetBreaker:
+    """Install (or remove) per-server circuit breaking (a
+    ``repro.control.BreakerSpec``) at ``at``."""
+    at: float
+    spec: Optional[object]
+
+
+@dataclass(frozen=True)
+class CorrelatedFailure:
+    """Several servers die at the SAME instant (shared rack/AZ failure).
+    Lowers to one ``server_fail`` injection per server at identical
+    timestamps — their application order is the declaration order of
+    ``server_ids`` (the ``(at, seq)`` tie-break)."""
+    at: float
+    server_ids: tuple
+
+
 ScenarioEvent = Union[ClientArrival, FlashCrowd, ClientChurn, ServerJoin,
                       ServerDrain, ServerFail, ServerSlowdown, SetPolicy,
-                      SetHedge]
+                      SetHedge, SetAdmission, SetScale, SetRetry,
+                      SetBreaker, CorrelatedFailure]
 
 
 # ---------------------------------------------------------------------------
@@ -145,6 +200,13 @@ class Scenario:
     # per-request token-size distribution (identical on both backends)
     service_model: Optional[object] = None
     lengths: Optional[object] = None
+    # resilience + closed-loop control (repro.control): a RetryPolicy
+    # gives clients timeouts/bounded retries from t=0, a BreakerSpec
+    # enables per-server circuit breaking, a ControlSpec runs a reactive
+    # controller over the run's telemetry
+    retry: Optional[object] = None
+    breaker: Optional[object] = None
+    control: Optional[object] = None
 
     # ------------------------------------------------------------- compile
     def compile(self) -> Experiment:
@@ -220,10 +282,34 @@ class Scenario:
             elif isinstance(ev, SetHedge):
                 injections.append(Injection(ev.at, "set_hedge",
                                             {"delay": ev.delay}))
+            elif isinstance(ev, SetAdmission):
+                injections.append(Injection(ev.at, "set_admission",
+                                            {"admit": ev.admit,
+                                             "rate": ev.rate,
+                                             "burst": ev.burst}))
+            elif isinstance(ev, SetScale):
+                injections.append(Injection(ev.at, "set_scale",
+                                            {"n": int(ev.n)}))
+            elif isinstance(ev, SetRetry):
+                injections.append(Injection(ev.at, "set_retry",
+                                            {"policy": ev.policy}))
+            elif isinstance(ev, SetBreaker):
+                injections.append(Injection(ev.at, "set_breaker",
+                                            {"spec": ev.spec}))
+            elif isinstance(ev, CorrelatedFailure):
+                for sid in ev.server_ids:
+                    if sid not in servers:
+                        raise ValueError(f"unknown server {sid}")
+                    injections.append(Injection(ev.at, "server_fail",
+                                                {"server_id": sid}))
             else:
                 raise TypeError(f"unknown scenario event: {ev!r}")
 
-        injections.sort(key=lambda i: i.at)
+        # declaration-order seq stamp + (at, seq) sort: identical-time
+        # injections apply in declaration order on every backend
+        injections = [replace(inj, seq=k)
+                      for k, inj in enumerate(injections)]
+        injections.sort(key=lambda i: (i.at, i.seq))
         return Experiment(
             clients=tuple(clients),
             servers=tuple(servers.values()),
@@ -231,4 +317,5 @@ class Scenario:
             interval=self.interval, seed=self.seed,
             hedge_delay=self.hedge_delay, stats_mode=self.stats_mode,
             slo=self.slo, injections=tuple(injections),
-            service_model=self.service_model, lengths=self.lengths)
+            service_model=self.service_model, lengths=self.lengths,
+            retry=self.retry, breaker=self.breaker, control=self.control)

@@ -33,6 +33,9 @@ from typing import Callable, Optional
 
 import numpy as np
 
+from repro.control import (AdmissionController, CircuitBreaker, ControlLoop,
+                           RetryBudget)
+from repro.control.resilience import RESILIENCE_STREAM
 from repro.core.client import ClientConfig, ClientGenerator
 from repro.core.events import CalendarQueue
 from repro.core.profiles import BatchScheduler, apply_service_noise
@@ -238,6 +241,10 @@ class SimConfig:
     gauges: bool = True                   # sample per-server telemetry gauges
                                           # each interval (off: saves the
                                           # O(n_servers) sweep per interval)
+    # resilience + closed-loop control (repro.control)
+    retry: Optional[object] = None        # RetryPolicy: timeouts + retries
+    breaker: Optional[object] = None      # BreakerSpec: per-server breaking
+    control: Optional[object] = None      # ControlSpec: reactive controller
 
 
 class Simulator:
@@ -278,6 +285,27 @@ class Simulator:
         self._legacy_initial: set[int] = set()
         self._legacy_hold: list[Request] = []
         self._legacy_terminated = False
+        # resilience stack: admission control, circuit breaking, client
+        # timeouts/retries.  The jitter/admission RNG is domain-tagged
+        # (RESILIENCE_STREAM, seed, rep) and draws nothing unless a
+        # policy is active — existing runs stay bit-identical.
+        self.shed = 0                             # admission-rejected requests
+        self.timeouts = 0                         # failed after all retries
+        self.retries = 0                          # retry attempts issued
+        self._res_rng = np.random.default_rng(
+            (RESILIENCE_STREAM, cfg.seed, cfg.rep))
+        self._admission: Optional[AdmissionController] = None
+        self._breaker = CircuitBreaker(cfg.breaker) if cfg.breaker else None
+        self._retry = cfg.retry
+        self._retry_budget = (RetryBudget(cfg.retry.budget_ratio,
+                                          cfg.retry.budget_burst)
+                              if cfg.retry else None)
+        # closed-loop control: one ControlLoop ticking every spec.interval,
+        # acting through the same appliers as compiled injections
+        self.control_log: list = []               # (t_applied, kind, params)
+        self._control = ControlLoop(cfg.control) if cfg.control else None
+        if self._control is not None:
+            self.schedule(cfg.control.interval, self._control_tick)
         # telemetry: per-server gauges sampled at every interval boundary
         # (read-only callbacks — they never perturb simulation state)
         if cfg.gauges:
@@ -382,14 +410,40 @@ class Simulator:
             self._route(req, t)
         self._pump(cid)
 
-    def _route(self, req: Request, t: float):
+    def _route(self, req: Request, t: float, attempt: int = 0,
+               prev_delay: float = 0.0):
+        adm = self._admission
+        if adm is not None and not adm.allow(t, self._res_rng):
+            # load shedding is an explicit disposition, never a silent
+            # drop: the request lands in the recorder's failure ledger
+            self.shed += 1
+            self.dropped += 1
+            self.recorder.record_failure(t, "shed")
+            return
         sid = self.assignment.get(req.client_id)
-        server = self._route_fn(req, self._alive,
-                                self.servers.get(sid) if sid is not None else None)
+        pref = self.servers.get(sid) if sid is not None else None
+        alive = self._alive
+        brk = self._breaker
+        if brk is not None:
+            allowed = {s.server_id: brk.allow(s.server_id, t) for s in alive}
+            ok = [s for s in alive if allowed[s.server_id]]
+            if ok:                    # all-open: fail open, keep full fleet
+                alive = ok
+                if pref is not None and not allowed.get(pref.server_id, True):
+                    pref = None       # broken preferred server: re-route
+        server = self._route_fn(req, alive, pref)
         if server is None:
             self.dropped += 1
+            self.recorder.record_failure(t, "failed")
             return
         server.enqueue(req, t, self)
+        rp = self._retry
+        if rp is not None:
+            if attempt == 0 and self._retry_budget is not None:
+                self._retry_budget.note_primary()
+            self.schedule(t + rp.timeout,
+                          lambda tt, r=req, a=attempt, p=prev_delay:
+                          self._check_timeout(r, a, p, tt))
         hedge = self._hedge_delay
         if hedge is not None:
             self.schedule(t + hedge,
@@ -413,6 +467,48 @@ class Simulator:
         target = min(others, key=lambda s: s.load())
         target.enqueue(clone, t, self)
 
+    def _check_timeout(self, req: Request, attempt: int, prev_delay: float,
+                       t: float):
+        """Client-side timeout: the client abandons this attempt.  The
+        server-side copy is NOT cancelled — it keeps burning capacity
+        (wasted work), which is exactly what makes naive retry storms
+        metastable.  The eventual completion is discarded by
+        ``on_completion``'s ``_recorded`` guard (zombie semantics, same
+        as the wall-clock engine)."""
+        if req.completed is not None or req._recorded or req.cancelled:
+            return
+        rp = self._retry
+        if rp is None:                 # policy removed mid-flight: no-op
+            return
+        req._recorded = True           # zombie: completion won't be recorded
+        if self._breaker is not None and req.server_id is not None:
+            self._breaker.record(req.server_id, False, t)
+        budget = self._retry_budget
+        if (attempt < rp.max_retries and budget is not None
+                and budget.allow()):
+            budget.note_retry()
+            self.retries += 1
+            delay = rp.delay(attempt + 1, prev_delay, self._res_rng)
+            self.schedule(t + delay,
+                          lambda tt, r=req, a=attempt + 1, d=delay:
+                          self._retry_emit(r, a, d, tt))
+        else:
+            # retries exhausted (or budget says no): explicit disposition
+            self.timeouts += 1
+            self.dropped += 1
+            self.recorder.record_failure(t, "timeout")
+
+    def _retry_emit(self, orig: Request, attempt: int, prev_delay: float,
+                    t: float):
+        """Re-issue a timed-out request.  The fresh attempt keeps the
+        ORIGINAL creation time, so a retried request's recorded latency
+        honestly spans queueing + backoff across all attempts.  Retries
+        re-enter ``_route``, so they pass admission control again."""
+        req = Request(self._next_rid(), orig.client_id, orig.created,
+                      orig.service_demand, orig.prompt_tokens,
+                      orig.max_new_tokens)
+        self._route(req, t, attempt=attempt, prev_delay=prev_delay)
+
     def _client_done(self, cid: int):
         sid = self.assignment.pop(cid, None)
         if sid is not None:
@@ -433,10 +529,12 @@ class Simulator:
             primary.completed = req.completed
             primary.server_id = req.server_id
             req = primary
-        if req._recorded:                     # primary already served first
-            return
+        if req._recorded:                     # primary served first, or the
+            return                            # client timed out (zombie work)
         req._recorded = True
         self.recorder.record(req)
+        if self._breaker is not None and req.server_id is not None:
+            self._breaker.record(req.server_id, True, req.completed)
         c = self.completed_per_client
         c[req.client_id] = c.get(req.client_id, 0) + 1
 
@@ -509,6 +607,9 @@ class Simulator:
         # pair destroyed by the same failure reaches here for both copies)
         primary._recorded = True
         self.dropped += 1
+        self.recorder.record_failure(self.now, "failed")
+        if self._breaker is not None and req.server_id is not None:
+            self._breaker.record(req.server_id, False, self.now)
 
     def _reassign(self, cid: int, t: float):
         """Re-home a live client after its server vanished."""
@@ -547,6 +648,74 @@ class Simulator:
             self._hedge_delay = delay
         self.schedule(at, _set)
 
+    # ------------------------------------------------ resilience + control
+    def set_admission(self, at: float, params: dict):
+        """Install/replace/disable admission control at ``at``."""
+        def _set(t):
+            admit = params.get("admit")
+            rate = params.get("rate")
+            if rate is None and (admit is None or admit >= 1.0):
+                self._admission = None     # fully open: no draws, no state
+            else:
+                self._admission = AdmissionController(
+                    admit=admit, rate=rate, burst=params.get("burst", 1.0))
+        self.schedule(at, _set)
+
+    def set_retry(self, policy, at: float):
+        """Install (policy) or remove (None) the client retry policy."""
+        def _set(t):
+            self._retry = policy
+            self._retry_budget = (RetryBudget(policy.budget_ratio,
+                                              policy.budget_burst)
+                                  if policy is not None else None)
+        self.schedule(at, _set)
+
+    def set_breaker(self, spec, at: float):
+        """Install (spec) or remove (None) per-server circuit breaking."""
+        def _set(t):
+            self._breaker = CircuitBreaker(spec) if spec is not None else None
+        self.schedule(at, _set)
+
+    def scale_to(self, n: int, at: float):
+        """Elastic scale: activate the first ``n`` non-failed servers (in
+        server-id order, drawing standbys out of drain) and drain the
+        rest.  Draining servers finish residual work; their connected
+        clients stay until the client-side lifecycle moves them."""
+        def _scale(t):
+            pool = [s for s in sorted(self.servers.values(),
+                                      key=lambda s: s.server_id)
+                    if not s.failed]
+            for s in pool[:n]:
+                if s.draining:
+                    s.draining = False
+                    s.accepting = True
+            for s in pool[n:]:
+                if not s.draining:
+                    s.draining = True
+                    s.accepting = False
+                    for cid in list(s.connected):
+                        s.disconnect(cid)
+                        self._reassign(cid, t)
+            self._rebuild_alive()
+        self.schedule(at, _scale)
+
+    def _control_tick(self, t: float):
+        """One closed-loop controller step: observe the window, let the
+        policy act, apply actions after the actuation lag through the
+        same appliers compiled injections use.  Applied actions land in
+        ``control_log`` for cost accounting and determinism checks."""
+        loop = self._control
+        admit = self._admission.level if self._admission is not None else 1.0
+        obs = loop.observe(self.recorder, self._alive, t, self.cfg.slo,
+                           admit)
+        for kind, params in loop.tick(obs, t):
+            at = t + loop.spec.lag
+            self.control_log.append((at, kind, dict(params)))
+            self.apply_injection(kind, at, params)
+        nxt = t + loop.spec.interval
+        if nxt <= self.cfg.duration:
+            self.schedule(nxt, self._control_tick)
+
     def apply_injection(self, kind: str, at: float, params: dict):
         """Apply one compiled ``Scenario`` injection (see core/scenario.py)."""
         if kind == "server_fail":
@@ -573,5 +742,13 @@ class Simulator:
             self.set_policy(params["policy"], at)
         elif kind == "set_hedge":
             self.set_hedge(params["delay"], at)
+        elif kind == "set_admission":
+            self.set_admission(at, params)
+        elif kind == "set_scale":
+            self.scale_to(int(params["n"]), at)
+        elif kind == "set_retry":
+            self.set_retry(params["policy"], at)
+        elif kind == "set_breaker":
+            self.set_breaker(params["spec"], at)
         else:
             raise ValueError(f"unknown injection kind: {kind!r}")

@@ -337,15 +337,21 @@ def quantiles_partition_batched(mat: np.ndarray, counts,
     return out
 
 
-def slo_violation_frac(xs, slo: Optional[float]) -> float:
-    """Fraction of latencies above ``slo``.  The empty contract is the
-    same as ``Summary.of``/``pctl``: no SLO or no samples -> NaN (one
-    code path — ``IntervalFrame`` math must not special-case emptiness
-    on its own)."""
-    if slo is None or len(xs) == 0:
+def slo_violation_frac(xs, slo: Optional[float], n_bad: int = 0) -> float:
+    """Fraction of requests violating ``slo``.  ``n_bad`` counts
+    requests that never produced a latency sample — shed, timed out, or
+    failed after retries — every one of which IS a violation: a 100%-
+    shed interval must report 1.0, not the 0.0 the served-only math
+    used to produce.  The empty contract is the same as
+    ``Summary.of``/``pctl``: no SLO, or no samples AND no failures ->
+    NaN (one code path — ``IntervalFrame`` math must not special-case
+    emptiness on its own)."""
+    if slo is None or (len(xs) == 0 and n_bad == 0):
         return float("nan")
+    if len(xs) == 0:
+        return 1.0
     xs = _as_float_array(xs)
-    return float(np.count_nonzero(xs > slo)) / xs.size
+    return (float(np.count_nonzero(xs > slo)) + n_bad) / (xs.size + n_bad)
 
 
 @dataclass
@@ -389,6 +395,13 @@ class LatencyRecorder:
             raise ValueError(f"unknown recorder mode: {mode!r}")
         self.interval = interval
         self.mode = mode
+        # disposition accounting (both modes): requests that ended
+        # WITHOUT a latency sample — shed at admission, timed out, or
+        # destroyed by a failure — are first-class rows here, never
+        # silently absent from the statistics.  Plain counters: O(1)
+        # memory, zero cost on the record() hot path.
+        self.failures = {"shed": 0, "timeout": 0, "failed": 0}
+        self.fail_by_ivl: dict[int, dict] = {}
         if mode == "exact":
             # raw-sample storage; deliberately NOT created in streaming mode
             # so stale consumers fail loudly instead of reading empty lists
@@ -448,6 +461,28 @@ class LatencyRecorder:
         stat.add(lat)
         self._queue.add(started - req.enqueued)
         self._service.add(completed - started)
+
+    # ------- dispositions ---------------------------------------------------
+    def record_failure(self, t: float, disposition: str) -> None:
+        """Account one request that will never complete: ``"shed"``
+        (admission control refused it), ``"timeout"`` (the client gave
+        up; retries exhausted or budget-denied), or ``"failed"`` (lost
+        to a server failure).  ``t`` is the disposition time — the
+        request counts against that interval's SLO fraction."""
+        if disposition not in self.failures:
+            raise ValueError(f"unknown disposition {disposition!r}; "
+                             f"known: {', '.join(self.failures)}")
+        self.failures[disposition] += 1
+        ivl = int(t / self.interval)
+        cell = self.fail_by_ivl.get(ivl)
+        if cell is None:
+            cell = self.fail_by_ivl[ivl] = \
+                {"shed": 0, "timeout": 0, "failed": 0}
+        cell[disposition] += 1
+
+    def failed_total(self) -> int:
+        return (self.failures["shed"] + self.failures["timeout"]
+                + self.failures["failed"])
 
     # ------- summaries ------------------------------------------------------
     def overall(self) -> Summary:
@@ -509,6 +544,11 @@ class IntervalFrame:
     # server_id -> generated tokens/sec over the interval; only servers
     # that count tokens (batched ServiceModels) appear here
     tokens_per_sec: dict
+    # disposition counts: requests that ended this interval WITHOUT a
+    # latency sample (they count into slo_violation_frac, not into n)
+    n_shed: int = 0
+    n_timeout: int = 0
+    n_failed: int = 0
 
 
 class MetricsPipeline:
@@ -553,7 +593,7 @@ class MetricsPipeline:
     def _rev(self) -> tuple:
         rec = self.recorder
         n = len(rec.all) if rec.mode == "exact" else rec._all.n
-        return n, self._gauge_ver
+        return n, rec.failed_total(), self._gauge_ver
 
     # ---- runtime-facing ----------------------------------------------------
     def sample_servers(self, t: float, servers) -> None:
@@ -649,12 +689,15 @@ class MetricsPipeline:
             return self._frames_cache[1]
         samples = self._interval_samples()
         series = self.series()
-        ivls = sorted(set(series) | set(self._gauges))
+        fails = self.recorder.fail_by_ivl
+        ivls = sorted(set(series) | set(self._gauges) | set(fails))
         frames = []
         for ivl in ivls:
             s = series.get(ivl)
             xs = samples.get(ivl, [])
-            viol = slo_violation_frac(xs, self.slo)
+            cell = fails.get(ivl, {})
+            n_bad = sum(cell.values())
+            viol = slo_violation_frac(xs, self.slo, n_bad=n_bad)
             gauges = self._gauges.get(ivl, {})
             util = {sid: g[0] for sid, g in gauges.items()}
             qdepth = {sid: g[1] for sid, g in gauges.items()}
@@ -667,7 +710,9 @@ class MetricsPipeline:
                 t=ivl, n=s.n, qps=s.n / self.interval, mean=s.mean,
                 p50=s.p50, p95=s.p95, p99=s.p99, slo_violation_frac=viol,
                 util=util, qdepth=qdepth, occupancy=occupancy,
-                tokens_per_sec=tokens))
+                tokens_per_sec=tokens, n_shed=cell.get("shed", 0),
+                n_timeout=cell.get("timeout", 0),
+                n_failed=cell.get("failed", 0)))
         self._frames_cache = (rev, frames)
         return frames
 
@@ -683,6 +728,8 @@ class MetricsPipeline:
                          "mean_ms": f.mean * 1e3, "p50_ms": f.p50 * 1e3,
                          "p95_ms": f.p95 * 1e3, "p99_ms": f.p99 * 1e3,
                          "slo_violation_frac": f.slo_violation_frac,
+                         "n_shed": f.n_shed, "n_timeout": f.n_timeout,
+                         "n_failed": f.n_failed,
                          "mean_util": mean_util,
                          "mean_occupancy": mean_occ,
                          "tokens_per_sec": sum(f.tokens_per_sec.values()),

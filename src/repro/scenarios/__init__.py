@@ -44,3 +44,4 @@ def get(name: str, **overrides) -> Scenario:
 
 
 from repro.scenarios import canonical as _canonical  # noqa: E402,F401  (registers)
+from repro.scenarios import chaos as _chaos  # noqa: E402,F401  (registers)

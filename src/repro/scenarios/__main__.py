@@ -28,6 +28,11 @@ def _print_report(rt, scenario, backend: str) -> None:
           f"n={s.n} dropped={rt.dropped} mean={s.mean*1e3:.2f}ms "
           f"p50={s.p50*1e3:.2f}ms p95={s.p95*1e3:.2f}ms "
           f"p99={s.p99*1e3:.2f}ms")
+    res = {m: int(getattr(rt, m, 0) or 0)
+           for m in ("shed", "timeouts", "retries")}
+    if any(res.values()):
+        print(f"  resilience: shed={res['shed']} "
+              f"timeouts={res['timeouts']} retries={res['retries']}")
     unsupported = getattr(rt, "unsupported", ())
     for inj in unsupported:
         print(f"  note: injection {inj.kind}@{inj.at:g}s not supported on "

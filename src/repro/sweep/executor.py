@@ -76,14 +76,16 @@ def _slo_frac(rt, slo) -> float:
         return rt.telemetry.slo_frac()
     if rec.mode == "exact":
         from repro.core.stats import slo_violation_frac
-        return slo_violation_frac(rec.all, slo)
+        return slo_violation_frac(rec.all, slo, n_bad=rec.failed_total())
     # streaming mode: aggregate the per-interval violation fractions,
-    # weighted by interval request counts (reservoir-approximate)
+    # weighted by interval request counts — served AND disposed
+    # (shed/timeout/failed count as violations; reservoir-approximate)
     num = den = 0.0
     for f in rt.telemetry.frames():
-        if f.n and f.slo_violation_frac == f.slo_violation_frac:
-            num += f.slo_violation_frac * f.n
-            den += f.n
+        w = f.n + f.n_shed + f.n_timeout + f.n_failed
+        if w and f.slo_violation_frac == f.slo_violation_frac:
+            num += f.slo_violation_frac * w
+            den += w
     return num / den if den else float("nan")
 
 
@@ -100,6 +102,11 @@ def _extract_metrics(sweep: Sweep, rt, exp) -> dict:
             out[m] = rt.dropped
         elif m == "slo_frac":
             out[m] = _slo_frac(rt, exp.slo)
+        elif m in ("shed", "timeouts", "retries"):
+            # resilience counters; 0 on runtimes without the feature
+            # (vector exposes shed only — fluid has no per-request
+            # timeout/retry mechanics)
+            out[m] = int(getattr(rt, m, 0))
         else:
             raise ValueError(f"unknown metric {m!r}; known: "
                              f"{SUMMARY_METRICS + EXTRA_METRICS} or a "
@@ -155,9 +162,10 @@ class _VectorCellView:
 
     recorder = None
 
-    def __init__(self, telemetry, dropped: int):
+    def __init__(self, telemetry, dropped: int, shed: int = 0):
         self.telemetry = telemetry
         self.dropped = dropped
+        self.shed = shed
 
 
 def run_vector_tasks(sweep: Sweep, vec_tasks: list,
@@ -204,7 +212,10 @@ def run_vector_tasks(sweep: Sweep, vec_tasks: list,
         return rows
     for (k, i, params, rep, exp, stream), res in zip(metas, results):
         try:
-            view = _VectorCellView(VectorTelemetry(res), res.dropped)
+            shed = (int(round(float(res.shed_ivl.sum())))
+                    if res.shed_ivl is not None else 0)
+            view = _VectorCellView(VectorTelemetry(res), res.dropped,
+                                   shed=shed)
             metrics = _extract_metrics(sweep, view, exp)
             clients = None
             if sweep.per_client:

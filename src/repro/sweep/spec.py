@@ -51,7 +51,7 @@ import numpy as np
 SUMMARY_METRICS = ("n", "mean", "p50", "p95", "p99")
 DEFAULT_METRICS = SUMMARY_METRICS
 #: extra metric names with dedicated extractors
-EXTRA_METRICS = ("dropped", "slo_frac")
+EXTRA_METRICS = ("dropped", "slo_frac", "shed", "timeouts", "retries")
 
 
 # ---------------------------------------------------------------------------

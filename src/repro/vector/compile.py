@@ -103,6 +103,14 @@ class VectorProgram:
     new_mean: float = 1.0               # E[decode tokens] per request
     new_var: float = 0.0
     refused_clients: int = 0            # connects the balancer refused
+    # admission control (fluid limit): per-slot admit fraction applied by
+    # Poisson thinning (statistically exact for Poisson arrivals), and
+    # the shed-rate timeline it implies.  None = fully open throughout.
+    admit: Optional[np.ndarray] = None  # [T] admitted fraction
+    shed_rate: Optional[np.ndarray] = None   # [T] shed QPS
+    # actions the control pre-pass emitted: (t_applied, kind, params),
+    # same shape as the event backends' ``control_log``
+    control_actions: list = field(default_factory=list)
     unsupported: list = field(default_factory=list)
 
     @property
@@ -169,6 +177,7 @@ def compile_experiment(exp: Experiment, dt: float = 0.005) -> VectorProgram:
     accepting = np.ones((n_slots, S))
     fail_slot = np.full(S, -1, dtype=np.int64)
     noise_sigma = np.array([float(s.service_noise) for s in specs])
+    drain_slots: list[tuple] = []               # (slot, col) re-assert marks
     for j, s in enumerate(specs):
         if s.join_at > 0.0:
             k = min(int(s.join_at / dt), n_slots)
@@ -177,13 +186,31 @@ def compile_experiment(exp: Experiment, dt: float = 0.005) -> VectorProgram:
         if s.drain_at is not None:
             k = min(int(s.drain_at / dt), n_slots)
             accepting[k:, j] = 0.0
+            drain_slots.append((k, j))
+        if s.standby:
+            # standby pool: no capacity and no routing until a scale
+            # action activates the column
+            active[:, j] = 0.0
+            accepting[:, j] = 0.0
 
     unsupported = []
-    policy_changes: list[tuple] = []            # (t, policy-name)
+    policy_changes: list[tuple] = []            # (t, seq, policy-name)
+    admission_changes: list[tuple] = []         # (t, seq, params)
+    scale_changes: list[tuple] = []             # (t, seq, n)
     if exp.hedge_delay is not None:
         from repro.core.scenario import Injection
         unsupported.append(Injection(0.0, "set_hedge",
                                      {"delay": exp.hedge_delay}))
+    # retries and circuit breaking are per-request mechanisms with no
+    # fluid analogue — surface them instead of silently ignoring
+    if exp.retry is not None:
+        from repro.core.scenario import Injection
+        unsupported.append(Injection(0.0, "set_retry",
+                                     {"policy": exp.retry}))
+    if exp.breaker is not None:
+        from repro.core.scenario import Injection
+        unsupported.append(Injection(0.0, "set_breaker",
+                                     {"spec": exp.breaker}))
     for inj in exp.injections:
         if inj.kind == "server_fail":
             j = col[inj.params["server_id"]]
@@ -199,11 +226,16 @@ def compile_experiment(exp: Experiment, dt: float = 0.005) -> VectorProgram:
             j = col[inj.params["server_id"]]
             k = min(int(inj.at / dt), n_slots)
             accepting[k:, j] = 0.0
+            drain_slots.append((k, j))
         elif inj.kind == "set_policy":
-            policy_changes.append((inj.at, inj.params["policy"]))
-        else:                       # set_hedge, server_join via injection
+            policy_changes.append((inj.at, inj.seq, inj.params["policy"]))
+        elif inj.kind == "set_admission":
+            admission_changes.append((inj.at, inj.seq, dict(inj.params)))
+        elif inj.kind == "set_scale":
+            scale_changes.append((inj.at, inj.seq, int(inj.params["n"])))
+        else:           # set_hedge/set_retry/set_breaker, injected joins
             unsupported.append(inj)
-    policy_changes.sort(key=lambda c: c[0])
+    policy_changes.sort(key=lambda c: (c[0], c[1]))
 
     # ---- per-client offered rates ------------------------------------------
     # rate[c, t], plus each client's connect time and effective end
@@ -224,24 +256,65 @@ def compile_experiment(exp: Experiment, dt: float = 0.005) -> VectorProgram:
         rates[i] = masked
         ends[i] = end
 
+    # ---- closed-loop control: fluid pre-pass -------------------------------
+    # Replays the controller against the fluid backlog model (offered
+    # rate vs capacity), emitting the same set_admission/set_scale
+    # actions the event backends would apply — lag and cooldown
+    # included.  Latency percentiles have no cheap fluid analogue, so
+    # the observation's p99/slo_frac are NaN; the shipped policies act
+    # on utilization and queue depth, which the model does carry.
+    control_actions: list = []
+    if exp.control is not None:
+        from repro.core.scenario import Injection
+        if getattr(exp.resolved_service(), "kind", "scalar") == "batched":
+            unsupported.append(Injection(0.0, "control",
+                                         {"spec": exp.control}))
+        else:
+            m0 = exp.resolved_profile().moments()[0]
+            w_mean = m0 * np.exp(noise_sigma ** 2 / 2.0)
+            adm_c, scale_c = _control_prepass(
+                exp.control, rates.sum(axis=0), active, accepting, speed,
+                workers, w_mean, specs, server_ids, fail_slot, drain_slots,
+                admission_changes, scale_changes, dt, n_slots)
+            admission_changes = admission_changes + adm_c
+            scale_changes = scale_changes + scale_c
+            control_actions = sorted(
+                [(t, "set_admission", dict(p)) for t, _, p in adm_c]
+                + [(t, "set_scale", {"n": n}) for t, _, n in scale_c],
+                key=lambda a: a[0])
+
+    # ---- scale timeline ----------------------------------------------------
+    # apply chronologically so a scale-out cannot clobber a later drain
+    # (each action re-asserts failures and still-future drain marks)
+    scale_changes.sort(key=lambda c: (c[0], c[1]))
+    for at, _seq, n in scale_changes:
+        k = min(int(at / dt), n_slots)
+        _apply_scale_action(active, accepting, k, n, specs, server_ids,
+                            fail_slot, drain_slots, at)
+
     # ---- assignment replay -------------------------------------------------
     # chronological events; ties follow the simulator's scheduling order
-    # (connects first, then joins/drains, then injections)
+    # (connects first, then joins/drains, then injections — and
+    # same-kind injections at identical timestamps interleave in
+    # declaration order via the compiled (at, seq) stamp)
     events: list[tuple] = []
     for i, c in enumerate(clients):
-        events.append((c.start_time, 0, "connect", i))
-        events.append((ends[i], 3, "end", i))
+        events.append((c.start_time, 0, i, "connect", i))
+        events.append((ends[i], 3, i, "end", i))
     for j, s in enumerate(specs):
         if s.join_at > 0.0:
-            events.append((s.join_at, 1, "join", j))
+            events.append((s.join_at, 1, j, "join", j))
         if s.drain_at is not None:
-            events.append((s.drain_at, 1, "drain", j))
+            events.append((s.drain_at, 1, j, "drain", j))
     for inj in exp.injections:
         if inj.kind == "server_fail":
-            events.append((inj.at, 2, "fail", col[inj.params["server_id"]]))
-    for at, pol in policy_changes:
-        events.append((at, 2, "policy", pol))
-    events.sort(key=lambda e: (e[0], e[1]))
+            events.append((inj.at, 2, inj.seq, "fail",
+                           col[inj.params["server_id"]]))
+    for at, seq, pol in policy_changes:
+        events.append((at, 2, seq, "policy", pol))
+    for at, seq, n in scale_changes:
+        events.append((at, 2, seq, "scale", n))
+    events.sort(key=lambda e: (e[0], e[1], e[2]))
 
     if isinstance(exp.policy, str):
         policy = exp.policy
@@ -258,8 +331,9 @@ def compile_experiment(exp: Experiment, dt: float = 0.005) -> VectorProgram:
     assignment: dict[int, int] = {}            # client idx -> server col
     seg_start: dict[int, float] = {}           # client idx -> segment start
     alive_cols: list[int] = [j for j, s in enumerate(specs)
-                             if s.join_at == 0.0]
+                             if s.join_at == 0.0 and not s.standby]
     drained: set[int] = set()
+    failed_cols: set[int] = set()
     refused = 0
 
     def slot_range(t0: float, t1: float) -> slice:
@@ -277,8 +351,19 @@ def compile_experiment(exp: Experiment, dt: float = 0.005) -> VectorProgram:
         else:
             rate_conn[sl, assignment[i]] += rates[i, sl]
 
+    def _rehome(i: int, t: float) -> None:
+        """Close the client's segment and reassign it through the
+        policy (the fallback keeps it pumping as request-routed)."""
+        close_segment(i, t)
+        replay.release(i, assignment.pop(i, None))
+        c = clients[i]
+        sid = replay.assign(i, c.schedule.rate(t), alive_cols)
+        seg_start[i] = t
+        if sid is not None:
+            assignment[i] = sid
+
     live: set[int] = set()
-    for t, _, kind, arg in events:
+    for t, _, _, kind, arg in events:
         if kind == "connect":
             i = arg
             c = clients[i]
@@ -310,23 +395,34 @@ def compile_experiment(exp: Experiment, dt: float = 0.005) -> VectorProgram:
         elif kind == "fail":
             j = arg
             drained.add(j)
+            failed_cols.add(j)
             if j in alive_cols:
                 alive_cols.remove(j)
-            # clients on the failed server re-home through the policy
+            # clients on the failed server re-home through the policy; a
+            # client no accepting server will take keeps pumping as
+            # request-routed (water-filled) traffic, like the sim's
+            # per-request choose() fallback
             for i in sorted(i for i, s in assignment.items() if s == j):
-                close_segment(i, t)
-                replay.release(i, assignment.pop(i, None))
-                c = clients[i]
-                sid = replay.assign(i, c.schedule.rate(t), alive_cols)
-                if sid is None:
-                    # no accepting server: the sim keeps such clients
-                    # pumping, routing per-request through the policy's
-                    # choose() fallback — model them as request-routed
-                    # (water-filled) traffic from here on
-                    seg_start[i] = t
-                    continue
-                assignment[i] = sid
-                seg_start[i] = t
+                _rehome(i, t)
+        elif kind == "scale":
+            # mirror Simulator.scale_to: the first n existing, non-failed
+            # servers (in server-id order) serve; the rest drain and hand
+            # their clients back through the policy
+            pool = [j for j in range(S)
+                    if j not in failed_cols
+                    and (specs[j].standby or specs[j].join_at <= t)]
+            pool.sort(key=lambda j: server_ids[j])
+            target = set(pool[:arg])
+            for j in pool:
+                if j in target and j not in alive_cols:
+                    alive_cols.append(j)
+                    drained.discard(j)
+                elif j not in target and j in alive_cols:
+                    alive_cols.remove(j)
+                    drained.add(j)
+                    for i in sorted(i for i, s_ in assignment.items()
+                                    if s_ == j):
+                        _rehome(i, t)
         elif kind == "policy":
             new_free = arg in FREE_POLICIES
             if new_free != free_mode:
@@ -338,6 +434,37 @@ def compile_experiment(exp: Experiment, dt: float = 0.005) -> VectorProgram:
     for i in list(live):
         close_segment(i, exp.duration)
 
+    # ---- admission control: Poisson thinning -------------------------------
+    # An admitted fraction f applied to a Poisson arrival stream IS a
+    # Poisson stream at f*rate (thinning) — statistically exact for the
+    # probabilistic controller; a token bucket's fluid limit is the rate
+    # cap min(offered, R), i.e. f = min(1, R/offered) per slot.
+    admit_arr = None
+    shed_rate = None
+    if admission_changes:
+        offered_total = rate_conn.sum(axis=1) + rate_free
+        admit_arr = np.ones(n_slots)
+        for at, _seq, p in sorted(admission_changes,
+                                  key=lambda c: (c[0], c[1])):
+            k = min(int(at / dt), n_slots)
+            a, r = p.get("admit"), p.get("rate")
+            if r is not None:
+                seg = offered_total[k:]
+                admit_arr[k:] = np.where(seg > 0.0,
+                                         np.minimum(1.0, r
+                                                    / np.maximum(seg, 1e-300)),
+                                         1.0)
+            elif a is None or a >= 1.0:
+                admit_arr[k:] = 1.0
+            else:
+                admit_arr[k:] = max(float(a), 0.0)
+        if np.all(admit_arr >= 1.0 - 1e-12):
+            admit_arr = None
+        else:
+            shed_rate = offered_total * (1.0 - admit_arr)
+            rate_conn = rate_conn * admit_arr[:, None]
+            rate_free = rate_free * admit_arr
+
     # ---- service laws ------------------------------------------------------
     service = exp.resolved_service()
     batched = getattr(service, "kind", "scalar") == "batched"
@@ -348,7 +475,8 @@ def compile_experiment(exp: Experiment, dt: float = 0.005) -> VectorProgram:
         fail_slot=fail_slot, rate_conn=rate_conn, rate_free=rate_free,
         work_mean=np.ones(S), work_var=np.zeros(S),
         noise_sigma=noise_sigma, refused_clients=refused,
-        unsupported=unsupported)
+        admit=admit_arr, shed_rate=shed_rate,
+        control_actions=control_actions, unsupported=unsupported)
     if batched:
         lengths = exp.resolved_lengths() or TokenLengths()
         (pm, pv), (nm, nv) = lengths.moments()
@@ -374,6 +502,136 @@ def compile_experiment(exp: Experiment, dt: float = 0.005) -> VectorProgram:
         prog.work_var = np.maximum(e2 * nf2 - prog.work_mean ** 2, 0.0)
         prog.profile = profile
     return prog
+
+
+def _apply_scale_action(active: np.ndarray, accepting: np.ndarray, k: int,
+                        n: int, specs, server_ids, fail_slot: np.ndarray,
+                        drain_slots, t: float) -> None:
+    """Write one ``set_scale`` action into the capacity schedules at slot
+    ``k``: the first ``n`` existing, non-failed servers (server-id order)
+    serve from here; the rest stop accepting (their residual backlog
+    still drains, matching ``server_drain`` semantics).  Failures and
+    still-future drain marks are re-asserted so a scale-out cannot
+    resurrect a dead server or erase a scheduled drain."""
+    n_slots = active.shape[0]
+    pool = [j for j in range(len(specs))
+            if not (fail_slot[j] != -1 and fail_slot[j] <= k)
+            and (specs[j].standby or specs[j].join_at <= t)]
+    pool.sort(key=lambda j: server_ids[j])
+    for j in pool[:n]:
+        active[k:, j] = 1.0
+        accepting[k:, j] = 1.0
+    for j in pool[n:]:
+        accepting[k:, j] = 0.0
+    for j in range(len(specs)):
+        fs = fail_slot[j]
+        if fs != -1 and fs < n_slots:
+            active[fs:, j] = 0.0
+            accepting[fs:, j] = 0.0
+    for kd, j in drain_slots:
+        if kd >= k:
+            accepting[kd:, j] = 0.0
+
+
+def _control_prepass(spec, offered: np.ndarray, active: np.ndarray,
+                     accepting: np.ndarray, speed: np.ndarray,
+                     workers: np.ndarray, w_mean: np.ndarray, specs,
+                     server_ids, fail_slot: np.ndarray, drain_slots,
+                     inj_admissions, inj_scales, dt: float,
+                     n_slots: int) -> tuple[list, list]:
+    """Replay the controller against the fluid backlog model.
+
+    Steps the total offered rate against fleet capacity slot by slot,
+    maintaining a global backlog ``U`` (work-seconds); at each control
+    interval it builds an ``Observation`` (util, queue depth, served
+    count — p99/slo_frac are NaN in the fluid world) and lets the policy
+    act, honoring cooldown and actuation lag.  Injected admission/scale
+    timelines are applied inside the stepping so the controller sees
+    their effects.  Returns the controller-emitted ``(t, seq, params)``
+    admission changes and ``(t, seq, n)`` scale changes; control seqs
+    start at 10**6, ordering them after compiled injections at identical
+    timestamps (the event backends schedule lagged actions the same way).
+    """
+    import heapq as _heapq
+    import itertools as _it
+
+    from repro.control import ControlLoop
+    from repro.control.policy import Observation
+
+    loop = ControlLoop(spec)
+    act2 = active.copy()
+    acc2 = accepting.copy()
+    ctrl_seq = _it.count(10 ** 6)
+    pending: list = []                 # (slot, seq, kind, payload)
+    for at, seq, p in inj_admissions:
+        _heapq.heappush(pending, (min(int(at / dt), n_slots), seq,
+                                  "set_admission", dict(p)))
+    for at, seq, n in inj_scales:
+        _heapq.heappush(pending, (min(int(at / dt), n_slots), seq,
+                                  "set_scale", (n, at)))
+    out_adm: list = []
+    out_scale: list = []
+    admit_p: Optional[float] = None    # probabilistic admit fraction
+    rate_cap: Optional[float] = None   # token-bucket rate cap
+    fleet_w = float(w_mean.mean()) if len(w_mean) else 1.0
+    U = 0.0                            # backlog, work-seconds
+    served_win = 0.0                   # served requests since last tick
+    next_tick = spec.interval
+    cap_w = workers * speed / np.maximum(w_mean, 1e-12)   # [T, S] req/s
+    for k in range(n_slots):
+        while pending and pending[0][0] <= k:
+            _, _, kind, payload = _heapq.heappop(pending)
+            if kind == "set_admission":
+                a, r = payload.get("admit"), payload.get("rate")
+                if r is not None:
+                    admit_p, rate_cap = None, float(r)
+                elif a is None or a >= 1.0:
+                    admit_p, rate_cap = None, None
+                else:
+                    admit_p, rate_cap = max(float(a), 0.0), None
+            else:
+                n, at = payload
+                _apply_scale_action(act2, acc2, k, n, specs, server_ids,
+                                    fail_slot, drain_slots, at)
+        off = float(offered[k])
+        if rate_cap is not None:
+            f = min(1.0, rate_cap / off) if off > 0.0 else 1.0
+        elif admit_p is not None:
+            f = admit_p
+        else:
+            f = 1.0
+        lam = off * f
+        cap = float((acc2[k] * cap_w[k]).sum())
+        serve = min(cap, lam + U / dt)
+        U = max(U + (lam - serve) * dt, 0.0)
+        served_win += serve * dt
+        t_end = (k + 1) * dt
+        while next_tick <= t_end + 1e-12:
+            nact = int(np.count_nonzero(acc2[min(k, n_slots - 1)]))
+            util = 1.0 if U > 1e-9 else (min(lam / cap, 1.0)
+                                         if cap > 0.0 else 1.0)
+            obs = Observation(t=next_tick, n=int(round(served_win)),
+                              qps=served_win / spec.interval,
+                              p99=float("nan"), mean=float("nan"),
+                              util=util, qdepth=U / max(fleet_w, 1e-12),
+                              slo_frac=float("nan"), n_active=max(nact, 1),
+                              admit=f)
+            served_win = 0.0
+            for kind, params in loop.tick(obs, next_tick):
+                due = next_tick + spec.lag
+                seq = next(ctrl_seq)
+                k_due = min(int(due / dt), n_slots)
+                if kind == "set_admission":
+                    out_adm.append((due, seq, dict(params)))
+                    _heapq.heappush(pending, (k_due, seq, "set_admission",
+                                              dict(params)))
+                elif kind == "set_scale":
+                    n = int(params["n"])
+                    out_scale.append((due, seq, n))
+                    _heapq.heappush(pending, (k_due, seq, "set_scale",
+                                              (n, due)))
+            next_tick += spec.interval
+    return out_adm, out_scale
 
 
 def _budget_stop(rate: np.ndarray, dt: float, budget: int) -> float:

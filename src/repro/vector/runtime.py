@@ -139,6 +139,8 @@ class VectorResult:
     occ_ivl: np.ndarray             # [n_ivls, S] occupancy
     qdepth_ivl: np.ndarray          # [n_ivls, S] queue depth at boundary
     tokens_ivl: Optional[np.ndarray] = None   # [n_ivls, S] tokens/sec
+    shed_ivl: Optional[np.ndarray] = None     # [n_ivls] admission-shed
+                                              # requests (fluid expectation)
 
 
 # ---------------------------------------------------------------------------
@@ -1070,13 +1072,25 @@ def _finish_cell(prog: VectorProgram, batched: bool, cell: dict,
                             n_ivls - 1 + 1e-9).astype(np.int64) \
         if completion.size else np.empty(0, np.int64)
 
+    # admission shedding (fluid expectation): per-interval shed counts
+    # ride the same reshape-sum as the served series, and sheds count
+    # into ``dropped`` so they are never silently missing from totals
+    if prog.shed_rate is not None:
+        shed_slot = np.zeros(pad_to)
+        shed_slot[:T] = prog.shed_rate * dt
+        shed_ivl = shed_slot.reshape(n_ivls, spi).sum(axis=1)
+        shed_total = float(shed_ivl.sum())
+    else:
+        shed_ivl = None
+        shed_total = 0.0
+
     return VectorResult(
         n=n, mean=mean, p50=float(p50), p95=float(p95), p99=float(p99),
-        dropped=int(round(drops)) + prog.refused_clients,
+        dropped=int(round(drops + shed_total)) + prog.refused_clients,
         interval=prog.interval, slo=prog.slo, server_ids=prog.server_ids,
         samples=lat, sample_ivl=sample_ivl, n_ivl=n_ivl,
         util_ivl=util_ivl, occ_ivl=occ_ivl, qdepth_ivl=qdepth_ivl,
-        tokens_ivl=tokens_ivl)
+        tokens_ivl=tokens_ivl, shed_ivl=shed_ivl)
 
 
 # ---------------------------------------------------------------------------
@@ -1107,6 +1121,17 @@ class VectorRuntime:
     @property
     def dropped(self) -> int:
         return self.result.dropped if self.result is not None else 0
+
+    @property
+    def shed(self) -> int:
+        r = self.result
+        if r is None or r.shed_ivl is None:
+            return 0
+        return int(round(float(r.shed_ivl.sum())))
+
+    @property
+    def control_log(self) -> list:
+        return self.program.control_actions
 
     def run(self):
         from repro.vector.telemetry import VectorTelemetry

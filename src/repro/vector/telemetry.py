@@ -55,7 +55,18 @@ class VectorTelemetry:
         return []
 
     def slo_frac(self) -> float:
-        return slo_violation_frac(self.result.samples, self.slo)
+        """Overall SLO-violation fraction.  Admission-shed requests are
+        violations by definition; the served fraction comes from the
+        bounded samples, weighted by the true served count."""
+        r = self.result
+        base = slo_violation_frac(r.samples, self.slo)
+        shed = float(r.shed_ivl.sum()) if r.shed_ivl is not None else 0.0
+        if shed <= 0.0 or self.slo is None:
+            return base
+        if r.n == 0:
+            return 1.0
+        f = 0.0 if base != base else base          # NaN -> no samples kept
+        return (f * r.n + shed) / (r.n + shed)
 
     # ---- interval series ---------------------------------------------------
     def series(self, cid=None) -> dict:
@@ -91,10 +102,18 @@ class VectorTelemetry:
         for ivl in range(len(r.n_ivl)):
             s = series.get(ivl) or Summary.empty()
             xs = self._ivl_samples(ivl)
+            shed_i = (float(r.shed_ivl[ivl]) if r.shed_ivl is not None
+                      else 0.0)
+            viol = slo_violation_frac(xs, self.slo)
+            if shed_i > 0.0 and self.slo is not None:
+                # fold sheds in, weighted by the interval's true served
+                # count (a 100%-shed interval reports 1.0, not NaN/0)
+                f = 0.0 if viol != viol else viol
+                viol = (f * s.n + shed_i) / (s.n + shed_i)
             frames.append(IntervalFrame(
                 t=ivl, n=s.n, qps=s.n / self.interval, mean=s.mean,
                 p50=s.p50, p95=s.p95, p99=s.p99,
-                slo_violation_frac=slo_violation_frac(xs, self.slo),
+                slo_violation_frac=viol, n_shed=int(round(shed_i)),
                 util={sid: float(r.util_ivl[ivl, j])
                       for j, sid in enumerate(sids)},
                 qdepth={sid: int(round(float(r.qdepth_ivl[ivl, j])))

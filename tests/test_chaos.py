@@ -1,0 +1,155 @@
+"""Chaos scenario regressions: retry storms, correlated failure, gray
+failure — the failure modes the resilience stack exists for, pinned as
+deterministic contrasts rather than one-off demos.
+"""
+import pytest
+
+from repro.core.runtime import (EngineRuntime, VirtualClock, run_scenario)
+from repro.scenarios import get
+from repro.scenarios.backends import build_stub_engines
+
+
+def _run_engine(sc, rep=0):
+    exp = sc.compile()
+    clock = VirtualClock()
+    engines, factory = build_stub_engines(exp, clock, exp.seed)
+    rt = EngineRuntime.from_experiment(exp, engines,
+                                       engine_factory=factory, rep=rep,
+                                       clock=clock, sleep=clock.sleep)
+    rt.run()
+    return rt
+
+
+# ---------------------------------------------------------------------------
+# Retry storm: metastable congestion vs jittered backoff
+# ---------------------------------------------------------------------------
+def test_retry_storm_naive_congests_backoff_recovers():
+    """The canonical metastability contrast: naive immediate retries
+    amplify a transient slowdown into sustained congestion (wasted
+    zombie work + retry load), while capped/jittered/budgeted backoff
+    rides it out.  Pinned on goodput, not just latency."""
+    naive = run_scenario(get("retry-storm", seed=3, mode="naive"), "sim")
+    backoff = run_scenario(get("retry-storm", seed=3, mode="backoff"),
+                           "sim")
+    assert naive.timeouts > 0 and backoff.timeouts > 0
+    # the naive storm issues far more retries and times out more
+    assert naive.retries > 5 * backoff.retries
+    assert naive.timeouts > backoff.timeouts
+    # goodput: backoff serves substantially more of the offered load
+    assert backoff.telemetry.overall().n > 1.5 * naive.telemetry.overall().n
+    # the budget actually bounds the retry fraction
+    served_plus_lost = backoff.telemetry.overall().n + backoff.dropped
+    assert backoff.retries < 0.2 * served_plus_lost
+
+
+def test_retry_storm_is_deterministic_per_rep():
+    a = run_scenario(get("retry-storm", seed=5, mode="naive"), "sim")
+    b = run_scenario(get("retry-storm", seed=5, mode="naive"), "sim")
+    assert (a.timeouts, a.retries) == (b.timeouts, b.retries)
+    assert a.recorder.all == b.recorder.all
+    # repetitions draw independent jitter from the (0xB0FF, seed, rep)
+    # domain stream without touching arrival determinism
+    c = run_scenario(get("retry-storm", seed=5, mode="backoff"), "sim",
+                     rep=0)
+    d = run_scenario(get("retry-storm", seed=5, mode="backoff"), "sim",
+                     rep=1)
+    assert c.recorder.all != d.recorder.all
+
+
+def test_retry_storm_on_engine_matches_shape():
+    """The storm reproduces on the wall-clock engine: same mechanism,
+    same ordering of the naive-vs-backoff contrast."""
+    dur = 15.0
+    naive = _run_engine(get("retry-storm", seed=3, mode="naive",
+                            duration=dur))
+    backoff = _run_engine(get("retry-storm", seed=3, mode="backoff",
+                              duration=dur))
+    assert naive.timeouts > 0
+    assert naive.retries > 5 * backoff.retries
+    assert backoff.telemetry.overall().n > naive.telemetry.overall().n
+
+
+# ---------------------------------------------------------------------------
+# Correlated failure
+# ---------------------------------------------------------------------------
+def test_correlated_failure_lowers_to_ordered_same_t_injections():
+    exp = get("correlated-failure", seed=3).compile()
+    fails = [i for i in exp.injections if i.kind == "server_fail"]
+    assert len(fails) == 2
+    assert fails[0].at == fails[1].at                   # same instant
+    assert fails[0].seq < fails[1].seq                  # declaration order
+    assert [i.params["server_id"] for i in fails] == [2, 3]
+
+
+@pytest.mark.parametrize("backend", ["sim", "engine", "vector"])
+def test_correlated_failure_deterministic_on_every_backend(backend):
+    dur = 15.0
+
+    def once(rep=0):
+        sc = get("correlated-failure", seed=4, duration=dur)
+        if backend == "engine":
+            return _run_engine(sc, rep=rep)
+        return run_scenario(sc, backend, rep=rep)
+
+    a, b = once(), once()
+    sa, sb = a.telemetry.overall(), b.telemetry.overall()
+    assert sa.n > 0
+    assert (sa.n, sa.mean, sa.p99, a.dropped) == \
+        (sb.n, sb.mean, sb.p99, b.dropped)
+    if backend != "vector":
+        assert a.recorder.all == b.recorder.all
+        # reps are independent streams, not replays
+        c = once(rep=1)
+        assert a.recorder.all != c.recorder.all
+
+
+def test_correlated_failure_loses_capacity_then_recovers():
+    rt = run_scenario(get("correlated-failure", seed=2, qps=2000.0),
+                      "sim")
+    sim = rt.sim
+    assert sim.servers[2].failed and sim.servers[3].failed
+    assert rt.dropped > 0                       # in-flight work lost
+    assert rt.recorder.failures.get("failed", 0) > 0   # tagged, not silent
+    # replacements carry load after the recovery joins
+    assert sim.servers[4].total_served > 0
+    assert sim.servers[5].total_served > 0
+
+
+# ---------------------------------------------------------------------------
+# Gray failure
+# ---------------------------------------------------------------------------
+def test_gray_failure_breaker_routes_around_slow_server():
+    plain = run_scenario(get("gray-failure", seed=3), "sim")
+    guarded = run_scenario(get("gray-failure", seed=3, breaker=True),
+                           "sim")
+    p99_plain = plain.telemetry.overall().p99
+    p99_guarded = guarded.telemetry.overall().p99
+    # the gray server poisons the tail through round-robin; timeout +
+    # breaker detects it client-side and routes around
+    assert p99_plain > 5 * p99_guarded
+    assert guarded.timeouts > 0                 # detection happened
+    # nearly all load still served (breaker fails over, not closed)
+    assert guarded.telemetry.overall().n > 0.95 * plain.telemetry.overall().n
+
+
+@pytest.mark.parametrize("backend", ["sim", "engine"])
+def test_gray_failure_deterministic(backend):
+    def once():
+        sc = get("gray-failure", seed=7, duration=15.0, breaker=True)
+        return _run_engine(sc) if backend == "engine" \
+            else run_scenario(sc, "sim")
+
+    a, b = once(), once()
+    assert a.recorder.all == b.recorder.all
+    assert (a.timeouts, a.retries) == (b.timeouts, b.retries)
+
+
+def test_gray_failure_runs_on_vector_without_breaker():
+    """The slowdown itself is a fluid-supported injection; the breaker
+    variant is what the capability matrix routes to event backends."""
+    sc = get("gray-failure", seed=3, duration=15.0)
+    vec = run_scenario(sc, "vector")
+    assert not vec.unsupported
+    sim = run_scenario(sc, "sim")
+    assert vec.telemetry.overall().n == \
+        pytest.approx(sim.telemetry.overall().n, rel=0.05)

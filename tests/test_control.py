@@ -1,0 +1,439 @@
+"""Closed-loop control plane + client resilience stack.
+
+Covers the ``repro.control`` primitives (policies, specs, retry
+policy/budget, admission controller, circuit breaker), disposition
+accounting in the SLO-violation fraction, same-timestamp injection
+ordering (the ``(at, seq)`` tie-break), controller runs on all three
+backends, exact sim-vs-engine shed parity for the RNG-free token
+bucket, sim-vs-vector statistical equivalence for fluid shed/scale,
+and serial-vs-process sweep determinism with a control axis.
+"""
+import math
+
+import numpy as np
+import pytest
+
+from repro.control import (AdmissionController, AdmissionShedder,
+                           BreakerSpec, CircuitBreaker, CONTROLLERS,
+                           ControlSpec, Observation, RetryBudget,
+                           RetryPolicy, ThresholdAutoscaler)
+from repro.control.loop import ControlLoop
+from repro.core.harness import ServerSpec
+from repro.core.runtime import (EngineRuntime, SimulatorRuntime,
+                                VirtualClock, run_scenario)
+from repro.core.scenario import (ClientArrival, Scenario, SetAdmission,
+                                 SetScale)
+from repro.scenarios import get
+from repro.scenarios.backends import build_stub_engines
+
+
+def _obs(**kw):
+    base = dict(t=1.0, n=100, qps=100.0, p99=0.01, mean=0.005,
+                util=0.5, qdepth=0.0, slo_frac=0.0, n_active=2,
+                admit=1.0)
+    base.update(kw)
+    return Observation(**base)
+
+
+# ---------------------------------------------------------------------------
+# Policy + spec primitives
+# ---------------------------------------------------------------------------
+def test_control_spec_registry_roundtrip():
+    spec = ControlSpec.make("threshold_autoscaler", interval=2.0,
+                            lag=1.0, cooldown=3.0, high=0.9, low=0.3)
+    assert spec.interval == 2.0 and spec.lag == 1.0
+    policy = spec.build()
+    assert isinstance(policy, ThresholdAutoscaler)
+    assert policy.high == 0.9 and policy.low == 0.3
+    assert hash(spec) == hash(ControlSpec.make(
+        "threshold_autoscaler", interval=2.0, lag=1.0, cooldown=3.0,
+        low=0.3, high=0.9))          # kwargs order doesn't matter
+    with pytest.raises(ValueError):
+        ControlSpec.make("no-such-controller")
+    assert set(CONTROLLERS) >= {"threshold_autoscaler",
+                                "admission_shedder"}
+
+
+def test_threshold_autoscaler_scales_on_thresholds():
+    p = ThresholdAutoscaler(high=0.8, low=0.3, min_servers=1,
+                            max_servers=4)
+    assert p.update(_obs(util=0.9, n_active=2)) == \
+        [("set_scale", {"n": 3})]
+    assert p.update(_obs(util=0.2, n_active=2)) == \
+        [("set_scale", {"n": 1})]
+    assert p.update(_obs(util=0.5, n_active=2)) == []
+    # clamps at the pool bounds
+    assert p.update(_obs(util=0.9, n_active=4)) == []
+    assert p.update(_obs(util=0.2, n_active=1)) == []
+    # NaN metric (fluid p99-keyed case): must no-op, not compare
+    q = ThresholdAutoscaler(high=0.1, low=0.0, metric="p99")
+    assert q.update(_obs(p99=float("nan"))) == []
+
+
+def test_admission_shedder_is_aimd():
+    p = AdmissionShedder(target_qdepth=4.0, decrease=0.5, increase=0.2,
+                         floor=0.1)
+    acts = p.update(_obs(qdepth=20.0, n_active=2, admit=1.0))
+    assert acts == [("set_admission", {"admit": 0.5})]
+    acts = p.update(_obs(qdepth=20.0, n_active=2, admit=0.5))
+    assert acts == [("set_admission", {"admit": 0.25})]
+    # floors out
+    acts = p.update(_obs(qdepth=20.0, n_active=2, admit=0.11))
+    assert acts == [("set_admission", {"admit": 0.1})]
+    # additive recovery while healthy
+    acts = p.update(_obs(qdepth=0.0, n_active=2, admit=0.5))
+    assert acts == [("set_admission", {"admit": 0.7})]
+    # healthy at full admit: no action
+    assert p.update(_obs(qdepth=0.0, n_active=2, admit=1.0)) == []
+
+
+def test_control_loop_enforces_cooldown():
+    spec = ControlSpec.make("threshold_autoscaler", cooldown=5.0,
+                            high=0.8, low=0.3)
+    loop = ControlLoop(spec)
+    hot = _obs(util=0.95, n_active=1)
+    assert loop.tick(hot, 1.0) == [("set_scale", {"n": 2})]
+    assert loop.tick(hot, 3.0) == []        # inside the cooldown
+    assert loop.tick(hot, 6.5) == [("set_scale", {"n": 2})]
+
+
+# ---------------------------------------------------------------------------
+# Resilience primitives
+# ---------------------------------------------------------------------------
+def test_retry_policy_delay_bounds():
+    rng = np.random.default_rng(0)
+    none = RetryPolicy(backoff_base=0.1, backoff_cap=1.0, jitter="none")
+    assert none.delay(1, 0.0, rng) == pytest.approx(0.1)
+    assert none.delay(3, 0.0, rng) == pytest.approx(0.4)
+    assert none.delay(10, 0.0, rng) == pytest.approx(1.0)   # capped
+    full = RetryPolicy(backoff_base=0.1, backoff_cap=1.0, jitter="full")
+    for a in (1, 2, 5):
+        d = full.delay(a, 0.0, rng)
+        assert 0.0 <= d <= min(1.0, 0.1 * 2 ** (a - 1))
+    dec = RetryPolicy(backoff_base=0.05, backoff_cap=2.0,
+                      jitter="decorrelated")
+    prev = 0.0
+    for _ in range(20):
+        d = dec.delay(1, prev, rng)
+        assert 0.05 <= d <= min(2.0, 3.0 * max(prev, 0.05))
+        prev = d
+    with pytest.raises(ValueError):
+        RetryPolicy(jitter="bogus")
+    with pytest.raises(ValueError):
+        RetryPolicy(timeout=0.0)
+
+
+def test_retry_budget_caps_retry_fraction():
+    b = RetryBudget(ratio=0.1, burst=2)
+    assert b.allow()                        # burst lets short runs retry
+    for _ in range(100):
+        b.note_primary()
+    allowed = 0
+    while b.allow():
+        b.note_retry()
+        allowed += 1
+    assert allowed == 12                    # 0.1 * 100 + 2
+
+
+def test_admission_controller_probabilistic_and_bucket():
+    rng = np.random.default_rng(7)
+    half = AdmissionController(admit=0.5)
+    outs = [half.allow(t * 0.01, rng) for t in range(2000)]
+    assert 0.4 < np.mean(outs) < 0.6
+    # token bucket: RNG-free, rate-limited
+    tb = AdmissionController(rate=10.0, burst=1.0)
+    admitted = sum(tb.allow(t * 0.01, rng) for t in range(1000))
+    assert admitted == pytest.approx(100, abs=6)    # ~10/s over 10s
+    with pytest.raises(ValueError):
+        AdmissionController()
+
+
+def test_circuit_breaker_state_machine():
+    brk = CircuitBreaker(BreakerSpec(window=10, threshold=0.5,
+                                     cooldown=2.0, min_samples=4))
+    for _ in range(4):
+        brk.record(0, False, now=1.0)
+    assert brk.state(0) == CircuitBreaker.OPEN
+    assert not brk.allow(0, 1.5)            # still cooling down
+    assert brk.allow(0, 3.5)                # the half-open probe
+    assert brk.state(0) == CircuitBreaker.HALF_OPEN
+    assert not brk.allow(0, 3.6)            # probe already in flight
+    brk.record(0, False, now=3.8)           # probe failed: re-open
+    assert brk.state(0) == CircuitBreaker.OPEN
+    assert brk.allow(0, 6.0)
+    brk.record(0, True, now=6.1)            # probe succeeded: close
+    assert brk.state(0) == CircuitBreaker.CLOSED
+    assert brk.allow(0, 6.2)
+    assert brk.state(1) == CircuitBreaker.CLOSED    # per-server state
+
+
+# ---------------------------------------------------------------------------
+# Disposition accounting (satellite 1)
+# ---------------------------------------------------------------------------
+def _shed_everything(duration=6.0, seed=3):
+    return Scenario(
+        name="shed-all", duration=duration, seed=seed, slo=0.05,
+        servers=(ServerSpec(0),),
+        events=[ClientArrival(0.0, 200.0, count=1),
+                SetAdmission(0.0, admit=0.0)])
+
+
+def test_fully_shed_interval_reports_slo_frac_one():
+    """A 100%-shed interval is 100% SLO violation — not NaN, not 0."""
+    rt = run_scenario(_shed_everything(), "sim")
+    assert rt.telemetry.overall().n == 0
+    assert rt.shed > 0 and rt.dropped == rt.shed
+    frames = [f for f in rt.telemetry.frames() if f.n + f.n_shed > 0]
+    assert frames
+    for f in frames:
+        assert f.n == 0 and f.n_shed > 0
+        assert f.slo_violation_frac == 1.0
+    from repro.sweep.executor import _slo_frac
+    assert _slo_frac(rt, 0.05) == 1.0
+
+
+def test_partial_shed_mixes_into_slo_frac():
+    sc = _shed_everything()
+    sc.events[1] = SetAdmission(0.0, admit=0.5)
+    rt = run_scenario(sc, "sim")
+    assert rt.shed > 0 and rt.telemetry.overall().n > 0
+    from repro.sweep.executor import _slo_frac
+    frac = _slo_frac(rt, 0.05)
+    # served requests are fast (tiny load), so slo_frac ~ shed share
+    shed_share = rt.shed / (rt.shed + rt.telemetry.overall().n)
+    assert frac == pytest.approx(shed_share, abs=0.02)
+
+
+def test_timeouts_count_as_violations_and_latency_not_polluted():
+    """Timed-out requests surface in slo_frac but never contribute a
+    bogus latency sample (no silent drops, no fake numbers)."""
+    sc = Scenario(
+        name="slow-timeout", duration=8.0, seed=11, slo=0.05,
+        retry=RetryPolicy(timeout=0.004, max_retries=0),
+        servers=(ServerSpec(0),),
+        events=[ClientArrival(0.0, 400.0, count=2)])
+    rt = run_scenario(sc, "sim")
+    assert rt.timeouts > 0
+    assert rt.recorder.failed_total() == rt.timeouts
+    # every recorded latency is a genuinely served request
+    n_frames = sum(f.n for f in rt.telemetry.frames())
+    assert n_frames == len(rt.recorder.all)
+    from repro.sweep.executor import _slo_frac
+    assert _slo_frac(rt, sc.slo) > 0.0
+
+
+# ---------------------------------------------------------------------------
+# Same-timestamp injection ordering (satellite 2)
+# ---------------------------------------------------------------------------
+def _same_t_scenario(order, duration=6.0):
+    """Two admission injections at the SAME instant; declaration order
+    decides which wins."""
+    evs = [SetAdmission(2.0, admit=0.0), SetAdmission(2.0, admit=1.0)]
+    if order == "open-last":
+        a, b = evs
+    else:
+        b, a = evs
+    return Scenario(
+        name="tie", duration=duration, seed=5,
+        servers=(ServerSpec(0),),
+        events=[ClientArrival(0.0, 300.0, count=1), a, b])
+
+
+def _run_engine(sc):
+    exp = sc.compile()
+    clock = VirtualClock()
+    engines, factory = build_stub_engines(exp, clock, exp.seed)
+    rt = EngineRuntime.from_experiment(exp, engines,
+                                       engine_factory=factory,
+                                       clock=clock, sleep=clock.sleep)
+    rt.run()
+    return rt
+
+
+def test_same_timestamp_injections_apply_in_declaration_order():
+    sc = _same_t_scenario("open-last")
+    inj = sc.compile().injections
+    ties = [i for i in inj if i.at == 2.0]
+    assert [i.seq for i in ties] == sorted(i.seq for i in ties)
+    rt_open = run_scenario(sc, "sim")
+    rt_shut = run_scenario(_same_t_scenario("shut-last"), "sim")
+    assert rt_open.shed == 0                # admit=1.0 declared last wins
+    assert rt_shut.shed > 0                 # admit=0.0 declared last wins
+
+
+def test_same_timestamp_order_parity_sim_vs_engine():
+    for order in ("open-last", "shut-last"):
+        sim = run_scenario(_same_t_scenario(order), "sim")
+        eng = _run_engine(_same_t_scenario(order))
+        assert sim.shed == eng.shed, order
+        assert sim.telemetry.overall().n == eng.telemetry.overall().n
+
+
+# ---------------------------------------------------------------------------
+# Exact shed parity: RNG-free token bucket on both event backends
+# ---------------------------------------------------------------------------
+def test_token_bucket_shed_parity_sim_vs_engine():
+    sc = Scenario(
+        name="bucket", duration=6.0, seed=5,
+        servers=(ServerSpec(0),),
+        events=[ClientArrival(0.0, 50.0, count=1),
+                SetAdmission(1.0, rate=20.0, burst=5.0)])
+    sim = run_scenario(sc, "sim")
+    eng = _run_engine(sc)
+    assert sim.shed > 0
+    assert (sim.shed, sim.telemetry.overall().n) == \
+        (eng.shed, eng.telemetry.overall().n)
+
+
+# ---------------------------------------------------------------------------
+# Closed-loop control on all three backends
+# ---------------------------------------------------------------------------
+def test_autoscaler_runs_closed_loop_on_sim():
+    rt = run_scenario(get("flash-crowd-autoscale", seed=3), "sim")
+    kinds = {k for _, k, _ in rt.control_log}
+    assert "set_scale" in kinds
+    ups = [p["n"] for _, k, p in rt.control_log if k == "set_scale"]
+    assert max(ups) > 2                     # scaled beyond the base fleet
+    # determinism: same seed, same action trace
+    rt2 = run_scenario(get("flash-crowd-autoscale", seed=3), "sim")
+    assert rt.control_log == rt2.control_log
+    assert rt.recorder.all == rt2.recorder.all
+
+
+def test_autoscaler_runs_closed_loop_on_engine():
+    sc = get("flash-crowd-autoscale", seed=3, duration=30.0)
+    rt = _run_engine(sc)
+    kinds = {k for _, k, _ in rt.control_log}
+    assert "set_scale" in kinds
+    sim = run_scenario(get("flash-crowd-autoscale", seed=3,
+                           duration=30.0), "sim")
+    # closed-loop trajectories amplify tiny telemetry differences, so
+    # exact traces can diverge across backends — but both loops must
+    # react to the same burst: first scale-out within a couple of
+    # ticks, and both drain back toward the base fleet afterward
+    assert abs(rt.control_log[0][0] - sim.control_log[0][0]) <= 2.0
+    assert rt.control_log[0][1:] == sim.control_log[0][1:]
+    assert rt.control_log[-1][2]["n"] <= 3     # scaled back in
+    # determinism on the engine itself: same seed, same trace
+    assert _run_engine(sc).control_log == rt.control_log
+
+
+def test_autoscaler_runs_closed_loop_on_vector():
+    sc = get("flash-crowd-autoscale", seed=3)
+    vec = run_scenario(sc, "vector")
+    assert not vec.unsupported
+    kinds = {k for _, k, _ in vec.control_log}
+    assert "set_scale" in kinds
+    sim = run_scenario(sc, "sim")
+    # fluid-limit equivalence: served mass within a few percent
+    assert vec.telemetry.overall().n == \
+        pytest.approx(sim.telemetry.overall().n, rel=0.05)
+
+
+def test_shedder_closed_loop_on_sim_and_vector():
+    sc = get("flash-crowd-autoscale", seed=3,
+             controller="admission_shedder", peak_qps=4000.0)
+    sim = run_scenario(sc, "sim")
+    assert sim.shed > 0
+    assert any(k == "set_admission" for _, k, _ in sim.control_log)
+    vec = run_scenario(sc, "vector")
+    assert not vec.unsupported
+    assert vec.shed > 0
+    # statistical, not bit, equivalence: fluid thinning vs per-request
+    # Bernoulli draws
+    assert vec.shed == pytest.approx(sim.shed, rel=0.35)
+
+
+def test_fluid_shed_statistical_equivalence():
+    """Open-loop probabilistic shedding: the vector thinning must match
+    the event-backend Bernoulli shed in expectation."""
+    sc = Scenario(
+        name="thin", duration=20.0, seed=7, slo=0.1,
+        servers=(ServerSpec(0, workers=2),),
+        events=[ClientArrival(0.0, 300.0, count=2),
+                SetAdmission(5.0, admit=0.6)])
+    sim = run_scenario(sc, "sim")
+    vec = run_scenario(sc, "vector")
+    assert not vec.unsupported
+    assert sim.shed > 100
+    assert vec.shed == pytest.approx(sim.shed, rel=0.1)
+    assert vec.telemetry.overall().n == \
+        pytest.approx(sim.telemetry.overall().n, rel=0.05)
+
+
+def test_fluid_scale_statistical_equivalence():
+    """Open-loop set_scale on a standby pool: fluid capacity tracks the
+    event backend's served mass."""
+    servers = (ServerSpec(0), ServerSpec(1, standby=True),
+               ServerSpec(2, standby=True))
+    sc = Scenario(
+        name="scale", duration=18.0, seed=7, policy="jsq",
+        servers=servers,
+        events=[ClientArrival(0.0, 500.0, count=2),
+                SetScale(6.0, 3), SetScale(12.0, 1)])
+    sim = run_scenario(sc, "sim")
+    vec = run_scenario(sc, "vector")
+    assert not vec.unsupported
+    assert sim.telemetry.overall().n > 0
+    assert vec.telemetry.overall().n == \
+        pytest.approx(sim.telemetry.overall().n, rel=0.05)
+    # mid-run the standby servers actually carry load on both backends
+    sim_util = [f.util for f in sim.telemetry.frames() if f.t == 9]
+    assert sim_util and len(sim_util[0]) >= 3
+
+
+# ---------------------------------------------------------------------------
+# Capability matrix (satellite 3)
+# ---------------------------------------------------------------------------
+def test_capability_matrix_gates_resilience_features():
+    from repro.analysis.check.capability import unsupported_on
+    exp = Scenario(
+        name="caps", duration=5.0, servers=(ServerSpec(0),),
+        retry=RetryPolicy(timeout=0.5, max_retries=1),
+        breaker=BreakerSpec(),
+        events=[ClientArrival(0.0, 10.0, count=1),
+                SetAdmission(1.0, admit=0.5)]).compile()
+    assert unsupported_on(exp, "sim") == []
+    assert unsupported_on(exp, "engine") == []
+    vec_missing = {f for f, _ in unsupported_on(exp, "vector")}
+    assert vec_missing == {"retry", "breaker"}
+    ctrl = Scenario(
+        name="caps2", duration=5.0, servers=(ServerSpec(0),),
+        control=ControlSpec.make("admission_shedder"),
+        events=[ClientArrival(0.0, 10.0, count=1)]).compile()
+    for backend in ("sim", "engine", "vector"):
+        assert unsupported_on(ctrl, backend) == []
+
+
+def test_vector_surfaces_retry_as_unsupported_not_silent():
+    sc = get("retry-storm", seed=3, duration=8.0)
+    vec = run_scenario(sc, "vector")
+    assert any(i.kind == "set_retry" for i in vec.unsupported)
+
+
+# ---------------------------------------------------------------------------
+# Sweepability (control as a first-class axis) + executor determinism
+# ---------------------------------------------------------------------------
+def _control_factory(ctx):
+    return get("flash-crowd-autoscale", seed=ctx.seed, duration=15.0,
+               controller=ctx.params["controller"],
+               cooldown=ctx.params["cooldown"])
+
+
+def test_control_axis_sweeps_identically_serial_and_process():
+    from repro.sweep import Sweep, run_sweep
+    sweep = Sweep(
+        name="control-axis", factory=_control_factory,
+        axes=(("controller", ("threshold_autoscaler",
+                              "admission_shedder")),
+              ("cooldown", (2.0, 6.0))),
+        reps=2, metrics=("n", "p99", "slo_frac", "dropped", "shed",
+                         "timeouts", "retries"))
+    serial = run_sweep(sweep, executor="serial", progress=None)
+    proc = run_sweep(sweep, executor="process", workers=2,
+                     progress=None)
+    assert all(r.ok for r in serial.rows)
+    assert [r.metrics for r in serial.rows] == \
+        [r.metrics for r in proc.rows]
+    assert [(r.params, r.rep, r.seed) for r in serial.rows] == \
+        [(r.params, r.rep, r.seed) for r in proc.rows]

@@ -203,12 +203,21 @@ def test_soft_quantiles_reuses_exact_rank_plan(monkeypatch):
 # ---------------------------------------------------------------------------
 _AGREE_DUR = {"steady": 8.0, "flash-crowd": 9.0, "diurnal-fleet": 10.0,
               "server-failure": 8.0, "elastic-autoscale": 10.0,
-              "batched-serving": 6.0, "churn-storm": 8.0}
+              "batched-serving": 6.0, "churn-storm": 8.0,
+              "retry-storm": 9.0, "correlated-failure": 10.0,
+              "gray-failure": 8.0, "flash-crowd-autoscale": 12.0}
+#: extra overrides: agreement probes the smoothing, so scenarios that
+#: deliberately saturate run at a sub-saturating operating point here
+#: (the soft censoring model diverges under sustained rho>1 — that
+#: regime is covered by the chaos/bench suites on the exact runtime)
+_AGREE_KW = {"flash-crowd-autoscale": {"peak_qps": 2000.0}}
 #: relative quantile deviation budget; measured worst case is 6.1%
-#: (flash-crowd p99), the rest sit below 4%
+#: (flash-crowd p99 and flash-crowd-autoscale p99), the rest sit
+#: below 4%
 _AGREE_RTOL = 0.12
 
-_HEAVY = ("diurnal-fleet", "elastic-autoscale", "churn-storm")
+_HEAVY = ("diurnal-fleet", "elastic-autoscale", "churn-storm",
+          "correlated-failure", "flash-crowd-autoscale")
 
 
 def _agreement_params():
@@ -223,7 +232,8 @@ def test_soft_hard_forward_agreement(scenario):
     percent of the exact runtime — SAME draws, so the sample counts are
     identical and only the smoothing can move the quantiles."""
     from repro.scenarios import get
-    exp = get(scenario, duration=_AGREE_DUR[scenario], seed=3).compile()
+    exp = get(scenario, duration=_AGREE_DUR[scenario], seed=3,
+              **_AGREE_KW.get(scenario, {})).compile()
     prog = compile_experiment(exp)
     seeds = [(spawn_seed(3, 0, 0), 0)]
     hard = run_cells([prog], seeds, VectorConfig(backend="jax"))[0]

@@ -24,7 +24,9 @@ CANONICAL = names()
 def test_registry_has_the_canonical_scenarios():
     assert set(CANONICAL) == {"steady", "flash-crowd", "diurnal-fleet",
                               "server-failure", "elastic-autoscale",
-                              "churn-storm", "batched-serving"}
+                              "churn-storm", "batched-serving",
+                              "retry-storm", "correlated-failure",
+                              "gray-failure", "flash-crowd-autoscale"}
 
 
 @pytest.mark.parametrize("name", CANONICAL)
